@@ -1,0 +1,23 @@
+"""Paper Figure 5b: calibration sample-count sensitivity (SLiM is robust to
+small calibration sets — a few samples suffice)."""
+from benchmarks.common import Table, compress_with, eval_ppl, trained_model
+from repro.core.pipeline import CompressionConfig
+
+
+def run(table: Table):
+    cfg, dcfg, params = trained_model()
+    table.add("dense", ppl=round(eval_ppl(params, cfg, dcfg), 3))
+    for n in [1, 2, 4, 8, 16]:
+        ccfg = CompressionConfig(quantizer="slim", pruner="wanda", adapter="slim", rank=24)
+        cp, _ = compress_with(params, cfg, dcfg, ccfg, n_calib=n)
+        table.add(f"calib_{n}", ppl=round(eval_ppl(cp, cfg, dcfg), 3), n_samples=n)
+
+
+def main():
+    t = Table("fig5b_calib")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 21: wall-clock compression cost by method and layer size —
+plus our beyond-paper randomized-SVD variant (EXPERIMENTS §Perf, compression
+cost iteration)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table
+from repro.core import CalibStats, CompressionConfig, compress_matrix
+
+
+def run(table: Table):
+    rng = np.random.default_rng(0)
+    for d in [256, 512, 1024]:
+        w = jnp.asarray(rng.normal(0, 0.05, (d, d)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1, (256, d)), jnp.float32)
+        stats = CalibStats.init(d, with_hessian=True).update(x)
+        methods = [
+            ("magnitude+absmax", CompressionConfig(quantizer="absmax", pruner="magnitude", adapter="none")),
+            ("wanda+slim_quant", CompressionConfig(quantizer="slim", pruner="wanda", adapter="none")),
+            ("sparsegpt+optq", CompressionConfig(quantizer="optq", pruner="sparsegpt", adapter="none")),
+            ("slim_full_exact_svd", CompressionConfig(quantizer="slim", pruner="wanda", adapter="slim")),
+            ("slim_full_randomized_svd", CompressionConfig(quantizer="slim", pruner="wanda", adapter="slim", svd_method="randomized")),
+        ]
+        for label, ccfg in methods:
+            t0 = time.time()
+            compress_matrix(w, stats, ccfg)
+            dt = time.time() - t0
+            table.add(f"d{d}/{label}", dt * 1e6, seconds=round(dt, 3))
+
+
+def main():
+    t = Table("table21_compression_cost")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

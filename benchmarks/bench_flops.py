@@ -1,0 +1,37 @@
+"""Paper Table 20 (Eq. 13): inference FLOP-reduction ratios per arch.
+
+TPU adaptation (DESIGN.md §4): with no sparse MXU, 2:4 does NOT halve matmul
+FLOPs on TPU — we report the paper's GPU-semantics column (Eq. 13, sparsity
+halves FLOPs) AND the TPU column (dense compute, adapters add FLOPs, the win
+is bytes) side by side.
+"""
+from benchmarks.common import Table
+from repro.configs import ASSIGNED, get_config
+
+
+def eq13(cfg, rank_ratio=0.1, sparsity=0.5, sparse_flops_count: bool = True):
+    n_active_dense = 1.0  # normalized block matmul flops
+    base = (1 - sparsity) if sparse_flops_count else 1.0
+    adapters = 2 * rank_ratio
+    return n_active_dense / (base + adapters)
+
+
+def run(table: Table):
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        table.add(
+            f"{arch}",
+            gpu_flop_reduction_sparse=round(eq13(cfg, 0.0), 3),
+            gpu_flop_reduction_slim=round(eq13(cfg, 0.1), 3),
+            tpu_flop_reduction_slim=round(eq13(cfg, 0.1, sparse_flops_count=False), 3),
+        )
+
+
+def main():
+    t = Table("table20_flops")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel-level microbenchmark: interpret-mode correctness timing is not a
+TPU wall-clock (documented) — what this table contributes is the exact HBM
+byte audit per kernel input layout (the quantity the roofline speedup model
+consumes) plus XLA-path timings of the same math on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Table, timed
+from repro.core.compressed import SlimLinear, slim_linear_apply, build_slim_linear
+from repro.core.packing import pack_dense_24, pack_int4
+from repro.core.pruning import nm_mask
+
+
+def run(table: Table):
+    rng = np.random.default_rng(0)
+    m, k, n, r = 64, 1024, 1024, 104
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(0, 0.05, (k, n)), jnp.float32)
+    codes = jnp.clip(jnp.round(w / 0.2 * 8), -7, 7).astype(jnp.int8)
+    mask = nm_mask(jnp.abs(w), 2, 4)
+
+    dense_bytes = k * n * 2
+    int4_bytes = k * n // 2
+    slim_bytes = k * n // 4 + k * n // 8 + (k * r + r * n) // 2
+
+    f_dense = jax.jit(lambda a, b: a @ b)
+    _, us_dense = timed(lambda: f_dense(x, w), repeat=5)
+
+    p = build_slim_linear(
+        (codes * mask.astype(jnp.int8)).astype(jnp.int8), mask,
+        jnp.float32(0.2), 4, 0, "2:4",
+        lora_l=jnp.asarray(rng.normal(0, 0.02, (k, r)), jnp.float32),
+        lora_r=jnp.asarray(rng.normal(0, 0.02, (r, n)), jnp.float32),
+    )
+    f_slim = jax.jit(lambda pp, a: slim_linear_apply(pp, a))
+    _, us_slim = timed(lambda: f_slim(p, x), repeat=5)
+
+    table.add(
+        "xla_path_1024x1024",
+        us_dense,
+        us_dense=round(us_dense, 1),
+        us_slim_xla=round(us_slim, 1),
+        weight_bytes_dense=dense_bytes,
+        weight_bytes_int4=int4_bytes,
+        weight_bytes_slim24_with_adapters=slim_bytes,
+        byte_reduction=round(dense_bytes / slim_bytes, 2),
+        measured_packed_bytes=p.packed_bytes(),
+    )
+
+
+def main():
+    t = Table("kernel_bytes")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Table 19 (Eq. 12): memory-reduction ratios, analytic + measured.
+
+Analytic: compressed/dense byte ratio from Eq. 12 generalized to each
+assigned architecture. Measured: exact packed bytes of a compressed tiny
+model (SlimLinear.packed_bytes) vs its dense fp16 bytes.
+"""
+import jax
+
+from benchmarks.common import Table, compress_with, trained_model
+from repro.configs import ASSIGNED, get_config
+from repro.core.compressed import SlimLinear
+from repro.core.pipeline import CompressionConfig
+
+
+def eq12_ratio(cfg, rank_ratio=0.1, adapters_quantized=True, bits=4, sparsity=0.5):
+    """Compressed/dense bytes for block matmuls + embeddings (Eq. 12 style)."""
+    d = cfg.d_model
+    n_block = cfg.param_count() - cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    n_embed = cfg.param_count() - n_block
+    dense_bytes = (n_block + n_embed) * 2  # bf16
+    # base: bits on surviving weights + 2-bit 2:4 metadata on all positions
+    base_bits = bits * sparsity + 2 * 0.5
+    adapter_params = 2 * rank_ratio * n_block  # L and R per matmul, r=0.1 d
+    adapter_bits = (bits if adapters_quantized else 16)
+    comp_bytes = (
+        n_block * base_bits / 8
+        + adapter_params * adapter_bits / 8
+        + n_embed * 2
+    )
+    return comp_bytes / dense_bytes
+
+
+def run(table: Table):
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        table.add(
+            f"analytic/{arch}",
+            ratio_slim_q=round(eq12_ratio(cfg, adapters_quantized=True), 3),
+            ratio_slim=round(eq12_ratio(cfg, adapters_quantized=False), 3),
+            ratio_wanda_absmax=round(eq12_ratio(cfg, rank_ratio=0.0), 3),
+        )
+
+    # measured on the tiny trained model
+    cfg, dcfg, params = trained_model()
+    dense_bytes = sum(
+        x.size * 2 for x in jax.tree.leaves(params)
+    )  # as-if bf16 deployment
+    cp, _ = compress_with(
+        params, cfg, dcfg,
+        CompressionConfig(quantizer="slim", pruner="wanda", adapter="slim",
+                          rank=24, quantize_adapters=True),
+    )
+    comp_bytes = 0
+    for leaf in jax.tree.leaves(
+        cp, is_leaf=lambda x: isinstance(x, SlimLinear)
+    ):
+        if isinstance(leaf, SlimLinear):
+            comp_bytes += leaf.packed_bytes()
+        else:
+            comp_bytes += leaf.size * 2
+    table.add(
+        "measured/slim-tiny",
+        dense_mb=round(dense_bytes / 2 ** 20, 2),
+        compressed_mb=round(comp_bytes / 2 ** 20, 2),
+        ratio=round(comp_bytes / dense_bytes, 3),
+    )
+
+
+def main():
+    t = Table("table19_memory")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

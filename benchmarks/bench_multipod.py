@@ -1,0 +1,49 @@
+"""Multi-pod scaling table (from the dry-run artifact): single-pod (256) vs
+multi-pod (512) roofline terms per architecture — validates that the pod
+axis is pure DP (per-device train terms ~halve with 2x chips at fixed global
+batch; decode/serve terms shrink with the extra dp capacity)."""
+import json
+import os
+
+from benchmarks.common import Table
+
+RESULTS = os.environ.get("DRYRUN_JSON", "dryrun_results.json")
+
+
+def run(table: Table):
+    if not os.path.exists(RESULTS):
+        table.add("skipped", note=f"{RESULTS} not found — run repro.launch.dryrun --all first")
+        return
+    data = json.load(open(RESULTS))
+    by_key = {}
+    for r in data["results"]:
+        if "roofline" not in r:
+            continue
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    for (arch, shape, mesh), r in sorted(by_key.items()):
+        if mesh != "single":
+            continue
+        multi = by_key.get((arch, shape, "multi"))
+        if multi is None:
+            continue
+        rs, rm = r["roofline"], multi["roofline"]
+        tot_s = rs["t_compute_s"] + rs["t_memory_s"] + rs["t_collective_s"]
+        tot_m = rm["t_compute_s"] + rm["t_memory_s"] + rm["t_collective_s"]
+        table.add(
+            f"{arch}/{shape}",
+            t_sum_single=round(tot_s, 4),
+            t_sum_multi=round(tot_m, 4),
+            scaling_512_vs_256=round(tot_s / max(tot_m, 1e-12), 2),
+            mem_single_gib=round(r["per_device_bytes"] / 2**30, 2),
+            mem_multi_gib=round(multi["per_device_bytes"] / 2**30, 2),
+        )
+
+
+def main():
+    t = Table("multipod_scaling")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

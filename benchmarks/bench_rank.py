@@ -1,0 +1,31 @@
+"""Paper Figure 5a: adapter-rank sensitivity — eval quality vs rank ratio."""
+import dataclasses
+
+from benchmarks.common import Table, compress_with, eval_ppl, trained_model
+from repro.core.pipeline import CompressionConfig
+
+
+def run(table: Table):
+    cfg, dcfg, params = trained_model()
+    table.add("dense", ppl=round(eval_ppl(params, cfg, dcfg), 3))
+    for rank in [0, 4, 8, 16, 32, 64]:
+        ccfg = CompressionConfig(
+            quantizer="slim", pruner="wanda",
+            adapter="none" if rank == 0 else "slim", rank=rank or None,
+        )
+        cp, _ = compress_with(params, cfg, dcfg, ccfg)
+        table.add(
+            f"rank_{rank}",
+            ppl=round(eval_ppl(cp, cfg, dcfg), 3),
+            rank_ratio=round(rank / cfg.d_model, 3),
+        )
+
+
+def main():
+    t = Table("fig5a_rank")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

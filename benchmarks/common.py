@@ -1,0 +1,109 @@
+"""Shared benchmark harness: a once-trained tiny LM (OPT-125M-shaped but
+CPU-sized), calibration data, eval perplexity, and CSV emission.
+
+The paper's tables are zero-shot accuracy on public checkpoints; offline we
+substitute a model trained to signal on the deterministic Markov stream —
+method *orderings* (the claims) are what the benchmarks reproduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core.pipeline import CompressionConfig
+from repro.data import SyntheticLMConfig, calibration_batch, synthetic_batches
+from repro.models import transformer as T
+from repro.models.compress import compress_model
+from repro.optim import adamw, apply_updates, cosine_schedule
+
+_CACHE_DIR = os.environ.get("BENCH_CACHE", "/tmp/slim_bench_cache")
+TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "150"))
+
+
+def bench_config():
+    import dataclasses as dc
+
+    cfg = get_config("slim-tiny")
+    return dc.replace(cfg, n_layers=4, d_model=192, d_ff=576, n_heads=6,
+                      n_kv_heads=6, d_head=32, vocab_size=512)
+
+
+def data_config(cfg, seq=128, batch=16):
+    return SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch, seed=0
+    )
+
+
+def trained_model():
+    """Train (or load cached) the shared benchmark model."""
+    cfg = bench_config()
+    dcfg = data_config(cfg)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(os.path.join(_CACHE_DIR, "tiny"), keep=1)
+    hit = mgr.restore_latest(params)
+    if hit is not None and hit[0] == TRAIN_STEPS:
+        return cfg, dcfg, hit[1]
+
+    init, update = adamw(cosine_schedule(5e-3, TRAIN_STEPS, TRAIN_STEPS // 10))
+    state = init(params)
+
+    @jax.jit
+    def step(p, s, b):
+        l, g = jax.value_and_grad(lambda pp: T.train_loss(pp, cfg, b))(p)
+        u, s = update(g, s, p)
+        return apply_updates(p, u), s, l
+
+    it = synthetic_batches(dcfg)
+    for i in range(TRAIN_STEPS):
+        params, state, loss = step(params, state, next(it))
+    mgr.save(TRAIN_STEPS, params)
+    return cfg, dcfg, params
+
+
+def eval_ppl(params, cfg, dcfg, n_batches=2) -> float:
+    it = synthetic_batches(dcfg, start_step=10 ** 6)
+    tot = 0.0
+    for _ in range(n_batches):
+        tot += float(T.train_loss(params, cfg, next(it), aux_weight=0.0))
+    return math.exp(tot / n_batches)
+
+
+def compress_with(params, cfg, dcfg, ccfg: CompressionConfig, n_calib=8):
+    calib = calibration_batch(dcfg, n_samples=n_calib)
+    return compress_model(params, cfg, calib, ccfg)
+
+
+class Table:
+    """CSV emitter: name,us_per_call,derived (repo convention)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict[str, Any]] = []
+
+    def add(self, label: str, us_per_call: float = 0.0, **derived):
+        self.rows.append(
+            {"label": label, "us_per_call": us_per_call, "derived": derived}
+        )
+
+    def emit(self):
+        for r in self.rows:
+            d = json.dumps(r["derived"], sort_keys=True)
+            print(f"{self.name}/{r['label']},{r['us_per_call']:.1f},{d}")
+
+
+def timed(fn: Callable, *args, repeat=1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) else None
+    return out, (time.time() - t0) / repeat * 1e6  # us

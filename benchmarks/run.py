@@ -1,0 +1,70 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1     # substring filter
+
+Emits ``name,us_per_call,derived`` CSV lines per the repo convention.
+Set BENCH_TRAIN_STEPS to trade training time for benchmark signal
+(default 150; the shared tiny model is cached under /tmp/slim_bench_cache).
+"""
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    bench_accuracy,
+    bench_calib,
+    bench_compression_cost,
+    bench_finetune,
+    bench_flops,
+    bench_kernels,
+    bench_memory,
+    bench_multipod,
+    bench_quant_error,
+    bench_rank,
+    bench_sparsity,
+    bench_sparsity_vs_quant,
+    bench_speedup,
+)
+from benchmarks.common import Table
+
+MODULES = [
+    ("table1_accuracy", bench_accuracy),
+    ("table2_finetune", bench_finetune),
+    ("table8_quant_only", bench_quant_error),
+    ("table16_sparsity_vs_quant", bench_sparsity_vs_quant),
+    ("table19_memory", bench_memory),
+    ("table20_flops", bench_flops),
+    ("table21_compression_cost", bench_compression_cost),
+    ("fig3_speedup", bench_speedup),
+    ("fig5a_rank", bench_rank),
+    ("fig5b_calib", bench_calib),
+    ("fig6_sparsity", bench_sparsity),
+    ("kernel_bytes", bench_kernels),
+    ("multipod_scaling", bench_multipod),
+]
+
+
+def main() -> None:
+    flt = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = []
+    for name, mod in MODULES:
+        if flt and flt not in name:
+            continue
+        t0 = time.time()
+        table = Table(name)
+        try:
+            mod.run(table)
+            table.emit()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()}", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps, apply
+SLiM one-shot compression, then the paper's optional PEFT phase (frozen
+compressed base, AdaFactor on the adapters, §3.4) — with checkpoints,
+straggler monitoring and resumability, i.e. the full production loop.
+
+    PYTHONPATH=src python examples/finetune_e2e.py \
+        [--steps 300] [--peft-steps 100] [--seq 256] [--batch 16]
+
+(This is a thin veneer over `repro.launch.train`; see that module for the
+flag set. On this single-CPU container a 300-step run takes a while —
+reduce --steps for a smoke pass.)
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    args = sys.argv[1:]
+    defaults = [
+        "--arch", "slim-100m",
+        "--steps", "300",
+        "--batch", "16",
+        "--seq", "256",
+        "--n-micro", "2",
+        "--ckpt-dir", "/tmp/slim_100m_run",
+        "--peft-after-compress",
+        "--peft-steps", "100",
+    ]
+    # user args win over defaults
+    train_main(defaults + args)

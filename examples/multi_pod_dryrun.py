@@ -1,0 +1,22 @@
+"""Example 4: the multi-pod dry-run as a user-facing script — lower and
+compile one architecture across the production meshes and print its roofline
+terms (no TPU required; 512 placeholder host devices).
+
+    python examples/multi_pod_dryrun.py --arch mixtral-8x22b --shape decode_32k
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "qwen3-0.6b", "--shape", "decode_32k"]
+    env = dict(os.environ, PYTHONPATH=SRC)
+    sys.exit(
+        subprocess.call(
+            [sys.executable, "-m", "repro.launch.dryrun", "--mesh", "both"] + args,
+            env=env,
+        )
+    )

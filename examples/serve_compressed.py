@@ -1,0 +1,21 @@
+"""Batched serving of a SLiM-compressed model: prefill + continuous greedy
+decode with per-slot tracking (the paper's deployment regime).
+
+    PYTHONPATH=src python examples/serve_compressed.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(
+        [
+            "--arch", "slim-tiny",
+            "--batch", "8",
+            "--prompt-len", "64",
+            "--new-tokens", "24",
+            "--compress",
+        ]
+        + sys.argv[1:]
+    )

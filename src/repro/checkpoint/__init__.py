@@ -1,0 +1,6 @@
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    save_pytree,
+    restore_pytree,
+    latest_step,
+)

@@ -1,0 +1,46 @@
+"""Architecture registry: --arch <id> resolution for launch/ and tests."""
+from importlib import import_module
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "mistral-large-123b": "repro.configs.mistral_large_123b",
+    "yi-34b": "repro.configs.yi_34b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "llama-3.2-vision-90b": "repro.configs.llama_3_2_vision_90b",
+    "slim-tiny": "repro.configs.slim_paper",
+    "slim-100m": "repro.configs.slim_paper",
+}
+
+ASSIGNED: List[str] = [
+    "mistral-large-123b",
+    "yi-34b",
+    "qwen3-0.6b",
+    "stablelm-3b",
+    "mixtral-8x22b",
+    "llama4-scout-17b-a16e",
+    "mamba2-1.3b",
+    "musicgen-large",
+    "jamba-v0.1-52b",
+    "llama-3.2-vision-90b",
+]
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    mod = import_module(_MODULES[name])
+    if name == "slim-100m":
+        return mod.SMALL_100M
+    if name == "slim-tiny":
+        return mod.TINY
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def list_configs() -> List[str]:
+    return list(_MODULES)

@@ -1,0 +1,36 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16 experts top-2 — Mamba+attn 1:7 interleave, MoE every 2nd
+layer [arXiv:2403.19887; hf].
+
+Period of 8 layers: attention at index 3, SSM elsewhere; MoE on odd indices
+(1,3,5,7). SSM blocks use our SSD (Mamba2) formulation — state 128,
+head_dim 64, 8 B/C groups (Jamba ships Mamba-1; the SSD variant is the
+TPU-native matmul-rich equivalent, noted in DESIGN.md §4)."""
+from repro.models.config import LayerSpec, ModelConfig
+
+_PERIOD = tuple(
+    LayerSpec("attn" if i == 3 else "ssm", moe=(i % 2 == 1)) for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_head=128,
+    d_ff=14336, vocab_size=65536,
+    n_experts=16, top_k=2,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_groups=8,
+    ssm_conv=4, ssm_chunk=256,
+    period=_PERIOD,
+)
+
+_REDUCED_PERIOD = tuple(
+    LayerSpec("attn" if i == 1 else "ssm", moe=(i % 2 == 1)) for i in range(4)
+)
+
+REDUCED = ModelConfig(
+    name="jamba-v0.1-52b-reduced",
+    n_layers=4, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+    d_ff=256, vocab_size=512, n_experts=4, top_k=2,
+    ssm_state=16, ssm_head_dim=16, ssm_groups=2, ssm_chunk=16,
+    dtype="float32", q_chunk=64, vocab_chunk=64, moe_group=64,
+    period=_REDUCED_PERIOD,
+)

@@ -1,0 +1,20 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_head=128,
+    d_ff=8192, vocab_size=202048, rope_theta=5e5,
+    n_experts=16, top_k=1,
+    period=(LayerSpec("attn", moe=True),),
+)
+
+REDUCED = ModelConfig(
+    name="llama4-scout-reduced",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+    d_ff=256, vocab_size=512, n_experts=4, top_k=1,
+    dtype="float32", q_chunk=64, vocab_chunk=64, moe_group=64,
+    period=(LayerSpec("attn", moe=True),),
+)

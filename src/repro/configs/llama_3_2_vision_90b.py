@@ -1,0 +1,30 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — cross-attn image layers [hf:meta-llama/Llama-3.2-11B-Vision;
+unverified].
+
+Period of 5: four self-attention decoder layers + one gated cross-attention
+layer over the (stub) vision embeddings — 20 cross-attn layers in 100,
+matching the interleave ratio. Vision frontend is a STUB per spec:
+input_specs() provides projected patch embeddings [B, 1024, d_model]."""
+from repro.models.config import LayerSpec, ModelConfig
+
+_PERIOD = (
+    LayerSpec("attn"), LayerSpec("attn"), LayerSpec("attn"), LayerSpec("attn"),
+    LayerSpec("cross_attn"),
+)
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
+    d_ff=28672, vocab_size=128256, rope_theta=5e5,
+    vision_tokens=1024,
+    period=_PERIOD,
+)
+
+REDUCED = ModelConfig(
+    name="llama-3.2-vision-reduced",
+    n_layers=4, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+    d_ff=256, vocab_size=512, vision_tokens=16,
+    dtype="float32", q_chunk=64, vocab_chunk=64,
+    period=(LayerSpec("attn"), LayerSpec("cross_attn")),
+)

@@ -1,0 +1,21 @@
+"""mamba2-1.3b [ssm] — 48L d_model=2048 (attn-free) vocab=50280,
+ssm_state=128 — SSD state-space duality [arXiv:2405.21060; unverified].
+expand=2 -> d_inner=4096, head_dim=64 -> 64 SSD heads, 1 B/C group."""
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    n_layers=48, d_model=2048, n_heads=0, n_kv_heads=0, d_head=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+    ssm_conv=4, ssm_chunk=256,
+    period=(LayerSpec("ssm"),),
+)
+
+REDUCED = ModelConfig(
+    name="mamba2-1.3b-reduced",
+    n_layers=2, d_model=128, n_heads=0, n_kv_heads=0, d_head=0,
+    d_ff=0, vocab_size=512, ssm_state=16, ssm_head_dim=16, ssm_groups=1,
+    ssm_chunk=16, dtype="float32", q_chunk=64, vocab_chunk=64,
+    period=(LayerSpec("ssm"),),
+)

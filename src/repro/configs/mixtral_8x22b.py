@@ -1,0 +1,20 @@
+"""mixtral-8x22b [moe] — 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]"""
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, d_head=128,
+    d_ff=16384, vocab_size=32768, sliding_window=4096, rope_theta=1e6,
+    n_experts=8, top_k=2,
+    period=(LayerSpec("attn", moe=True),),
+)
+
+REDUCED = ModelConfig(
+    name="mixtral-8x22b-reduced",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, d_head=16,
+    d_ff=256, vocab_size=512, sliding_window=32, n_experts=4, top_k=2,
+    dtype="float32", q_chunk=64, vocab_chunk=64, moe_group=64,
+    period=(LayerSpec("attn", moe=True),),
+)

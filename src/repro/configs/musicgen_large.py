@@ -1,0 +1,20 @@
+"""musicgen-large [audio] — 48L d_model=2048 32H (kv=32 MHA) d_ff=8192
+vocab=2048 — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+The EnCodec frontend is a STUB per spec: input_specs() provides precomputed
+frame embeddings [B, S, d_model]; the backbone predicts codebook tokens."""
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_head=64,
+    d_ff=8192, vocab_size=2048, input_mode="embeddings",
+    period=(LayerSpec("attn"),),
+)
+
+REDUCED = ModelConfig(
+    name="musicgen-large-reduced",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=8, d_head=16,
+    d_ff=256, vocab_size=256, input_mode="embeddings",
+    dtype="float32", q_chunk=64, vocab_chunk=64,
+    period=(LayerSpec("attn"),),
+)

@@ -1,0 +1,17 @@
+"""qwen3-0.6b [dense] — 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936 — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf]"""
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8, d_head=64,
+    d_ff=3072, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    period=(LayerSpec("attn"),),
+)
+
+REDUCED = ModelConfig(
+    name="qwen3-0.6b-reduced",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+    d_ff=256, vocab_size=512, qk_norm=True, dtype="float32",
+    q_chunk=64, vocab_chunk=64, period=(LayerSpec("attn"),),
+)

@@ -1,0 +1,26 @@
+"""Paper-scale configs for the SLiM reproduction itself.
+
+slim-tiny  (~10M): the accuracy-proxy grid (benchmarks/bench_accuracy.py) —
+small enough to train to signal on CPU in minutes, OPT-125M-shaped.
+slim-100m (~100M): the end-to-end example (examples/finetune_e2e.py), the
+"train ~100M model for a few hundred steps" deliverable."""
+from repro.models.config import LayerSpec, ModelConfig
+
+TINY = ModelConfig(
+    name="slim-tiny",
+    n_layers=4, d_model=256, n_heads=8, n_kv_heads=8, d_head=32,
+    d_ff=768, vocab_size=2048, dtype="float32",
+    q_chunk=128, vocab_chunk=128,
+    period=(LayerSpec("attn"),),
+)
+
+SMALL_100M = ModelConfig(
+    name="slim-100m",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_head=64,
+    d_ff=2304, vocab_size=8192, dtype="float32",
+    q_chunk=256, vocab_chunk=256,
+    period=(LayerSpec("attn"),),
+)
+
+CONFIG = TINY
+REDUCED = TINY

@@ -1,0 +1,17 @@
+"""stablelm-3b [dense] — 32L d_model=2560 32H (GQA kv=32 => MHA) d_ff=6912
+vocab=50304. [hf:stabilityai/stablelm-2-1_6b; unverified]"""
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32, d_head=80,
+    d_ff=6912, vocab_size=50304,
+    period=(LayerSpec("attn"),),
+)
+
+REDUCED = ModelConfig(
+    name="stablelm-3b-reduced",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=8, d_head=16,
+    d_ff=256, vocab_size=512, dtype="float32", q_chunk=64, vocab_chunk=64,
+    period=(LayerSpec("attn"),),
+)

@@ -1,0 +1,17 @@
+"""yi-34b [dense] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+llama-arch GQA [arXiv:2403.04652; hf]"""
+from repro.models.config import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, d_head=128,
+    d_ff=20480, vocab_size=64000, rope_theta=5e6,
+    period=(LayerSpec("attn"),),
+)
+
+REDUCED = ModelConfig(
+    name="yi-34b-reduced",
+    n_layers=2, d_model=112, n_heads=7, n_kv_heads=1, d_head=16,
+    d_ff=256, vocab_size=500, dtype="float32", q_chunk=64, vocab_chunk=64,
+    period=(LayerSpec("attn"),),
+)

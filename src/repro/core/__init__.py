@@ -1,0 +1,49 @@
+"""SLiM core: one-shot quantization + sparsity + low-rank compensation.
+
+Public API:
+  quantizers     — AbsMax / Group AbsMax / OPTQ + QuantizedTensor
+  slim_quant     — SLiM-Quant histogram multigrid scale search (Alg. 1)
+  pruning        — Wanda / magnitude / SparseGPT / N:M masks
+  lora           — Naive-LoRA / SLiM-LoRA (Alg. 2) / adapter quantization
+  pipeline       — compress_matrix + CompressionConfig (Fig. 1 pipeline)
+  compressed     — SlimLinear deployed format + slim_linear_apply
+  packing        — int4 nibble + 2:4 structured packing
+  ste            — straight-through estimator for quantized-adapter PEFT
+"""
+from repro.core.quantizers import (
+    QuantizedTensor,
+    absmax_quantize,
+    group_absmax_quantize,
+    optq_quantize,
+    dequantize,
+)
+from repro.core.slim_quant import (
+    slim_quantize,
+    slim_quant_alpha,
+    slim_quantize_activation_aware,
+    weight_abs_histogram,
+    estimate_error_curve,
+)
+from repro.core.pruning import (
+    wanda_prune,
+    magnitude_prune,
+    sparsegpt_prune,
+    jsq_compress,
+    make_mask,
+    nm_mask,
+    check_nm,
+)
+from repro.core.lora import (
+    naive_lora,
+    slim_lora,
+    quantize_adapters,
+    default_rank,
+)
+from repro.core.pipeline import (
+    CalibStats,
+    CompressionConfig,
+    CompressionReport,
+    compress_matrix,
+)
+from repro.core.compressed import SlimLinear, slim_linear_apply, build_slim_linear
+from repro.core.ste import ste_quantize

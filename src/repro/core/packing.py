@@ -1,0 +1,137 @@
+"""Bit-packing for the deployed SLiM format (consumed by the Pallas kernels).
+
+Two building blocks:
+
+* int4 nibble packing — two signed 4-bit codes per uint8 along the packing
+  axis. Matches the kernel's unpack: ``lo = (v & 0xF)``, sign-extended via
+  ``(lo ^ 8) - 8``.
+
+* 2:4 structured compression along d_in — each group of 4 input channels
+  keeps 2 survivors. Storage:
+    vals[..., d_in/2, d_out]  int8 codes of the two survivors (slot-major:
+                              rows 2g, 2g+1 are group g's slot 0/1, idx0<idx1)
+    idx [..., d_in/2, d_out]  uint8 in {0..3}: survivor position within group
+  plus packers to 2-codes/byte (vals) and 4-indices/byte (idx) for the
+  HBM-resident deployed layout: 3.0 bits per original weight position.
+
+All functions operate on the **second-to-last axis** (the d_in axis in our
+W[..., d_in, d_out] convention) so arbitrary leading dims — stacked scan
+layers, MoE expert stacks — pack transparently. Pure jnp, jit-safe, exactly
+inverted by the decompress functions (property-tested).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int4 <-> uint8 nibbles (pack along axis -2)
+# ---------------------------------------------------------------------------
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """codes int8 in [-8, 7], shape [..., 2k, n] -> uint8 [..., k, n]."""
+    if codes.shape[-2] % 2 != 0:
+        raise ValueError("pack_int4 needs an even packing dim")
+    u = jnp.asarray(codes, jnp.int8).astype(jnp.uint8) & 0xF
+    lo = u[..., 0::2, :]
+    hi = u[..., 1::2, :]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """uint8 [..., k, n] -> int8 [..., 2k, n] (sign-extended nibbles)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = ((lo ^ 8) - 8).astype(jnp.int8)
+    hi = ((hi ^ 8) - 8).astype(jnp.int8)
+    stacked = jnp.stack([lo, hi], axis=-2)  # [..., k, 2, n]
+    shape = (*packed.shape[:-2], packed.shape[-2] * 2, packed.shape[-1])
+    return stacked.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit index packing (4 per byte, along axis -2)
+# ---------------------------------------------------------------------------
+
+def pack_idx2(idx: jnp.ndarray) -> jnp.ndarray:
+    """uint8 in {0..3}, shape [..., 4k, n] -> uint8 [..., k, n]."""
+    if idx.shape[-2] % 4 != 0:
+        raise ValueError("pack_idx2 needs packing dim divisible by 4")
+    u = idx.astype(jnp.uint8) & 0x3
+    return (
+        u[..., 0::4, :]
+        | (u[..., 1::4, :] << 2)
+        | (u[..., 2::4, :] << 4)
+        | (u[..., 3::4, :] << 6)
+    ).astype(jnp.uint8)
+
+
+def unpack_idx2(packed: jnp.ndarray) -> jnp.ndarray:
+    parts = [((packed >> (2 * s)) & 0x3).astype(jnp.uint8) for s in range(4)]
+    stacked = jnp.stack(parts, axis=-2)  # [..., k, 4, n]
+    shape = (*packed.shape[:-2], packed.shape[-2] * 4, packed.shape[-1])
+    return stacked.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# 2:4 structured compress / decompress (groups of 4 along axis -2)
+# ---------------------------------------------------------------------------
+
+def compress_24(codes: jnp.ndarray, mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """codes int8 [..., d_in, d_out], mask {0,1} with exactly 2 per 4-group.
+
+    Returns (vals int8 [..., d_in/2, d_out], idx uint8 [..., d_in/2, d_out]).
+    """
+    *lead, d_in, d_out = codes.shape
+    if d_in % 4 != 0:
+        raise ValueError("d_in must be divisible by 4")
+    g = codes.reshape(*lead, d_in // 4, 4, d_out)
+    m = mask.reshape(*lead, d_in // 4, 4, d_out).astype(jnp.int32)
+    slot = jnp.cumsum(m, axis=-2) - 1  # slot of each kept position
+    pos = jnp.arange(4, dtype=jnp.int32).reshape(4, 1)
+    vals_s = []
+    idx_s = []
+    for s in range(2):
+        sel = (m == 1) & (slot == s)
+        vals_s.append(
+            jnp.sum(jnp.where(sel, g.astype(jnp.int32), 0), axis=-2).astype(jnp.int8)
+        )
+        idx_s.append(jnp.sum(jnp.where(sel, pos, 0), axis=-2).astype(jnp.uint8))
+    vals = jnp.stack(vals_s, axis=-2)  # [..., G, 2, d_out]
+    idx = jnp.stack(idx_s, axis=-2)
+    return (
+        vals.reshape(*lead, d_in // 2, d_out),
+        idx.reshape(*lead, d_in // 2, d_out),
+    )
+
+
+def decompress_24(vals: jnp.ndarray, idx: jnp.ndarray, d_in: int) -> jnp.ndarray:
+    """Inverse of compress_24 -> dense int8 [..., d_in, d_out] (zeros pruned)."""
+    *lead, d_half, d_out = vals.shape
+    assert d_half * 2 == d_in
+    v = vals.reshape(*lead, d_in // 4, 2, d_out).astype(jnp.int32)
+    i = idx.reshape(*lead, d_in // 4, 2, d_out).astype(jnp.int32)
+    pos = jnp.arange(4, dtype=jnp.int32).reshape(4, 1, 1)  # [4, 1, 1]
+    hit = (i[..., None, :, :] == pos).astype(jnp.int32)  # [..., G, 4, 2, O]
+    dense = jnp.sum(hit * v[..., None, :, :], axis=-2)  # [..., G, 4, O]
+    return dense.reshape(*lead, d_in, d_out).astype(jnp.int8)
+
+
+def pack_dense_24(
+    codes: jnp.ndarray, mask: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full deployed layout: (packed_vals uint8 [..., d_in/4, d_out],
+    packed_idx uint8 [..., d_in/8, d_out])."""
+    vals, idx = compress_24(codes, mask)
+    return pack_int4(vals), pack_idx2(idx)
+
+
+def unpack_dense_24(
+    packed_vals: jnp.ndarray, packed_idx: jnp.ndarray, d_in: int
+) -> jnp.ndarray:
+    vals = unpack_int4(packed_vals)
+    idx = unpack_idx2(packed_idx)
+    return decompress_24(vals, idx, d_in)

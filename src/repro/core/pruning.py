@@ -1,0 +1,226 @@
+"""One-shot pruning: Wanda, magnitude, SparseGPT, and N:M structured masks.
+
+Paper context (§3.2): after SLiM-Quant, SLiM sparsifies the *quantized*
+weights with an off-the-shelf one-shot pruner — Wanda by default. We also
+implement the paper's comparison baselines (magnitude, SparseGPT with OBS
+weight updates, and a JSQ-lite joint prune+quant) so the benchmark tables can
+reproduce the paper's method grid.
+
+Mask conventions: W[d_in, d_out]; mask==1 keeps a weight. N:M structure is
+along the **contraction dim d_in** (groups of M consecutive input channels
+per output), which is what 2:4 hardware — and our Pallas sparse24 kernel —
+consumes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import QuantizedTensor, _qmax
+
+
+# ---------------------------------------------------------------------------
+# Saliency scores
+# ---------------------------------------------------------------------------
+
+def wanda_saliency(w: jnp.ndarray, x_l2: jnp.ndarray) -> jnp.ndarray:
+    """Wanda: |W_ij| * ||x_i||_2  (x_l2[d_in] = per-channel L2 over calib)."""
+    return jnp.abs(w) * x_l2[:, None]
+
+
+def magnitude_saliency(w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.abs(w)
+
+
+# ---------------------------------------------------------------------------
+# Mask construction
+# ---------------------------------------------------------------------------
+
+def nm_mask(saliency: jnp.ndarray, n: int = 2, m: int = 4) -> jnp.ndarray:
+    """Keep the top-`n` of every `m` consecutive input channels, per output."""
+    d_in, d_out = saliency.shape
+    if d_in % m != 0:
+        raise ValueError(f"d_in={d_in} not divisible by m={m}")
+    s = saliency.reshape(d_in // m, m, d_out)
+    # rank within each group: keep the n largest.
+    order = jnp.argsort(s, axis=1)  # ascending
+    ranks = jnp.argsort(order, axis=1)
+    mask = (ranks >= (m - n)).astype(saliency.dtype)
+    return mask.reshape(d_in, d_out)
+
+
+def unstructured_mask(saliency: jnp.ndarray, sparsity: float = 0.5) -> jnp.ndarray:
+    """Per-output (column) top-k mask — Wanda's comparison group."""
+    d_in, d_out = saliency.shape
+    k = int(round(d_in * (1.0 - sparsity)))
+    k = max(1, min(d_in, k))
+    order = jnp.argsort(saliency, axis=0)
+    ranks = jnp.argsort(order, axis=0)
+    return (ranks >= (d_in - k)).astype(saliency.dtype)
+
+
+def make_mask(
+    saliency: jnp.ndarray,
+    sparsity: float = 0.5,
+    pattern: str = "unstructured",
+) -> jnp.ndarray:
+    """pattern in {"unstructured", "2:4", "1:4", "4:8", ...}."""
+    if pattern == "unstructured":
+        return unstructured_mask(saliency, sparsity)
+    n_s, m_s = pattern.split(":")
+    return nm_mask(saliency, n=int(n_s), m=int(m_s))
+
+
+def wanda_prune(
+    w: jnp.ndarray,
+    x_l2: jnp.ndarray,
+    sparsity: float = 0.5,
+    pattern: str = "2:4",
+) -> jnp.ndarray:
+    return make_mask(wanda_saliency(w, x_l2), sparsity, pattern)
+
+
+def magnitude_prune(
+    w: jnp.ndarray, sparsity: float = 0.5, pattern: str = "2:4"
+) -> jnp.ndarray:
+    return make_mask(magnitude_saliency(w), sparsity, pattern)
+
+
+# ---------------------------------------------------------------------------
+# SparseGPT — Hessian-aware pruning with OBS weight updates.
+#
+# Processes d_in sequentially through the upper-Cholesky factor U of
+# Hinv = (X^T X + damp I)^{-1}; pruning weight row i injects the OBS
+# correction -(w_i / U_ii) * U_{i, i+1:} into the remaining rows. For N:M the
+# mask decision is made per group of M rows using the standard saliency
+# w^2 / diag(Hinv)^2 evaluated on the *updated* weights at group entry
+# (SparseGPT's blocked lookahead, block = the N:M group).
+# ---------------------------------------------------------------------------
+
+def _hinv_chol(hessian: jnp.ndarray, percdamp: float = 0.01) -> jnp.ndarray:
+    d = hessian.shape[0]
+    damp = percdamp * jnp.mean(jnp.diag(hessian)) + 1e-8
+    h = hessian + damp * jnp.eye(d, dtype=hessian.dtype)
+    hinv = jnp.linalg.inv(h)
+    return jnp.linalg.cholesky(hinv, upper=True)
+
+
+def sparsegpt_prune(
+    w: jnp.ndarray,
+    hessian: jnp.ndarray,
+    sparsity: float = 0.5,
+    pattern: str = "2:4",
+    percdamp: float = 0.01,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (w_pruned[d_in,d_out] with updates applied, mask)."""
+    d_in, d_out = w.shape
+    u = _hinv_chol(hessian.astype(jnp.float32), percdamp)
+    diag_u = jnp.diag(u)  # U_ii = sqrt(Hinv_ii) under this factorization
+
+    if pattern == "unstructured":
+        # Global mask from initial saliency (one-shot variant), then a single
+        # sequential OBS update pass for pruned rows.
+        sal = (w ** 2) / (diag_u[:, None] ** 2 + 1e-12)
+        mask = unstructured_mask(sal, sparsity)
+        m_groups = 1
+    else:
+        n_s, m_s = pattern.split(":")
+        n_keep, m = int(n_s), int(m_s)
+        mask = None
+        m_groups = m
+
+    def unstruct_body(i, carry):
+        w_work = carry
+        keep = mask[i]
+        row = w_work[i]
+        pruned_vals = row * (1.0 - keep)
+        err = pruned_vals / diag_u[i]
+        below = (jnp.arange(d_in) > i).astype(w_work.dtype)[:, None]
+        w_work = w_work - below * jnp.outer(u[i], err)
+        w_work = w_work.at[i].set(row * keep)
+        return w_work
+
+    if pattern == "unstructured":
+        w_out = jax.lax.fori_loop(0, d_in, unstruct_body, w.astype(jnp.float32))
+        return w_out, mask
+
+    # N:M path — scan over groups of m rows.
+    n_groups = d_in // m_groups
+
+    def group_body(g, carry):
+        w_work, mask_acc = carry
+        i0 = g * m_groups
+        rows = jax.lax.dynamic_slice(w_work, (i0, 0), (m_groups, d_out))
+        dvals = jax.lax.dynamic_slice(diag_u, (i0,), (m_groups,))
+        sal = (rows ** 2) / (dvals[:, None] ** 2 + 1e-12)
+        order = jnp.argsort(sal, axis=0)
+        ranks = jnp.argsort(order, axis=0)
+        keep = (ranks >= (m_groups - n_keep)).astype(w_work.dtype)
+
+        def row_body(k, w_in):
+            i = i0 + k
+            row = jax.lax.dynamic_slice(w_in, (i, 0), (1, d_out))[0]
+            pruned_vals = row * (1.0 - keep[k])
+            err = pruned_vals / diag_u[i]
+            below = (jnp.arange(d_in) > i).astype(w_in.dtype)[:, None]
+            w_in = w_in - below * jnp.outer(u[i], err)
+            w_in = jax.lax.dynamic_update_slice(
+                w_in, (row * keep[k])[None, :], (i, 0)
+            )
+            return w_in
+
+        w_work = jax.lax.fori_loop(0, m_groups, row_body, w_work)
+        mask_acc = jax.lax.dynamic_update_slice(mask_acc, keep, (i0, 0))
+        return w_work, mask_acc
+
+    mask0 = jnp.zeros((d_in, d_out), dtype=jnp.float32)
+    w_out, mask = jax.lax.fori_loop(
+        0, n_groups, group_body, (w.astype(jnp.float32), mask0)
+    )
+    return w_out, mask
+
+
+# ---------------------------------------------------------------------------
+# JSQ-lite: joint sparsification + quantization baseline (Guo et al. 2024,
+# simplified). Prunes by activation-aware saliency and quantizes the
+# survivors with a clipped absmax whose clip range is chosen to minimize the
+# masked reconstruction error — a single joint objective, no adapters.
+# ---------------------------------------------------------------------------
+
+def jsq_compress(
+    w: jnp.ndarray,
+    x_l2: jnp.ndarray,
+    bits: int = 4,
+    sparsity: float = 0.5,
+    pattern: str = "2:4",
+    n_clip_grid: int = 32,
+) -> Tuple[QuantizedTensor, jnp.ndarray]:
+    mask = wanda_prune(w, x_l2, sparsity, pattern)
+    w_m = w * mask
+    wmax = jnp.max(jnp.abs(w_m))
+    half = 2 ** (bits - 1)
+    qmax = _qmax(bits)
+    alphas = jnp.linspace(wmax / n_clip_grid, wmax, n_clip_grid)
+
+    def err_for(a):
+        codes = jnp.clip(jnp.round(jnp.clip(w_m / a, -1, 1) * half), -qmax, qmax)
+        deq = codes * a / half
+        return jnp.sum(((deq - w_m) * mask) ** 2)
+
+    errs = jax.vmap(err_for)(alphas)
+    alpha = alphas[jnp.argmin(errs)]
+    codes = jnp.clip(
+        jnp.round(jnp.clip(w_m / alpha, -1, 1) * half), -qmax, qmax
+    ).astype(jnp.int8)
+    qt = QuantizedTensor(codes=codes, scale=alpha.astype(jnp.float32), bits=bits, group_size=0)
+    return qt, mask
+
+
+def check_nm(mask: jnp.ndarray, n: int = 2, m: int = 4) -> bool:
+    """Invariant: exactly n survivors in every m-group (used by tests)."""
+    d_in, d_out = mask.shape
+    g = mask.reshape(d_in // m, m, d_out).sum(axis=1)
+    return bool(jnp.all(g == n))

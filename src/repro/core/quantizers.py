@@ -1,0 +1,204 @@
+"""Baseline weight quantizers: AbsMax, Group AbsMax, and OPTQ-style.
+
+Conventions (DESIGN.md §8):
+  - weights ``W[d_in, d_out]``, symmetric q-bit quantization (paper Eq. 2)::
+
+        Wq = round(clip(W / alpha, -1, 1) * (2**(q-1)))
+
+    with integer levels clamped to ``[-(2**(q-1) - 1), 2**(q-1) - 1]`` so the
+    code is sign-symmetric and int4-packable.
+  - dequant: ``W_hat = Wq * alpha / 2**(q-1)``.
+
+All functions are pure jnp and jit-safe. A ``QuantizedTensor`` carries the
+integer codes plus the metadata needed to dequantize; ``dequantize`` is the
+single source of truth used by the model's compressed layers and by the
+Pallas kernels' reference oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Symmetric-quantized tensor.
+
+    codes: int8 integer levels in [-(2^{q-1}-1), 2^{q-1}-1], shape = W.shape.
+    scale: per-tensor scalar () or per-group array broadcastable after
+           ``reshape(d_in // g, g, d_out)`` -> shape (d_in // g, 1, d_out).
+    bits:  bit width q.
+    group_size: 0 for per-tensor, else group length along d_in.
+    """
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int
+    group_size: int
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.bits, self.group_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scale = children
+        bits, group_size = aux
+        return cls(codes=codes, scale=scale, bits=bits, group_size=group_size)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    def dequantize(self) -> jnp.ndarray:
+        return dequantize(self)
+
+
+def _qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def quantize_symmetric(w: jnp.ndarray, alpha: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Paper Eq. 2 with symmetric level clamp. Returns int8 codes."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits={bits}: int8 code storage supports 2..8 bits")
+    half = 2 ** (bits - 1)
+    scaled = jnp.clip(w / alpha, -1.0, 1.0) * half
+    codes = jnp.clip(jnp.round(scaled), -_qmax(bits), _qmax(bits))
+    return codes.astype(jnp.int8)
+
+
+def dequantize_codes(codes: jnp.ndarray, alpha: jnp.ndarray, bits: int) -> jnp.ndarray:
+    half = 2 ** (bits - 1)
+    return codes.astype(jnp.float32) * (alpha / half)
+
+
+def dequantize(qt: QuantizedTensor) -> jnp.ndarray:
+    if qt.group_size == 0:
+        return dequantize_codes(qt.codes, qt.scale, qt.bits)
+    d_in, d_out = qt.codes.shape
+    g = qt.group_size
+    codes = qt.codes.reshape(d_in // g, g, d_out)
+    w = dequantize_codes(codes, qt.scale, qt.bits)
+    return w.reshape(d_in, d_out)
+
+
+# ---------------------------------------------------------------------------
+# AbsMax (per-tensor)
+# ---------------------------------------------------------------------------
+
+def absmax_quantize(w: jnp.ndarray, bits: int = 4) -> QuantizedTensor:
+    alpha = jnp.max(jnp.abs(w))
+    alpha = jnp.where(alpha <= 0, 1.0, alpha).astype(jnp.float32)
+    codes = quantize_symmetric(w, alpha, bits)
+    return QuantizedTensor(codes=codes, scale=alpha, bits=bits, group_size=0)
+
+
+# ---------------------------------------------------------------------------
+# Group AbsMax (one scale per `group_size` inputs per output column)
+# ---------------------------------------------------------------------------
+
+def fit_group_size(d_in: int, group_size: int) -> int:
+    """Largest divisor of d_in that is <= group_size (>=1)."""
+    g = min(group_size, d_in)
+    while d_in % g != 0:
+        g -= 1
+    return g
+
+
+def group_absmax_quantize(
+    w: jnp.ndarray, bits: int = 4, group_size: int = 128
+) -> QuantizedTensor:
+    d_in, d_out = w.shape
+    group_size = fit_group_size(d_in, group_size)
+    grouped = w.reshape(d_in // group_size, group_size, d_out)
+    alpha = jnp.max(jnp.abs(grouped), axis=1, keepdims=True)
+    alpha = jnp.where(alpha <= 0, 1.0, alpha).astype(jnp.float32)
+    codes = quantize_symmetric(grouped, alpha, bits).reshape(d_in, d_out)
+    return QuantizedTensor(codes=codes, scale=alpha, bits=bits, group_size=group_size)
+
+
+# ---------------------------------------------------------------------------
+# OPTQ-style (GPTQ) quantizer — column-by-column with Hessian-driven update.
+#
+# The paper uses "Group OPTQ" as the quantizer paired with SparseGPT. We
+# implement the standard OPTQ recurrence on the layer Hessian
+# H = X^T X + lambda*I, processing the d_in dimension in blocks; the error of
+# each quantized row is propagated into not-yet-quantized rows through the
+# inverse-Cholesky factors. Pure JAX (lax.fori_loop over columns).
+# ---------------------------------------------------------------------------
+
+def optq_quantize(
+    w: jnp.ndarray,
+    hessian: jnp.ndarray,
+    bits: int = 4,
+    group_size: int = 128,
+    percdamp: float = 0.01,
+) -> QuantizedTensor:
+    """OPTQ: quantize W[d_in, d_out] given H[d_in, d_in] = X^T X.
+
+    Uses per-group absmax scales computed up-front (standard practice for
+    "Group OPTQ"), then the OBS update: after quantizing input-row i, the
+    remaining rows absorb err / Hinv[i, i] * Hinv[i, i+1:].
+    """
+    d_in, d_out = w.shape
+    if group_size:
+        group_size = fit_group_size(d_in, group_size)
+    damp = percdamp * jnp.mean(jnp.diag(hessian)) + 1e-8
+    h = hessian + damp * jnp.eye(d_in, dtype=hessian.dtype)
+    # Hinv via Cholesky of the inverse (as in the GPTQ reference impl).
+    hinv = jnp.linalg.inv(h)
+    # Upper Cholesky factor of Hinv: hinv = U^T U with U upper triangular.
+    u = jnp.linalg.cholesky(hinv, upper=True)
+
+    if group_size == 0:
+        alpha = jnp.max(jnp.abs(w))
+        alpha = jnp.where(alpha <= 0, 1.0, alpha)
+        alpha_rows = jnp.broadcast_to(alpha, (d_in, d_out))
+        scale_out = alpha.astype(jnp.float32)
+    else:
+        grouped = w.reshape(d_in // group_size, group_size, d_out)
+        ga = jnp.max(jnp.abs(grouped), axis=1, keepdims=True)
+        ga = jnp.where(ga <= 0, 1.0, ga)
+        alpha_rows = jnp.broadcast_to(ga, grouped.shape).reshape(d_in, d_out)
+        scale_out = ga.astype(jnp.float32)
+
+    half = 2 ** (bits - 1)
+    qmax = _qmax(bits)
+
+    def body(i, carry):
+        w_work, codes = carry
+        row = w_work[i]
+        a = alpha_rows[i]
+        c = jnp.clip(jnp.round(jnp.clip(row / a, -1.0, 1.0) * half), -qmax, qmax)
+        deq = c * a / half
+        err = (row - deq) / u[i, i]
+        # Propagate into remaining rows (masked so rows <= i are untouched).
+        mask = (jnp.arange(d_in) > i).astype(w_work.dtype)[:, None]
+        w_work = w_work - mask * jnp.outer(u[i], err)
+        codes = codes.at[i].set(c.astype(jnp.int8))
+        return w_work, codes
+
+    codes0 = jnp.zeros((d_in, d_out), dtype=jnp.int8)
+    _, codes = jax.lax.fori_loop(0, d_in, body, (w.astype(jnp.float32), codes0))
+    if group_size == 0:
+        return QuantizedTensor(codes=codes, scale=scale_out, bits=bits, group_size=0)
+    return QuantizedTensor(codes=codes, scale=scale_out, bits=bits, group_size=group_size)
+
+
+# ---------------------------------------------------------------------------
+# Error metrics
+# ---------------------------------------------------------------------------
+
+def reconstruction_error(w: jnp.ndarray, qt: QuantizedTensor) -> jnp.ndarray:
+    """||W_hat - W||^2 (paper Eq. 3 objective)."""
+    return jnp.sum((dequantize(qt) - w) ** 2)
+
+
+def output_error(x: jnp.ndarray, w: jnp.ndarray, qt: QuantizedTensor) -> jnp.ndarray:
+    """||X(W_hat - W)||^2 (paper Eq. 1, the OBS layer objective)."""
+    return jnp.sum((x @ (dequantize(qt) - w)) ** 2)

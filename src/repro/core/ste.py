@@ -1,0 +1,47 @@
+"""Straight-through estimators for quantization-aware PEFT (paper §3.4).
+
+When SLiM-LoRA^Q adapters are fine-tuned, the forward pass sees the
+quantize-dequantize of (L, R) while gradients flow as identity through the
+rounding. The paper implements the (de)quant as Triton kernels; on TPU the
+XLA fusion of these elementwise chains is already optimal, so plain jnp with
+a straight-through custom_vjp is the idiomatic port (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _group_qdq(a: jnp.ndarray, bits: int, group_size: int) -> jnp.ndarray:
+    """Group-absmax quantize->dequantize, differentiably opaque."""
+    half = 2 ** (bits - 1)
+    qmax = half - 1
+    d0 = a.shape[0]
+    if group_size and d0 % group_size == 0:
+        g = a.reshape(d0 // group_size, group_size, *a.shape[1:])
+        alpha = jnp.max(jnp.abs(g), axis=1, keepdims=True)
+        alpha = jnp.where(alpha <= 0, 1.0, alpha)
+        codes = jnp.clip(jnp.round(g / alpha * half), -qmax, qmax)
+        return (codes * alpha / half).reshape(a.shape)
+    alpha = jnp.max(jnp.abs(a))
+    alpha = jnp.where(alpha <= 0, 1.0, alpha)
+    codes = jnp.clip(jnp.round(a / alpha * half), -qmax, qmax)
+    return codes * alpha / half
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ste_quantize(a: jnp.ndarray, bits: int = 4, group_size: int = 128) -> jnp.ndarray:
+    return _group_qdq(a, bits, group_size)
+
+
+def _fwd(a, bits, group_size):
+    return _group_qdq(a, bits, group_size), None
+
+
+def _bwd(bits, group_size, _, g):
+    return (g,)  # identity gradient: the straight-through estimator
+
+
+ste_quantize.defvjp(_fwd, _bwd)

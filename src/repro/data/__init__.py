@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    SyntheticLMConfig,
+    synthetic_batches,
+    calibration_batch,
+    make_markov_sampler,
+)

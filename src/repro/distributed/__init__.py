@@ -1,0 +1,9 @@
+from repro.distributed.compress import (
+    quantize_int8,
+    dequantize_int8,
+    ef_compress_grads,
+    ef_allreduce_int8,
+)
+from repro.distributed.accum import microbatch_grads
+from repro.distributed.elastic import choose_mesh_shape, elastic_mesh
+from repro.distributed.straggler import StepMonitor

@@ -1,0 +1,67 @@
+"""Microbatched gradient accumulation.
+
+Splits the per-step batch into ``n_micro`` sequential microbatches inside a
+``lax.scan``: activation memory drops by ``n_micro`` (the binding constraint
+for the 100B train configs — see EXPERIMENTS §Perf), gradients are averaged
+in fp32, and the data-parallel all-reduce happens **once** per step (XLA
+hoists it out of the scan because the psum consumes the final accumulator),
+which also batches the collective.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def microbatch_grads(
+    loss_fn: Callable[[Pytree, Pytree], jnp.ndarray],
+    params: Pytree,
+    batch: Pytree,
+    n_micro: int,
+) -> Tuple[jnp.ndarray, Pytree]:
+    """Returns (mean loss, mean grads). Splits batch dim 0 into n_micro."""
+    if n_micro <= 1:
+        loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(params, batch)
+        return loss, grads
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, f"batch {b} % n_micro {n_micro}"
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+    grad_fn = jax.value_and_grad(loss_fn, allow_int=True)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, g = grad_fn(params, mb)
+        g_acc = jax.tree.map(
+            lambda a, b: a + b.astype(jnp.float32) if a is not None else None,
+            g_acc,
+            g,
+            is_leaf=lambda x: x is None,
+        )
+        return (loss_acc + loss, g_acc), None
+
+    def zero_like(g):
+        if g is None or not hasattr(g, "dtype"):
+            return None
+        if g.dtype == jax.dtypes.float0 or not jnp.issubdtype(g.dtype, jnp.floating):
+            return None
+        return jnp.zeros(g.shape, jnp.float32)
+
+    g0 = jax.tree.map(zero_like, jax.eval_shape(lambda p: grad_fn(p, jax.tree.map(lambda x: x[0], micro))[1], params))
+    (loss_sum, g_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), g0), micro
+    )
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(
+        lambda g: g * inv if g is not None else None,
+        g_sum,
+        is_leaf=lambda x: x is None,
+    )
+    return loss_sum * inv, grads

@@ -1,0 +1,54 @@
+"""Elastic mesh management.
+
+On (re)start the launcher calls ``elastic_mesh`` with whatever devices are
+alive; it factorizes the count into the closest-to-requested (data, model)
+shape (model parallelism capped by attention-head divisibility), and the
+checkpoint layer's reshard-on-load places the saved full arrays onto the new
+mesh — so losing a host mid-run costs one restart, not a re-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def _divisors(n: int):
+    return sorted(d for d in range(1, n + 1) if n % d == 0)
+
+
+def choose_mesh_shape(
+    n_devices: int,
+    preferred_model: int = 16,
+    model_divides: Optional[int] = None,
+) -> Tuple[int, int]:
+    """Pick (data, model) for `n_devices`.
+
+    model axis: largest divisor of n_devices that is <= preferred_model and
+    (if given) divides `model_divides` (e.g. head count or d_ff granularity).
+    """
+    best = 1
+    for d in _divisors(n_devices):
+        if d > preferred_model:
+            break
+        if model_divides is not None and model_divides % d != 0:
+            continue
+        best = d
+    return n_devices // best, best
+
+
+def elastic_mesh(
+    preferred_model: int = 16,
+    model_divides: Optional[int] = None,
+    multi_pod: bool = False,
+    devices: Optional[Sequence] = None,
+):
+    """Build a mesh from the devices that are actually alive."""
+    devs = list(devices if devices is not None else jax.devices())
+    n = len(devs)
+    if multi_pod and n % 2 == 0 and n >= 4:
+        data, model = choose_mesh_shape(n // 2, preferred_model, model_divides)
+        return jax.make_mesh((2, data, model), ("pod", "data", "model"), devices=devs)
+    data, model = choose_mesh_shape(n, preferred_model, model_divides)
+    return jax.make_mesh((data, model), ("data", "model"), devices=devs)

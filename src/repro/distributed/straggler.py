@@ -1,0 +1,97 @@
+"""Straggler / hang mitigation for the training launcher.
+
+SPMD steps are synchronous: one slow host stretches everyone. Inside the XLA
+program there is nothing to schedule around, so mitigation lives at the
+launcher plane:
+
+  * ``StepMonitor`` — EWMA of step wall-time with a z-score alarm; flags
+    stragglers (persistent slowdowns -> operator signal to cordon the host)
+    and hard-hangs (watchdog deadline -> raise, triggering checkpoint-resume,
+    possibly on fewer nodes via the elastic mesh).
+  * data-skip on resume — the deterministic data pipeline is addressed by
+    step, so a restarted job does not need to replay the stream.
+
+At 1000+ nodes the same monitor feeds the cluster scheduler: .flag_file is
+touched with the offending step so an external supervisor can reschedule.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Optional
+
+
+class StepMonitor:
+    def __init__(
+        self,
+        slow_factor: float = 2.0,
+        hang_timeout_s: float = 600.0,
+        ewma: float = 0.9,
+        flag_file: Optional[str] = None,
+    ):
+        self.slow_factor = slow_factor
+        self.hang_timeout_s = hang_timeout_s
+        self.ewma = ewma
+        self.flag_file = flag_file
+        self.mean_dt: Optional[float] = None
+        self.slow_steps = 0
+        self.total_steps = 0
+        self._deadline: Optional[float] = None
+        self._watchdog: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._hang = threading.Event()
+
+    # -- hang watchdog -----------------------------------------------------
+    def _watch(self):
+        while not self._stop.wait(1.0):
+            d = self._deadline
+            if d is not None and time.monotonic() > d:
+                self._hang.set()
+                self._flag("hang")
+                return
+
+    def start(self):
+        self._watchdog = threading.Thread(target=self._watch, daemon=True)
+        self._watchdog.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+
+    def check_hang(self):
+        if self._hang.is_set():
+            raise TimeoutError(
+                f"step exceeded hang timeout {self.hang_timeout_s}s — "
+                "checkpoint-resume (possibly elastic) required"
+            )
+
+    # -- per-step accounting -------------------------------------------------
+    def step_begin(self):
+        self._deadline = time.monotonic() + self.hang_timeout_s
+
+    def step_end(self) -> bool:
+        """Returns True if this step was a straggler."""
+        now = time.monotonic()
+        dt = now - (self._deadline - self.hang_timeout_s)
+        self._deadline = None
+        self.total_steps += 1
+        slow = False
+        if self.mean_dt is not None and dt > self.slow_factor * self.mean_dt:
+            self.slow_steps += 1
+            slow = True
+            self._flag(f"slow step {self.total_steps}: {dt:.2f}s vs {self.mean_dt:.2f}s")
+        self.mean_dt = (
+            dt
+            if self.mean_dt is None
+            else self.ewma * self.mean_dt + (1 - self.ewma) * dt
+        )
+        return slow
+
+    def _flag(self, msg: str):
+        if self.flag_file:
+            try:
+                with open(self.flag_file, "a") as f:
+                    f.write(f"{time.time():.0f} {msg}\n")
+            except OSError:
+                pass

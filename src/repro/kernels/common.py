@@ -1,0 +1,72 @@
+"""Shared in-kernel helpers for the SLiM Pallas TPU kernels.
+
+These run *inside* ``pl.pallas_call`` kernel bodies: pure jnp on VMEM-resident
+blocks. The unpack routines mirror ``repro.core.packing`` bit-for-bit — the
+packing module writes HBM layouts, these read them back on the VPU.
+
+TPU adaptation notes (DESIGN.md §4): nibble/2-bit unpacking is elementwise
+integer VPU work on (8,128)-lane registers; the 2:4 decompression is a
+select-by-iota (no scatter), which vectorizes cleanly. The MXU consumes the
+resulting dense fp32 block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_int4_block(packed: jnp.ndarray) -> jnp.ndarray:
+    """uint8 [k, n] -> int8-as-int32 [2k, n], sign-extended nibbles."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    lo = (lo ^ 8) - 8
+    hi = (hi ^ 8) - 8
+    k, n = packed.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * k, n)
+
+
+def unpack_idx2_block(packed: jnp.ndarray) -> jnp.ndarray:
+    """uint8 [k, n] -> uint8-as-int32 [4k, n] of 2-bit fields."""
+    parts = [((packed >> (2 * s)) & 0x3).astype(jnp.int32) for s in range(4)]
+    k, n = packed.shape
+    return jnp.stack(parts, axis=1).reshape(4 * k, n)
+
+
+def decompress_24_block(vals: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """vals int32 [k/2, n] (slot-major), idx int32 [k/2, n] in {0..3}
+    -> dense int32 [k, n] with zeros at pruned positions (select-by-iota)."""
+    khalf, n = vals.shape
+    g = khalf // 2
+    v = vals.reshape(g, 2, n)
+    i = idx.reshape(g, 2, n)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (g, 4, 2, n), 1)
+    hit = (i[:, None, :, :] == pos).astype(jnp.int32)
+    dense = jnp.sum(hit * v[:, None, :, :], axis=2)  # [g, 4, n]
+    return dense.reshape(4 * g, n)
+
+
+def dequant_dense_int4(packed: jnp.ndarray, scale, bits: int = 4) -> jnp.ndarray:
+    """packed uint8 [bk/2, bn] + scale -> f32 [bk, bn]."""
+    codes = unpack_int4_block(packed)
+    half = float(2 ** (bits - 1))
+    return codes.astype(jnp.float32) * (scale / half)
+
+
+def dequant_sparse24(
+    packed_vals: jnp.ndarray, packed_idx: jnp.ndarray, scale, bits: int = 4
+) -> jnp.ndarray:
+    """packed_vals uint8 [bk/4, bn], packed_idx uint8 [bk/8, bn] + scale
+    -> dense f32 [bk, bn]."""
+    vals = unpack_int4_block(packed_vals)  # [bk/2, bn]
+    idx = unpack_idx2_block(packed_idx)  # [bk/2, bn]
+    dense = decompress_24_block(vals, idx)  # [bk, bn]
+    half = float(2 ** (bits - 1))
+    return dense.astype(jnp.float32) * (scale / half)
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that divides dim (>=8)."""
+    b = min(preferred, dim)
+    while dim % b != 0 and b > 1:
+        b //= 2
+    return max(b, 1)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash-decoding single-token attention.
+
+    o[B, H, dh] = softmax(q[B, H, dh] . K[B, S, H, dh]^T / sqrt(dh)) @ V
+
+The serving hot path next to the SLiM matmul: decode attention over a long
+KV cache is pure HBM streaming. The kernel splits the KV sequence across
+the grid (FlashDecoding-style split-K) and maintains the online-softmax
+running (max, sum, weighted-value) triple in VMEM scratch, so each K/V
+block is read exactly once and nothing of size S is materialized.
+
+Grid: ``(B, S/bs)`` — sequence split innermost; the running stats persist
+in scratch across the s-steps of one batch row; the final step normalizes
+into the output block. Positions beyond ``kv_len`` (per batch row) are
+masked, supporting ragged cache fill levels across the batch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import pick_block
+
+_NEG = -1e30
+
+
+def _kernel(
+    q_ref,  # [1, H, dh]
+    k_ref,  # [1, bs, H, dh]
+    v_ref,  # [1, bs, H, dh]
+    len_ref,  # [1, 1] int32: valid kv length for this batch row
+    o_ref,  # [1, H, dh]
+    m_ref,  # scratch [H, 1] running max
+    l_ref,  # scratch [H, 1] running denom
+    acc_ref,  # scratch [H, dh] running numerator
+    *,
+    bs: int,
+    ns: int,
+    scale: float,
+):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, dh]
+    k = k_ref[0].astype(jnp.float32)  # [bs, H, dh]
+    v = v_ref[0].astype(jnp.float32)
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale  # [H, bs]
+
+    pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0, 0]  # [1, bs]
+    scores = jnp.where(valid, scores, _NEG)
+
+    m_prev = m_ref[...]  # [H, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)  # rescale of old stats
+    p = jnp.exp(scores - m_new)  # [H, bs]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("hs,shd->hd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == ns - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode(
+    q: jnp.ndarray,  # [B, H, dh]
+    k: jnp.ndarray,  # [B, S, H, dh]  (KV heads pre-expanded to H)
+    v: jnp.ndarray,  # [B, S, H, dh]
+    kv_len: jnp.ndarray,  # [B] int32 valid lengths
+    bs: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, dh = q.shape
+    s = k.shape[1]
+    bs = pick_block(s, bs)
+    ns = s // bs
+    scale = 1.0 / (dh ** 0.5)
+    lens = kv_len.reshape(b, 1).astype(jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=bs, ns=ns, scale=scale),
+        grid=(b, ns),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bs, h, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, h, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernels: group-absmax quantize / dequantize.
+
+The paper's PEFT phase (§3.4) runs the straight-through estimator with
+custom Triton (de)quantization kernels; these are the TPU Pallas analogues
+(DESIGN.md §4). Each grid step owns a ``(bg*g, bn)`` block: the quantizer
+reduces |max| per (group, column), emits int4 codes packed 2-per-byte plus
+f32 scales; the dequantizer inverts it. Both are elementwise+reduction VPU
+work with 128-lane-aligned layouts; fused into the adapter matmul producers
+on TPU, they keep the STE round-trip out of HBM.
+
+Layout (matches core.packing / core.compressed):
+    x      f32/bf16 [K, N], groups of ``g`` along K
+    codes  uint8 [K/2, N]   (int4 nibbles, packed along K)
+    scales f32 [K/g, 1, N]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import pick_block, unpack_int4_block
+
+
+def _quant_kernel(x_ref, codes_ref, scale_ref, *, g: int, bits: int):
+    x = x_ref[...].astype(jnp.float32)  # [bg*g, bn]
+    rows, bn = x.shape
+    xg = x.reshape(rows // g, g, bn)
+    half = float(2 ** (bits - 1))
+    qmax = half - 1
+    s = jnp.max(jnp.abs(xg), axis=1, keepdims=True)  # [bg, 1, bn]
+    s = jnp.where(s <= 0, 1.0, s)
+    codes = jnp.clip(jnp.round(xg / s * half), -qmax, qmax).astype(jnp.int32)
+    codes = codes.reshape(rows, bn)
+    lo = codes[0::2, :] & 0xF
+    hi = codes[1::2, :] & 0xF
+    codes_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
+    scale_ref[...] = s.astype(jnp.float32)
+
+
+def _dequant_kernel(codes_ref, scale_ref, o_ref, *, g: int, bits: int):
+    codes = unpack_int4_block(codes_ref[...])  # [bg*g, bn] int32
+    rows, bn = codes.shape
+    half = float(2 ** (bits - 1))
+    xg = codes.reshape(rows // g, g, bn).astype(jnp.float32)
+    o_ref[...] = (xg * (scale_ref[...] / half)).reshape(rows, bn).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("g", "bits", "bk", "bn", "interpret"))
+def group_quantize(
+    x: jnp.ndarray,  # [K, N]
+    g: int = 128,
+    bits: int = 4,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (codes uint8 [K/2, N], scales f32 [K/g, 1, N])."""
+    k, n = x.shape
+    assert k % g == 0 and g % 2 == 0
+    bk = max(g, pick_block(k, bk))
+    assert bk % g == 0
+    bn = pick_block(n, bn)
+    grid = (k // bk, n // bn)
+    codes, scales = pl.pallas_call(
+        functools.partial(_quant_kernel, g=g, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bk // 2, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk // g, 1, bn), lambda i, j: (i, 0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k // 2, n), jnp.uint8),
+            jax.ShapeDtypeStruct((k // g, 1, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return codes, scales
+
+
+@functools.partial(
+    jax.jit, static_argnames=("g", "bits", "bk", "bn", "out_dtype", "interpret")
+)
+def group_dequantize(
+    codes: jnp.ndarray,  # uint8 [K/2, N]
+    scales: jnp.ndarray,  # f32 [K/g, 1, N]
+    g: int = 128,
+    bits: int = 4,
+    bk: int = 512,
+    bn: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    k = codes.shape[0] * 2
+    n = codes.shape[1]
+    bk = max(g, pick_block(k, bk))
+    bn = pick_block(n, bn)
+    grid = (k // bk, n // bn)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, g=g, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk // 2, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk // g, 1, bn), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), out_dtype),
+        interpret=interpret,
+    )(codes, scales)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused int4-dequant matmul (W4A16).
+
+    y[M, N] = x[M, K] @ dequant(w_packed[K/2, N])
+
+The packed int4 weights stream HBM->VMEM in ``(bk/2, bn)`` blocks (half the
+bytes of an int8 weight, a quarter of bf16); the VPU unpacks + dequantizes
+(SLiM-Quant per-tensor scale, or per-128-group scales) and the MXU consumes
+dense fp32 ``(bm, bk) x (bk, bn)`` dots with fp32 accumulation carried in the
+output block across the k-grid.
+
+Grid: ``(M/bm, N/bn, K/bk)`` row-major — k innermost so the out block stays
+resident; Pallas double-buffers the block DMAs (the TPU analogue of Marlin's
+global->shared pipelining; DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import dequant_dense_int4, pick_block
+
+
+def _kernel_pertensor(x_ref, w_ref, scale_ref, o_ref, *, bits: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = dequant_dense_int4(w_ref[...], scale_ref[0, 0], bits)
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+
+def _kernel_group(x_ref, w_ref, scale_ref, o_ref, *, bits: int, nk: int, group_size: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    from repro.kernels.common import unpack_int4_block
+
+    codes = unpack_int4_block(w_ref[...])  # [bk, bn]
+    bk, bn = codes.shape
+    half = float(2 ** (bits - 1))
+    scales = scale_ref[...]  # [bk/g, 1, bn]
+    w = (
+        codes.reshape(bk // group_size, group_size, bn).astype(jnp.float32)
+        * (scales / half)
+    ).reshape(bk, bn)
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group_size", "bm", "bn", "bk", "interpret"),
+)
+def int4_matmul(
+    x: jnp.ndarray,  # [M, K]
+    w_packed: jnp.ndarray,  # uint8 [K/2, N]
+    scale: jnp.ndarray,  # () or [K/g, 1, N]
+    bits: int = 4,
+    group_size: int = 0,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    m, k = x.shape
+    n = w_packed.shape[-1]
+    assert w_packed.shape[-2] * 2 == k
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    if group_size:
+        # a k-block must cover whole groups
+        assert bk % group_size == 0 or group_size % bk == 0
+        bk = max(bk, group_size)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+
+    if group_size == 0:
+        scale_arr = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+        kern = functools.partial(_kernel_pertensor, bits=bits, nk=nk)
+        scale_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+    else:
+        scale_arr = jnp.asarray(scale, jnp.float32)  # [K/g, 1, N]
+        kern = functools.partial(
+            _kernel_group, bits=bits, nk=nk, group_size=group_size
+        )
+        scale_spec = pl.BlockSpec(
+            (bk // group_size, 1, bn), lambda i, j, kk: (kk, 0, j)
+        )
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_packed, scale_arr)

@@ -1,0 +1,68 @@
+"""Jit'd public wrappers around the SLiM Pallas kernels.
+
+``slim_linear_op`` consumes a ``repro.core.compressed.SlimLinear`` directly,
+so model code can swap the XLA path (``slim_linear_apply``) for the kernel
+path with one flag. On a CPU host the kernels run in interpret mode
+(bit-exact semantics, Python-speed); on TPU set ``interpret=False``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressed import SlimLinear
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.group_quant import group_dequantize, group_quantize
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.sparse24_matmul import sparse24_matmul
+from repro.kernels.slim_linear import slim_linear
+
+
+def slim_linear_op(
+    p: SlimLinear, x: jnp.ndarray, interpret: bool = True
+) -> jnp.ndarray:
+    """Kernel-path equivalent of ``core.compressed.slim_linear_apply``."""
+    assert p.packed_vals.ndim == 2, "kernel path takes unstacked layers"
+    if p.fmt == "sparse24":
+        if p.lora_l is not None:
+            return slim_linear(
+                x,
+                p.packed_vals,
+                p.packed_idx,
+                p.scale,
+                p.lora_l,
+                p.lora_r,
+                inv_act_scale=p.inv_act_scale,
+                bits=p.bits,
+                interpret=interpret,
+            )
+        xs = x if p.inv_act_scale is None else x * p.inv_act_scale
+        return sparse24_matmul(
+            xs, p.packed_vals, p.packed_idx, p.scale, bits=p.bits, interpret=interpret
+        )
+    # dense int4 path
+    xs = x if p.inv_act_scale is None else x * p.inv_act_scale
+    y = int4_matmul(
+        xs,
+        p.packed_vals,
+        p.scale,
+        bits=p.bits,
+        group_size=p.group_size,
+        interpret=interpret,
+    )
+    if p.lora_l is not None:
+        y = y + jnp.dot(jnp.dot(x, p.lora_l), p.lora_r)
+    return y
+
+
+__all__ = [
+    "int4_matmul",
+    "sparse24_matmul",
+    "slim_linear",
+    "slim_linear_op",
+    "group_quantize",
+    "group_dequantize",
+    "flash_decode",
+]

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the SLiM Pallas kernels.
+
+Each oracle consumes exactly the HBM layout the kernel consumes and defines
+the semantics the kernel must reproduce (tests assert allclose across
+shape/dtype sweeps). They reuse ``repro.core.packing`` so the oracle and the
+model's XLA execution path (core.compressed) are the same math.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_dense_24, unpack_int4
+
+
+def _dequant(codes: jnp.ndarray, scale, bits: int) -> jnp.ndarray:
+    half = 2 ** (bits - 1)
+    return codes.astype(jnp.float32) * (scale / half)
+
+
+def int4_matmul_ref(
+    x: jnp.ndarray,  # [M, K]
+    w_packed: jnp.ndarray,  # uint8 [K/2, N]
+    scale,  # () f32 per-tensor or [K/g, 1, N] group
+    bits: int = 4,
+    group_size: int = 0,
+) -> jnp.ndarray:
+    codes = unpack_int4(w_packed)  # [K, N]
+    if group_size:
+        k, n = codes.shape
+        w = _dequant(codes.reshape(k // group_size, group_size, n), scale, bits)
+        w = w.reshape(k, n)
+    else:
+        w = _dequant(codes, scale, bits)
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
+def sparse24_matmul_ref(
+    x: jnp.ndarray,  # [M, K]
+    packed_vals: jnp.ndarray,  # uint8 [K/4, N]
+    packed_idx: jnp.ndarray,  # uint8 [K/8, N]
+    scale,  # () f32
+    bits: int = 4,
+) -> jnp.ndarray:
+    k = x.shape[1]
+    codes = unpack_dense_24(packed_vals, packed_idx, k)  # [K, N]
+    w = _dequant(codes, scale, bits)
+    return jnp.dot(x.astype(jnp.float32), w)
+
+
+def slim_linear_ref(
+    x: jnp.ndarray,  # [M, K]
+    packed_vals: jnp.ndarray,  # uint8 [K/4, N]
+    packed_idx: jnp.ndarray,  # uint8 [K/8, N]
+    scale,  # () f32
+    lora_l: jnp.ndarray,  # [K, R]
+    lora_r: jnp.ndarray,  # [R, N]
+    inv_act_scale: Optional[jnp.ndarray] = None,  # [K]
+    bits: int = 4,
+) -> jnp.ndarray:
+    """The full deployed SLiM layer: y = (x*s) @ W_deq + (x @ L) @ R."""
+    k = x.shape[1]
+    codes = unpack_dense_24(packed_vals, packed_idx, k)
+    w = _dequant(codes, scale, bits)
+    xs = x.astype(jnp.float32)
+    xb = xs if inv_act_scale is None else xs * inv_act_scale[None, :]
+    y = jnp.dot(xb, w)
+    y = y + jnp.dot(jnp.dot(xs, lora_l.astype(jnp.float32)), lora_r.astype(jnp.float32))
+    return y
+
+
+def group_quantize_ref(x: jnp.ndarray, g: int = 128, bits: int = 4):
+    """Group-absmax quantize oracle -> (codes uint8 [K/2,N], scales [K/g,1,N])."""
+    from repro.core.packing import pack_int4
+
+    k, n = x.shape
+    half = 2 ** (bits - 1)
+    qmax = half - 1
+    xg = x.astype(jnp.float32).reshape(k // g, g, n)
+    s = jnp.max(jnp.abs(xg), axis=1, keepdims=True)
+    s = jnp.where(s <= 0, 1.0, s)
+    codes = jnp.clip(jnp.round(xg / s * half), -qmax, qmax).reshape(k, n)
+    return pack_int4(codes.astype(jnp.int8)), s.astype(jnp.float32)
+
+
+def group_dequantize_ref(codes, scales, g: int = 128, bits: int = 4):
+    k = codes.shape[0] * 2
+    n = codes.shape[1]
+    half = 2 ** (bits - 1)
+    dense = unpack_int4(codes).astype(jnp.float32)
+    return (dense.reshape(k // g, g, n) * (scales / half)).reshape(k, n)
+
+
+def flash_decode_ref(q, k, v, kv_len):
+    """Single-token attention oracle. q [B,H,dh]; k/v [B,S,H,dh]; kv_len [B]."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = k.shape[1]
+    pos = jnp.arange(s)[None, None, :]
+    scores = jnp.where(pos < kv_len[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

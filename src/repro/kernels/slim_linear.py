@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: the full deployed SLiM layer, fused.
+
+    y = (x * inv_act_scale) @ decompress24(dequant(vals, idx)) + (x @ L) @ R
+
+One pallas_call reads ``x`` once per (m, k) block and produces both the
+compressed-base contribution and the low-rank correction:
+
+  * grid ``(M/bm, N/bn, K/bk)``, k innermost, n middle, m outer;
+  * the LoRA intermediate ``t = x @ L`` ([bm, R], fp32) is accumulated in a
+    VMEM scratch during the ``n == 0`` k-sweep and **reused** for every other
+    n block of the same m row (scratch persists across sequential grid steps
+    on a TPU core) — LoRA left-matmul FLOPs are paid once per m row, not per
+    (m, n) tile;
+  * at the last k step the kernel adds ``t @ R[:, n-block]`` into the output.
+
+The rank R stays resident in VMEM (r = 0.1 d -> [bk, R] and [bm, R] blocks
+are ~1-3 MB at d=12288, within the ~16 MB VMEM budget).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import dequant_sparse24, pick_block
+
+
+def _kernel(
+    x_ref,  # [bm, bk]
+    vals_ref,  # [bk/4, bn]
+    idx_ref,  # [bk/8, bn]
+    scale_ref,  # [1, 1]
+    ias_ref,  # [1, bk] inv act scale
+    l_ref,  # [bk, R]
+    r_ref,  # [R, bn]
+    o_ref,  # [bm, bn]
+    t_ref,  # scratch [bm, R] f32
+    *,
+    bits: int,
+    nk: int,
+):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+
+    # LoRA left factor: accumulate t = x @ L once per m row (n == 0 sweep)
+    @pl.when(jnp.logical_and(j == 0, k == 0))
+    def _tinit():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    @pl.when(j == 0)
+    def _taccum():
+        t_ref[...] += jnp.dot(
+            x, l_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+
+    # compressed base: scale activations, decompress+dequant weights, MXU dot
+    xb = x * ias_ref[0, :][None, :]
+    w = dequant_sparse24(vals_ref[...], idx_ref[...], scale_ref[0, 0], bits)
+    o_ref[...] += jnp.dot(xb, w, preferred_element_type=jnp.float32)
+
+    # final k step: add the low-rank correction for this n block
+    @pl.when(k == nk - 1)
+    def _finish():
+        o_ref[...] += jnp.dot(
+            t_ref[...], r_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret")
+)
+def slim_linear(
+    x: jnp.ndarray,  # [M, K]
+    packed_vals: jnp.ndarray,  # uint8 [K/4, N]
+    packed_idx: jnp.ndarray,  # uint8 [K/8, N]
+    scale: jnp.ndarray,  # ()
+    lora_l: jnp.ndarray,  # [K, R]
+    lora_r: jnp.ndarray,  # [R, N]
+    inv_act_scale: Optional[jnp.ndarray] = None,  # [K]
+    bits: int = 4,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    m, k = x.shape
+    n = packed_vals.shape[-1]
+    r = lora_l.shape[-1]
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = max(8, pick_block(k, bk))
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    scale_arr = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    ias = (
+        jnp.ones((1, k), jnp.float32)
+        if inv_act_scale is None
+        else jnp.asarray(inv_act_scale, jnp.float32).reshape(1, k)
+    )
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 4, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // 8, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bk), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((bk, r), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(x, packed_vals, packed_idx, scale_arr, ias, lora_l, lora_r)

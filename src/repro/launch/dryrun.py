@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# test hook: allow a smaller placeholder-device count (set BEFORE jax init)
+if os.environ.get("DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['DRYRUN_DEVICES']}"
+    )
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell with 512 placeholder host devices and dump memory / cost /
+collective analyses (EXPERIMENTS §Dry-run, §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch mistral-large-123b --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+
+Cells:
+  train_4k    -> train_step   (loss + grads + AdamW update, microbatched)
+  prefill_32k -> prefill_step (cache fill; compressed weights = SLiM serving)
+  decode_32k  -> serve_step   (1 token against a seq_len KV cache, compressed)
+  long_500k   -> serve_step   (only sub-quadratic archs; full-attn archs skip
+                               per DESIGN.md §6)
+
+Two artifacts per cell:
+  * the REAL compile — proves the SPMD partition is coherent; provides
+    memory_analysis (argument/temp bytes per device -> fits-HBM check);
+  * the extrapolated cost analysis (launch/analysis.py) — scan-aware
+    per-device FLOPs / HBM bytes / collective wire bytes for §Roofline.
+
+Everything is lowered from ShapeDtypeStructs — no arrays are allocated.
+"""
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import hw
+from repro.launch.analysis import measure_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.models.config import SHAPES
+
+SKIPPED_LONG = {}  # arch -> reason, reported in the summary
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    mesh_kind: str,
+    compressed_serving: bool = True,
+    verbose: bool = True,
+    n_micro: Optional[int] = None,
+    skip_analysis: bool = False,
+    kv_quant: bool = False,
+    probs_low_precision: bool = False,
+    packed_adapters: bool = False,
+    scan_groups=None,
+    serving_topology: bool = False,
+    gqa_expand: bool = False,
+    moe_ep: bool = False,
+) -> Optional[Dict[str, Any]]:
+    import dataclasses
+
+    from repro.launch.steps import serve_ccfg
+
+    cfg = get_config(arch)
+    if kv_quant or probs_low_precision or gqa_expand or moe_ep:
+        cfg = dataclasses.replace(
+            cfg, kv_quant=kv_quant, attn_probs_low_precision=probs_low_precision,
+            gqa_expand_kv=gqa_expand, moe_expert_parallel=moe_ep,
+        )
+    ccfg = serve_ccfg(cfg, pack_adapters=packed_adapters)
+    cell = SHAPES[shape]
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        SKIPPED_LONG[arch] = (
+            "full attention: 512k dense-KV decode skipped (DESIGN.md §6)"
+        )
+        if verbose:
+            print(f"[skip] {arch} x {shape}: {SKIPPED_LONG[arch]}")
+        return None
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+
+    # 1) the real compile: SPMD coherence proof + memory analysis
+    t0 = time.time()
+    lowered, chips = lower_cell(
+        cfg, cell, mesh, compressed_serving=compressed_serving, n_micro=n_micro,
+        ccfg=ccfg, scan_groups=scan_groups, serving_topology=serving_topology,
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    result: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+            "peak_memory_in_bytes",
+        ):
+            v = getattr(mem, k, None)
+            if v is not None:
+                result[k] = int(v)
+        # peak accounts for donation aliasing — the authoritative per-device
+        # HBM requirement
+        result["per_device_bytes"] = result.get(
+            "peak_memory_in_bytes",
+            result.get("argument_size_in_bytes", 0)
+            + result.get("temp_size_in_bytes", 0),
+        )
+        result["fits_hbm"] = bool(result["per_device_bytes"] <= hw.HBM_BYTES)
+
+    # 2) scan-aware extrapolated roofline terms
+    if not skip_analysis:
+        t0 = time.time()
+        rf = measure_cell(
+            cfg, cell, mesh, compressed_serving=compressed_serving,
+            n_micro=n_micro, ccfg=ccfg, serving_topology=serving_topology,
+        )
+        result["analysis_s"] = round(time.time() - t0, 1)
+        result["roofline"] = rf.row()
+        result["collective_counts"] = rf.collectives.counts
+        result["collective_bytes"] = rf.collectives.bytes_by_kind
+
+    if verbose:
+        line = (
+            f"[ok] {arch} x {shape} x {mesh_kind}({chips}): "
+            f"compile {t_compile:.1f}s | per-dev "
+            f"{result.get('per_device_bytes', 0)/2**30:.2f} GiB "
+            f"fits={result.get('fits_hbm')}"
+        )
+        if "roofline" in result:
+            r = result["roofline"]
+            line += (
+                f" | compute {r['t_compute_s']:.3e}s memory {r['t_memory_s']:.3e}s"
+                f" collective {r['t_collective_s']:.3e}s -> {r['bottleneck']}"
+                f" | useful {r['useful_ratio'] and round(r['useful_ratio'], 3)}"
+            )
+        print(line)
+    return result
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, choices=ASSIGNED + ["slim-tiny"])
+    p.add_argument("--shape", default=None, choices=list(SHAPES))
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true", help="run every cell")
+    p.add_argument("--dense-serving", action="store_true")
+    p.add_argument("--skip-analysis", action="store_true")
+    p.add_argument("--out", default=None, help="write JSON results")
+    p.add_argument("--n-micro", type=int, default=None)
+    # perf-iteration toggles (EXPERIMENTS §Perf)
+    p.add_argument("--kv-quant", action="store_true")
+    p.add_argument("--probs-bf16", action="store_true")
+    p.add_argument("--packed-adapters", action="store_true")
+    p.add_argument("--scan-groups", type=int, default=None)
+    p.add_argument("--serve-topology", action="store_true",
+                   help="replicate weights over dp (TP-only serving)")
+    p.add_argument("--gqa-expand", action="store_true")
+    p.add_argument("--moe-ep", action="store_true",
+                   help="expert-parallel MoE weights (E over model axis)")
+    args = p.parse_args(argv)
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                try:
+                    r = run_cell(
+                        arch, shape, mesh_kind,
+                        compressed_serving=not args.dense_serving,
+                        n_micro=args.n_micro,
+                        skip_analysis=args.skip_analysis,
+                        kv_quant=args.kv_quant,
+                        probs_low_precision=args.probs_bf16,
+                        packed_adapters=args.packed_adapters,
+                        scan_groups=args.scan_groups,
+                        serving_topology=args.serve_topology,
+                        gqa_expand=args.gqa_expand,
+                        moe_ep=args.moe_ep,
+                    )
+                    if r:
+                        results.append(r)
+                except Exception as e:  # a dry-run failure is a bug: surface it
+                    failures.append((arch, shape, mesh_kind, repr(e)))
+                    print(f"[FAIL] {arch} x {shape} x {mesh_kind}: {e!r}")
+
+    print(
+        f"\n=== dry-run summary: {len(results)} ok, {len(failures)} failed, "
+        f"{len(SKIPPED_LONG)} long-context skips ==="
+    )
+    for a, s, m, e in failures:
+        print(f"  FAIL {a} x {s} x {m}: {e[:300]}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(
+                {
+                    "results": results,
+                    "failures": failures,
+                    "skipped_long": SKIPPED_LONG,
+                },
+                f,
+                indent=1,
+            )
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,9 @@
+"""Target hardware constants (TPU v5e) for roofline accounting."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, FLOP/s
+HBM_BW = 819e9  # per chip, B/s
+ICI_BW = 50e9  # per link, B/s (~both directions aggregated per link)
+
+CHIPS_PER_POD = 256
+VMEM_BYTES = 128 * 1024 * 1024  # v5e VMEM (~128 MiB)
+HBM_BYTES = 16 * 1024 ** 3  # 16 GiB per chip

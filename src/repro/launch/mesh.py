@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state; the dryrun sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then asks for the mesh.
+
+Mesh shapes:
+  single-pod : (16, 16)    axes (data, model)           = 256 chips
+  multi-pod  : (2, 16, 16) axes (pod, data, model)      = 512 chips, 2 pods
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)"
+        )
+    import numpy as np
+
+    dev_array = np.array(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires enough host devices)."""
+    import numpy as np
+
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if os.environ.get("DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={os.environ['DRYRUN_DEVICES']}"
+    )
+
+"""Perf-iteration driver (EXPERIMENTS §Perf): run one (arch x shape x mesh)
+cell through a sequence of named optimization steps and print the roofline
+terms + per-device memory before/after each.
+
+    PYTHONPATH=src python -m repro.launch.perf --pair decode
+    PYTHONPATH=src python -m repro.launch.perf --pair prefill --mesh single
+    PYTHONPATH=src python -m repro.launch.perf --pair train
+
+Each registered iteration is a hypothesis (see the inline notes + the
+narrative log in EXPERIMENTS.md §Perf).
+"""
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.launch.dryrun import run_cell
+
+# (step-name, hypothesis, run_cell kwargs)
+Step = Tuple[str, str, Dict[str, Any]]
+
+PAIRS: Dict[str, Dict[str, Any]] = {
+    # the paper-representative pair: compressed decode serving at scale.
+    # baseline is collective-bound (~83%): FSDP-sharded weights are
+    # all-gathered every layer on the decode hot path.
+    "decode": {
+        "arch": "mistral-large-123b",
+        "shape": "decode_32k",
+        "steps": [
+            ("baseline", "paper-faithful deployment on the training topology: "
+             "FSDP+TP weights, bf16 adapters, bf16 KV", {}),
+            ("serve-topology",
+             "decode streams all weights each step; FSDP all-gathers dominate "
+             "wire bytes -> replicate weights over dp, keep TP only [beyond]",
+             {"serving_topology": True}),
+            ("packed-adapters",
+             "bf16 adapters ~= int4 base bytes: int4-pack them (4x fewer bytes)",
+             {"serving_topology": True, "packed_adapters": True}),
+            ("kv-int8",
+             "KV cache dominates remaining decode memory: int8 KV halves it [beyond]",
+             {"serving_topology": True, "packed_adapters": True, "kv_quant": True}),
+            ("gqa-expand",
+             "kv=8 heads cannot shard 16-way: score compute replicates per "
+             "device; expand KV to 96 heads -> shardable [beyond]",
+             {"serving_topology": True, "packed_adapters": True,
+              "kv_quant": True, "gqa_expand": True}),
+        ],
+    },
+    # the memory-bound pair: long-context prefill that overflowed HBM
+    "prefill": {
+        "arch": "mistral-large-123b",
+        "shape": "prefill_32k",
+        "steps": [
+            ("baseline", "f32 softmax probs + f32 PV accumulation", {}),
+            ("probs-bf16",
+             "probs [B,ch,H,32k] f32 is the largest prefill transient: bf16 halves it",
+             {"probs_low_precision": True}),
+            ("probs-bf16+kv-int8",
+             "the produced cache is the other big resident: int8 KV halves it [beyond]",
+             {"probs_low_precision": True, "kv_quant": True}),
+            ("gqa-expand",
+             "shard the 16x-replicated score compute via KV expansion [beyond]",
+             {"probs_low_precision": True, "kv_quant": True, "gqa_expand": True}),
+        ],
+    },
+    # the collective/compute-bound pair: big-model training
+    "train": {
+        "arch": "mistral-large-123b",
+        "shape": "train_4k",
+        "steps": [
+            ("flat-remat", "single-level remat baseline: n_periods saved residuals", {"scan_groups": 1}),
+            ("sqrt-remat",
+             "two-level remat: n_groups + n_periods/n_groups residuals (~9x fewer)",
+             {"scan_groups": None}),  # auto -> sqrt divisor
+            ("micro-x2",
+             "fewer, larger microbatches: halves per-step collective count, "
+             "2x per-microbatch activation memory",
+             {"scan_groups": None, "n_micro": 8}),
+        ],
+    },
+    # MoE decode (EP-vs-TP exploration happens via sharding rules)
+    "moe": {
+        "arch": "mixtral-8x22b",
+        "shape": "decode_32k",
+        "steps": [
+            ("baseline", "TP experts, bf16 adapters/KV", {}),
+            ("packed+kv8",
+             "same weight-stream cuts as dense decode",
+             {"packed_adapters": True, "kv_quant": True}),
+        ],
+    },
+}
+
+
+def run_pair(pair: str, mesh: str = "single", out: Optional[str] = None):  # noqa: C901
+    spec = PAIRS[pair]
+    rows = []
+    print(f"=== §Perf pair '{pair}': {spec['arch']} x {spec['shape']} x {mesh} ===")
+    for name, hypothesis, kw in spec["steps"]:
+        t0 = time.time()
+        r = run_cell(spec["arch"], spec["shape"], mesh, verbose=False, **kw)
+        dt = time.time() - t0
+        row = {
+            "step": name,
+            "hypothesis": hypothesis,
+            "per_device_gib": round(r["per_device_bytes"] / 2 ** 30, 3),
+            "fits": r["fits_hbm"],
+            **{
+                k: r["roofline"][k]
+                for k in ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck", "useful_ratio")
+            },
+            "wall_s": round(dt, 1),
+        }
+        rows.append(row)
+        print(json.dumps(row))
+    # deltas
+    base = rows[0]
+    for r in rows[1:]:
+        print(
+            f"Δ {r['step']}: mem {r['per_device_gib']/max(base['per_device_gib'],1e-9):.2f}x, "
+            f"t_mem {r['t_memory_s']/max(base['t_memory_s'],1e-12):.2f}x, "
+            f"t_coll {r['t_collective_s']/max(base['t_collective_s'],1e-12):.2f}x"
+        )
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--pair", required=True, choices=list(PAIRS))
+    p.add_argument("--mesh", default="single", choices=["single", "multi"])
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+    run_pair(args.pair, args.mesh, args.out)
+
+
+if __name__ == "__main__":
+    main()

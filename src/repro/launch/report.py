@@ -1,0 +1,69 @@
+"""Format dryrun_results.json into the EXPERIMENTS.md §Dry-run / §Roofline
+markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_results.json
+"""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    data = json.load(open(path))
+    results = data["results"]
+
+    print("### §Dry-run (memory / compile)\n")
+    print("| arch | shape | mesh | chips | compile s | peak GiB/dev | fits 16G |")
+    print("|---|---|---|---|---|---|---|")
+    for r in results:
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['compile_s']} | {fmt_bytes(r.get('per_device_bytes', 0))} | "
+            f"{'Y' if r.get('fits_hbm') else 'N'} |"
+        )
+    if data.get("skipped_long"):
+        print("\nSkips (per DESIGN.md §6):")
+        for k, v in data["skipped_long"].items():
+            print(f"- {k} x long_500k: {v}")
+
+    print("\n### §Roofline (per-device, single step)\n")
+    print(
+        "| arch | shape | mesh | t_compute | t_memory | t_collective | "
+        "bottleneck | useful 6ND/HLO | AR | AG | RS | A2A | CP |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in results:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        cc = r.get("collective_counts", {})
+        ur = rf.get("useful_ratio")
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(rf['t_compute_s'])} | {fmt_s(rf['t_memory_s'])} | "
+            f"{fmt_s(rf['t_collective_s'])} | {rf['bottleneck']} | "
+            f"{ur and round(ur, 3)} | "
+            f"{cc.get('all-reduce', 0)} | {cc.get('all-gather', 0)} | "
+            f"{cc.get('reduce-scatter', 0)} | {cc.get('all-to-all', 0)} | "
+            f"{cc.get('collective-permute', 0)} |"
+        )
+
+    # summary stats
+    fails = data.get("failures", [])
+    fits = sum(1 for r in results if r.get("fits_hbm"))
+    print(
+        f"\n{len(results)} cells compiled; {fits} fit 16 GiB/dev; "
+        f"{len(fails)} failures; {len(data.get('skipped_long', {}))} long-ctx skips."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds (EXPERIMENTS §Roofline):
+
+    compute    = HLO_FLOPs      / (chips * PEAK_FLOPS_BF16)
+    memory     = HLO_bytes      / (chips * HBM_BW)
+    collective = wire_bytes     / (chips * ICI_BW)
+
+``cost_analysis()`` supplies FLOPs and bytes. Collective bytes are NOT in
+cost_analysis: we parse the (post-SPMD) compiled HLO text and sum per-op wire
+traffic with the standard algorithm models —
+
+    all-reduce          2 x size      (ring: reduce-scatter + all-gather)
+    all-gather          output size
+    reduce-scatter      input-per-shard x (n-1)/n ~ output size x (n-1)
+    all-to-all          size
+    collective-permute  size
+
+The per-chip second is wire_bytes / chips / ICI_BW — a deliberately simple
+uniform-link model; relative movements (the thing §Perf optimizes) are
+faithful even where absolute ICI seconds are approximate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-reduce.1 = f32[128,1024]{1,0} all-reduce(%x), replica_groups=...
+#        ROOT %t = (bf16[8]{0}, f32[4,4]{1,0}) all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, float]  # wire-model bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    byts: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: count the -start only
+        size = _shape_bytes(type_str)
+        counts[kind] += 1
+        if kind == "all-reduce":
+            wire = 2.0 * size  # ring: reduce-scatter + all-gather passes
+        else:
+            wire = 1.0 * size  # output (AG) / input-shard (RS) / moved (A2A, CP)
+        byts[kind] += wire
+    return CollectiveStats(counts=counts, bytes_by_kind=byts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-device roofline terms.
+
+    ``flops``/``hbm_bytes``/``wire_bytes`` are PER-DEVICE totals for one step
+    (XLA's SPMD-module view — verified: cost_analysis divides by the mesh).
+    ``model_flops`` is the GLOBAL analytic 6·N·D (divide by chips to compare).
+    """
+
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    wire_bytes: float  # per-device collective wire bytes
+    chips: int
+    collectives: CollectiveStats
+    model_flops: Optional[float] = None  # global analytic
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / hw.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / (self.flops * self.chips)
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "useful_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline_from_compiled(
+    compiled, chips: int, model_flops: Optional[float] = None
+) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    stats = parse_collectives(compiled.as_text())
+    return Roofline(
+        flops=flops,
+        hbm_bytes=byts,
+        wire_bytes=stats.total_bytes,
+        chips=chips,
+        collectives=stats,
+        model_flops=model_flops,
+    )
+
+
+def analytic_model_flops(cfg, cell) -> float:
+    """6*N*D for training, 2*N*D(*tokens) for inference (MoE: active params)."""
+    n_active = active_param_count(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    tokens = cell.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def active_param_count(cfg) -> int:
+    """Like param_count but with only top_k of n_experts active per token."""
+    total = cfg.param_count()
+    if not cfg.n_experts:
+        return total
+    # subtract inactive expert params
+    d, f = cfg.d_model, cfg.moe_ff
+    moe_layers = sum(1 for s in cfg.period for _ in [s] if s.moe) * cfg.n_periods
+    expert_params = 3 * d * f
+    inactive = moe_layers * (cfg.n_experts - cfg.top_k) * expert_params
+    return total - inactive

@@ -1,0 +1,77 @@
+"""Serving launcher: batched generation from a (compressed) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch slim-tiny \
+        --batch 8 --prompt-len 64 --new-tokens 32 --compress
+
+Compresses the model one-shot with SLiM (optional), then runs the batched
+decode engine and reports prefill latency + decode tokens/s. On this CPU
+container the numbers are functional smoke only; the TPU roofline story is
+in benchmarks/bench_speedup.py and EXPERIMENTS §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.pipeline import CompressionConfig
+from repro.data import SyntheticLMConfig, calibration_batch, synthetic_batches
+from repro.models import transformer as T
+from repro.models.compress import compress_model, summarize_reports
+from repro.serving import ServeEngine
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="slim-tiny")
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=64)
+    p.add_argument("--new-tokens", type=int, default=32)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--compress", action="store_true")
+    p.add_argument("--rank", type=int, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    data_cfg = SyntheticLMConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=args.prompt_len,
+        global_batch=args.batch,
+        seed=args.seed,
+        d_model=cfg.d_model,
+        vision_tokens=cfg.vision_tokens,
+        input_mode=cfg.input_mode,
+    )
+
+    if args.compress:
+        calib = calibration_batch(data_cfg, n_samples=8)
+        ccfg = CompressionConfig(
+            quantizer="slim", pattern="2:4", pruner="wanda", adapter="slim",
+            rank=args.rank, quantize_adapters=True,
+        )
+        params, reports = compress_model(params, cfg, calib, ccfg)
+        print("[slim]", summarize_reports(reports))
+
+    engine = ServeEngine(
+        params, cfg, max_len=args.prompt_len + args.new_tokens + 8
+    )
+    batch = next(synthetic_batches(data_cfg))
+    batch.pop("labels", None)
+    res = engine.generate(
+        batch, max_new_tokens=args.new_tokens, temperature=args.temperature
+    )
+    print(
+        f"[serve] batch={args.batch} prompt={args.prompt_len} "
+        f"new={res.steps}: prefill {res.prefill_s:.2f}s, "
+        f"decode {res.decode_s:.2f}s ({res.tokens_per_s:.1f} tok/s)"
+    )
+    print("[serve] first slot:", res.tokens[0][:16])
+
+
+if __name__ == "__main__":
+    main()

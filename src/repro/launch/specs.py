@@ -1,0 +1,176 @@
+"""Abstract (ShapeDtypeStruct) inputs for lowering — zero allocation.
+
+``input_specs(cfg, cell)`` returns stand-ins for every model input of a
+(architecture x shape) cell; ``abstract_params`` / ``abstract_slim_params``
+build the parameter trees; everything carries a NamedSharding so
+``jax.jit(...).lower(**specs)`` fixes the distribution without touching
+device memory. This is the pattern the multi-pod dry-run and the roofline
+benchmarks share.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.compressed import SlimLinear
+from repro.core.pipeline import CompressionConfig
+from repro.models import sharding as shard_rules
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeCell
+
+Pytree = Any
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(tree: Pytree, specs: Pytree, mesh: Mesh) -> Pytree:
+    def attach(leaf, spec):
+        if leaf is None:
+            return None
+        return _sds(leaf.shape, leaf.dtype, NamedSharding(mesh, spec))
+
+    return jax.tree.map(attach, tree, specs, is_leaf=lambda x: x is None)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh) -> Pytree:
+    shapes = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = shard_rules.param_specs(shapes, cfg, mesh)
+    return _with_shardings(shapes, specs, mesh)
+
+
+def _slimify(path_names, leaf, cfg: ModelConfig, ccfg: CompressionConfig):
+    """Dense weight SDS [.., K, N] -> abstract SlimLinear (packed layout)."""
+    *lead, k, n = leaf.shape
+    lead = tuple(lead)
+    rank = ccfg.resolve_rank(k)
+    sparse = ccfg.pattern == "2:4"
+    pv_shape = lead + ((k // 4, n) if sparse else (k // 2, n))
+    pi_shape = lead + (k // 8, n) if sparse else None
+    if ccfg.quantizer in ("group_absmax", "optq") and ccfg.group_size:
+        scale_shape = lead + (k // ccfg.group_size, 1, n)
+        gs = ccfg.group_size
+    else:
+        scale_shape = lead
+        gs = 0
+    adapters = ccfg.adapter != "none"
+    if adapters and ccfg.pack_adapters:
+        from repro.core.quantizers import fit_group_size
+
+        gl = fit_group_size(k, ccfg.adapter_group)
+        gr = fit_group_size(rank, ccfg.adapter_group)
+        lora_l = _sds(lead + (k // 2, rank), jnp.uint8)
+        lora_r = _sds(lead + (rank // 2, n), jnp.uint8)
+        lsl = _sds(lead + (k // gl, 1, rank), jnp.float32)
+        lsr = _sds(lead + (rank // gr, 1, n), jnp.float32)
+    elif adapters:
+        lora_l = _sds(lead + (k, rank), jnp.bfloat16)
+        lora_r = _sds(lead + (rank, n), jnp.bfloat16)
+        lsl = lsr = None
+    else:
+        lora_l = lora_r = lsl = lsr = None
+    return SlimLinear(
+        packed_vals=_sds(pv_shape, jnp.uint8),
+        packed_idx=None if pi_shape is None else _sds(pi_shape, jnp.uint8),
+        scale=_sds(scale_shape, jnp.float32),
+        inv_act_scale=(
+            _sds(lead + (k,), jnp.float32) if ccfg.quantizer == "slim_o" else None
+        ),
+        lora_l=lora_l,
+        lora_r=lora_r,
+        lora_scale_l=lsl,
+        lora_scale_r=lsr,
+        d_in=k,
+        d_out=n,
+        bits=ccfg.bits,
+        group_size=gs,
+        fmt="sparse24" if sparse else "dense_int4",
+        adapter_bits=ccfg.adapter_bits
+        if (ccfg.quantize_adapters or ccfg.pack_adapters)
+        else 0,
+        adapter_group=ccfg.adapter_group,
+    )
+
+
+_COMPRESS_NAMES = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "in_proj", "out_proj",
+}
+
+
+def abstract_slim_params(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    ccfg: Optional[CompressionConfig] = None,
+    serving_topology: bool = False,
+) -> Pytree:
+    """Abstract *compressed* parameter tree (the serving deployment format).
+
+    serving_topology: replicate weights over the dp axis (TP-only serving —
+    no per-layer FSDP all-gathers on the decode hot path)."""
+    ccfg = ccfg or CompressionConfig(rank=None, rank_ratio=0.1)
+    shapes = jax.eval_shape(lambda k: T.init_params(cfg, k), jax.random.PRNGKey(0))
+
+    def walk(path, leaf):
+        names = shard_rules._path_names(path)
+        if (
+            names[-1] in _COMPRESS_NAMES
+            and names[0] == "blocks"
+            and leaf.ndim >= 2
+            and leaf.shape[-2] % 8 == 0
+            and leaf.shape[-1] % 2 == 0
+        ):
+            return _slimify(names, leaf, cfg, ccfg)
+        return leaf
+
+    slim = jax.tree_util.tree_map_with_path(walk, shapes)
+    specs = shard_rules.param_specs(slim, cfg, mesh, serving=serving_topology)
+    return _with_shardings(slim, specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# batches / caches
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> Dict[str, Any]:
+    """Model inputs for one (arch x shape) cell, shardings attached."""
+    dp = shard_rules.dp_axes(mesh)
+    b = cell.global_batch
+    s = cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    # batch=1 long-context cells cannot shard the batch dim
+    tok_sh = NamedSharding(mesh, shard_rules._fit((dp, None), (b, s), mesh))
+    emb_sh = NamedSharding(
+        mesh, shard_rules._fit((dp, None, None), (b, s, cfg.d_model), mesh)
+    )
+    if cell.kind in ("train", "prefill"):
+        if cfg.input_mode == "embeddings":
+            batch["embeds"] = _sds((b, s, cfg.d_model), dt, emb_sh)
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32, tok_sh)
+        if cell.kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32, tok_sh)
+        if cfg.vision_tokens:
+            batch["vision_embeds"] = _sds((b, cfg.vision_tokens, cfg.d_model), dt, emb_sh)
+    else:  # decode: one new token against a seq_len cache
+        if cfg.input_mode == "embeddings":
+            batch["embeds"] = _sds((b, 1, cfg.d_model), dt, emb_sh)
+        else:
+            batch["tokens"] = _sds((b, 1), jnp.int32, tok_sh)
+    return batch
+
+
+def cache_specs_abstract(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> Pytree:
+    cache_shapes = jax.eval_shape(
+        lambda: T.init_cache(cfg, cell.global_batch, cell.seq_len)
+    )
+    specs = shard_rules.cache_specs(cache_shapes, cfg, mesh, cell.global_batch)
+    return _with_shardings(cache_shapes, specs, mesh)

@@ -1,0 +1,160 @@
+"""Step builders + cell lowering shared by dryrun, analysis, and benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import CompressionConfig
+from repro.distributed.accum import microbatch_grads
+from repro.launch.specs import (
+    _with_shardings,
+    abstract_params,
+    abstract_slim_params,
+    cache_specs_abstract,
+    input_specs,
+)
+from repro.models import sharding as shard_rules
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+
+def serve_ccfg(cfg: ModelConfig, pack_adapters: bool = False) -> CompressionConfig:
+    """Deployment format for serve cells: SLiM-Quant + 2:4 + SLiM-LoRA^Q."""
+    return CompressionConfig(
+        quantizer="slim", pattern="2:4", adapter="slim",
+        rank=None, rank_ratio=0.1, quantize_adapters=True,
+        pack_adapters=pack_adapters,
+    )
+
+
+def default_n_micro(cfg: ModelConfig, cell: ShapeCell, mesh) -> int:
+    dp = 1
+    for a in shard_rules.dp_axes(mesh):
+        dp *= mesh.shape[a]
+    return max(1, cell.global_batch // dp)  # microbatch of 1 seq per device
+
+
+def moment_dtype_for(cfg: ModelConfig) -> str:
+    return "bfloat16" if cfg.param_count() > 2e10 else "float32"
+
+
+def build_train_step(cfg: ModelConfig, n_micro: int, moment_dtype: str):
+    opt_init, opt_update = adamw(1e-4, moment_dtype=moment_dtype)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = microbatch_grads(
+            lambda p, b: T.train_loss(p, cfg, b), params, batch, n_micro
+        )
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, gnorm
+
+    return train_step, opt_init, opt_update
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh, params, opt_init):
+    opt_state = jax.eval_shape(opt_init, params)
+    pspecs = shard_rules.param_specs(params, cfg, mesh)
+    ospecs = shard_rules.opt_specs(opt_state, pspecs)
+    return _with_shardings(opt_state, ospecs, mesh)
+
+
+def _sqrt_divisor(n: int) -> int:
+    """Largest divisor of n that is <= sqrt(n) (sqrt-remat group count)."""
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            best = d
+        d += 1
+    return best
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    cell: ShapeCell,
+    mesh,
+    compressed_serving: bool = True,
+    n_micro: Optional[int] = None,
+    donate: bool = True,
+    fb_only: bool = False,
+    scan_groups: Optional[int] = None,  # None=auto (sqrt), 1=flat remat
+    ccfg: Optional[CompressionConfig] = None,  # serve compression format
+    serving_topology: bool = False,  # replicate weights over dp (TP-only)
+):
+    """Lower one (arch x shape) cell on `mesh`. Returns (lowered, chips).
+
+    fb_only: lower just value_and_grad (no optimizer) — the analysis variant.
+    """
+    chips = mesh.devices.size
+    with mesh:
+        if cell.kind == "train":
+            if scan_groups is None and not cfg.unroll_layers:
+                scan_groups = _sqrt_divisor(cfg.n_periods)
+            if scan_groups and scan_groups > 1:
+                cfg = dataclasses.replace(cfg, scan_groups=scan_groups)
+            if n_micro is None:
+                n_micro = default_n_micro(cfg, cell, mesh)
+            params = abstract_params(cfg, mesh)
+            batch = input_specs(cfg, cell, mesh)
+            if fb_only:
+                def fb_step(params, batch):
+                    return microbatch_grads(
+                        lambda p, b: T.train_loss(p, cfg, b), params, batch, n_micro
+                    )
+
+                return jax.jit(fb_step).lower(params, batch), chips
+            step, opt_init, _ = build_train_step(
+                cfg, n_micro, moment_dtype_for(cfg)
+            )
+            opt_state = abstract_opt_state(cfg, mesh, params, opt_init)
+            jitted = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+            return jitted.lower(params, opt_state, batch), chips
+
+        params = (
+            abstract_slim_params(
+                cfg, mesh, ccfg or serve_ccfg(cfg),
+                serving_topology=serving_topology,
+            )
+            if compressed_serving
+            else abstract_params(cfg, mesh)
+        )
+        batch = input_specs(cfg, cell, mesh)
+        if cell.kind == "prefill":
+
+            def prefill_step(params, batch):
+                return T.prefill(params, cfg, batch, max_len=cell.seq_len)
+
+            return jax.jit(prefill_step).lower(params, batch), chips
+
+        # decode
+        cache = cache_specs_abstract(cfg, cell, mesh)
+        tok = batch.get("tokens", batch.get("embeds"))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, cache, tok, pos):
+            return T.decode_step(params, cfg, cache, tok, pos)
+
+        jitted = jax.jit(serve_step, donate_argnums=(1,) if donate else ())
+        return jitted.lower(params, cache, tok, pos), chips
+
+
+def lower_opt_only(cfg: ModelConfig, mesh):
+    """Lower just the optimizer update over the full parameter tree."""
+    with mesh:
+        params = abstract_params(cfg, mesh)
+        _, opt_init, opt_update = build_train_step(cfg, 1, moment_dtype_for(cfg))
+        opt_state = abstract_opt_state(cfg, mesh, params, opt_init)
+        grads = params  # same shapes/shardings as a gradient tree
+
+        def opt_step(grads, opt_state, params):
+            g, _ = clip_by_global_norm(grads, 1.0)
+            updates, opt_state = opt_update(g, opt_state, params)
+            return apply_updates(params, updates), opt_state
+
+        return jax.jit(opt_step).lower(grads, opt_state, params), mesh.devices.size

@@ -1,0 +1,167 @@
+"""Model-level SLiM compression driver.
+
+Walks a model's parameter tree, calibrates per-linear activation statistics
+by running the (eager) forward with capture hooks, and replaces each eligible
+weight matrix with its compressed ``SlimLinear``. Compression is
+**sequential** in the OBS convention: period k is calibrated on activations
+produced by the already-compressed periods < k, so each layer compensates the
+error its predecessors introduced (same protocol as SparseGPT / Wanda).
+
+Eligible weights: the transformer-block matmuls — attention q/k/v/o, MLP
+gate/up/down, MoE expert stacks (per-expert statistics), SSM in/out
+projections. Routers, norms, convs, SSM scalars, embeddings and the LM head
+stay dense (paper §T: only block matmuls are compressed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressed import SlimLinear
+from repro.core.pipeline import CalibStats, CompressionConfig, CompressionReport, compress_matrix
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+# weight names eligible for compression, per layer kind
+_ELIGIBLE = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "in_proj", "out_proj"}
+_MOE_ELIGIBLE = {"w_gate", "w_up", "w_down"}
+
+
+def _tree_slice(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _stack_slim(items: List[SlimLinear]) -> SlimLinear:
+    """Stack per-period (or per-expert) SlimLinears along a new leading dim."""
+    leaves = []
+    from repro.core.compressed import _SLIM_FIELDS
+    for f in _SLIM_FIELDS:
+        vals = [getattr(it, f) for it in items]
+        if any(v is None for v in vals):
+            assert all(v is None for v in vals), f"inconsistent field {f}"
+            leaves.append(None)
+        else:
+            leaves.append(jnp.stack(vals))
+    proto = items[0]
+    return SlimLinear(*leaves, *proto._aux())
+
+
+def compress_model(
+    params: Params,
+    cfg: ModelConfig,
+    calib_batch: Params,
+    ccfg: CompressionConfig,
+    verbose: bool = False,
+) -> Tuple[Params, Dict[str, CompressionReport]]:
+    """Returns (compressed params, per-matrix reports)."""
+    x = T.embed_inputs(params, cfg, calib_batch)
+    vision = calib_batch.get("vision_embeds")
+    reports: Dict[str, CompressionReport] = {}
+    new_periods: List[Params] = []
+
+    for pi in range(cfg.n_periods):
+        pp = _tree_slice(params["blocks"], pi)
+        # (1) calibrate this period on activations from compressed prefix
+        stats: Dict[str, CalibStats] = {}
+        with L.capture_scope(stats, with_hessian=ccfg.needs_hessian):
+            x_next, _, _ = T._apply_period(cfg, pp, x, None, 0, vision)
+
+        # (2) compress each eligible matrix in this period
+        new_pp = jax.tree_util.tree_map(lambda a: a, pp)  # shallow-ish copy
+        for li, spec in enumerate(cfg.period):
+            lname = f"layer_{li}"
+            lp = dict(new_pp[lname])
+            for wname in list(lp.keys()):
+                if wname in ("mlp", "moe"):
+                    sub = dict(lp[wname])
+                    for swname in list(sub.keys()):
+                        if wname == "moe" and swname in _MOE_ELIGIBLE:
+                            e = sub[swname].shape[0]
+                            per_exp = []
+                            for ei in range(e):
+                                key = f"{lname}/expert_{ei}/{swname}"
+                                st = stats.get(key)
+                                if st is None:
+                                    continue
+                                sl, rep = compress_matrix(sub[swname][ei], st, ccfg)
+                                reports[f"p{pi}/{key}"] = rep
+                                per_exp.append(sl)
+                            if len(per_exp) == e:
+                                sub[swname] = _stack_slim(per_exp)
+                        elif wname == "mlp" and swname in _ELIGIBLE:
+                            key = f"{lname}/{swname}"
+                            st = stats.get(key)
+                            if st is not None:
+                                sl, rep = compress_matrix(sub[swname], st, ccfg)
+                                reports[f"p{pi}/{key}"] = rep
+                                sub[swname] = sl
+                    lp[wname] = sub
+                elif wname in _ELIGIBLE:
+                    key = f"{lname}/{wname}"
+                    st = stats.get(key)
+                    if st is not None:
+                        sl, rep = compress_matrix(lp[wname], st, ccfg)
+                        reports[f"p{pi}/{key}"] = rep
+                        lp[wname] = sl
+            new_pp[lname] = lp
+        new_periods.append(new_pp)
+        if verbose:
+            done = sum(1 for k in reports if k.startswith(f"p{pi}/"))
+            print(f"period {pi}: compressed {done} matrices")
+
+        # (3) advance calibration activations through the *compressed* period
+        x, _, _ = T._apply_period(cfg, new_pp, x, None, 0, vision)
+
+    # stack periods back for the scan
+    def stack_periods(paths: List[Params]) -> Params:
+        out = {}
+        for k in paths[0]:
+            vals = [p[k] for p in paths]
+            if isinstance(vals[0], dict):
+                out[k] = stack_periods(vals)
+            elif isinstance(vals[0], SlimLinear):
+                out[k] = _stack_slim(vals)
+            else:
+                out[k] = jnp.stack(vals)
+        return out
+
+    new_params = dict(params)
+    new_params["blocks"] = stack_periods(new_periods)
+    return new_params, reports
+
+
+# ---------------------------------------------------------------------------
+# PEFT support: trainable-mask over the compressed tree (adapters only)
+# ---------------------------------------------------------------------------
+
+def peft_mask(params: Params) -> Params:
+    """1.0 for trainable leaves (LoRA factors), 0.0 elsewhere."""
+
+    def mask_path(path, leaf):
+        names = [getattr(p, "name", getattr(p, "key", None)) for p in path]
+        trainable = any(n in ("lora_l", "lora_r") for n in names)
+        return jnp.float32(1.0) if trainable else jnp.float32(0.0)
+
+    return jax.tree_util.tree_map_with_path(mask_path, params)
+
+
+def summarize_reports(reports: Dict[str, CompressionReport]) -> Dict[str, float]:
+    if not reports:
+        return {}
+    tot_before = sum(r.total_err_before for r in reports.values())
+    tot_after = sum(r.total_err_after for r in reports.values())
+    sal_before = sum(r.saliency_err_before for r in reports.values())
+    sal_after = sum(r.saliency_err_after for r in reports.values())
+    return {
+        "n_matrices": len(reports),
+        "err_before": tot_before,
+        "err_after": tot_after,
+        "err_reduction": 1.0 - tot_after / max(tot_before, 1e-12),
+        "saliency_err_reduction": 1.0 - sal_after / max(sal_before, 1e-12),
+    }

@@ -1,0 +1,181 @@
+"""Model configuration for the architecture zoo.
+
+A model is a stack of ``n_layers`` decoder layers described by a repeating
+``period``: a tuple of ``LayerSpec`` (kind in {attn, ssm, cross_attn}, plus
+an MoE flag). Homogeneous archs have period length 1; Jamba's 1:7
+attn:mamba interleave with MoE every 2nd layer has period length 8;
+Llama-3.2-Vision's cross-attention insertion has period length 5. The
+forward pass scans over ``n_layers // len(period)`` period instances with
+stacked parameters, keeping the lowered HLO small at 100-layer scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str  # "attn" | "ssm" | "cross_attn"
+    moe: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    # attention features
+    qk_norm: bool = False
+    sliding_window: int = 0  # 0 = full attention
+    rope_theta: float = 10000.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # 0 -> use d_ff
+    capacity_factor: float = 1.25
+    moe_group: int = 512  # dispatch group length (tokens)
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+    # layer layout
+    period: Tuple[LayerSpec, ...] = (LayerSpec("attn"),)
+    # cross-attention (VLM)
+    vision_tokens: int = 0  # stub frontend sequence length
+    # input mode: "tokens" | "embeddings" (audio/frame stub)
+    input_mode: str = "tokens"
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    # attention chunking for memory (flash-style scan over query blocks)
+    q_chunk: int = 512
+    # loss vocab chunking (never materialize [B,S,V])
+    vocab_chunk: int = 2048
+    # unroll the layer scan into straight-line HLO — used by the cost
+    # analysis (XLA cost_analysis counts while-bodies once); real runs scan.
+    unroll_layers: bool = False
+    # two-level (sqrt) remat: scan over `scan_groups` groups of periods, each
+    # group rematerialized as a unit -> activation memory drops from
+    # O(n_periods) to O(n_groups + n_periods/n_groups) residuals. 0 = flat.
+    scan_groups: int = 0
+    # --- perf-iteration toggles (EXPERIMENTS §Perf; defaults = baseline) ---
+    # cast softmax probabilities to the value dtype for the PV matmul
+    # (flash-attention convention): halves the largest prefill live buffer.
+    attn_probs_low_precision: bool = False
+    # store the KV cache as int8 with per-(position, head) scales: 2x decode
+    # cache memory + bandwidth (beyond-paper).
+    kv_quant: bool = False
+    # expert parallelism: shard the expert dim of MoE weight stacks over the
+    # model axis (requires n_experts % model_size == 0, e.g. E=16 on 16-way);
+    # dispatch/combine become all-to-alls instead of TP partial-sums.
+    moe_expert_parallel: bool = False
+    # expand KV heads to the full query-head count before attention: GQA
+    # kv=8 cannot shard on a 16-way model axis (XLA replicates the score
+    # compute per device); expanded heads shard cleanly. Costs repeated-K
+    # bytes, wins per-device FLOPs/sharding at kv < model_parallelism.
+    gqa_expand_kv: bool = False
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.period) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"period={len(self.period)}"
+        )
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.period)
+
+    @property
+    def d_q(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def moe_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def has_attention(self) -> bool:
+        return any(s.kind in ("attn", "cross_attn") for s in self.period)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if long-context decode is feasible: SSM/hybrid or SWA."""
+        kinds = {s.kind for s in self.period}
+        if kinds == {"ssm"}:
+            return True
+        if "attn" in kinds and self.sliding_window == 0 and "ssm" not in kinds:
+            return False
+        return True  # hybrid (bounded attn share) or sliding-window
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matmuls + embeddings + norms)."""
+        d = self.d_model
+        total = 0
+        for spec in self.period:
+            if spec.kind in ("attn", "cross_attn"):
+                total += d * self.d_q + 2 * d * self.d_kv + self.d_q * d
+                if self.qk_norm:
+                    total += 2 * self.d_head
+                if spec.kind == "cross_attn":
+                    total += 2  # gates
+            elif spec.kind == "ssm":
+                proj_out = 2 * self.ssm_inner + 2 * self.ssm_groups * self.ssm_state + self.ssm_heads
+                total += d * proj_out
+                total += self.ssm_inner * d  # out_proj
+                conv_dim = self.ssm_inner + 2 * self.ssm_groups * self.ssm_state
+                total += conv_dim * self.ssm_conv
+                total += 3 * self.ssm_heads  # A_log, D, dt_bias
+                total += self.ssm_inner  # gated norm scale
+            if spec.moe:
+                total += d * self.n_experts  # router
+                total += self.n_experts * 3 * d * self.moe_ff
+            else:
+                total += 3 * d * self.d_ff
+            total += 2 * d  # the two pre-norms (approx; ssm uses one)
+        total *= self.n_periods
+        total += self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            total += d * self.vocab_size  # lm_head
+        total += d  # final norm
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Input shape cells (assigned shapes; LM-family)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,642 @@
+"""Layer zoo: RMSNorm, RoPE, GQA attention (flash-style query chunking,
+sliding-window ring cache, qk-norm), SwiGLU MLP, MoE (GShard-style grouped
+one-hot dispatch with capacity), Mamba2 SSD (chunked matmul form + recurrent
+decode step), and gated cross-attention (VLM).
+
+Every matmul goes through ``linear`` which dispatches on the parameter leaf
+type: a plain jnp array (dense path) or a ``SlimLinear`` (the compressed
+deployed format) — so one forward definition serves dense training,
+compressed serving, and PEFT.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressed import (
+    SlimLinear,
+    adapter_factors,
+    dequantize_base,
+    slim_linear_apply,
+)
+from repro.models.config import LayerSpec, ModelConfig
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Calibration capture: when a capture dict is installed (eager execution
+# only), every named linear records its input activations into a CalibStats
+# keyed by the current scope path — this is how the SLiM pipeline gets
+# per-matrix x statistics without a second forward implementation.
+# ---------------------------------------------------------------------------
+
+_CAPTURE: Optional[Dict[str, Any]] = None
+_CAPTURE_HESSIAN: bool = False
+_SCOPE: List[str] = []
+
+
+@contextlib.contextmanager
+def capture_scope(store: Dict[str, Any], with_hessian: bool = False):
+    global _CAPTURE, _CAPTURE_HESSIAN
+    prev, prev_h = _CAPTURE, _CAPTURE_HESSIAN
+    _CAPTURE, _CAPTURE_HESSIAN = store, with_hessian
+    try:
+        yield store
+    finally:
+        _CAPTURE, _CAPTURE_HESSIAN = prev, prev_h
+
+
+@contextlib.contextmanager
+def scope(name: str):
+    _SCOPE.append(name)
+    try:
+        yield
+    finally:
+        _SCOPE.pop()
+
+
+def _record(name: str, x: jnp.ndarray):
+    if _CAPTURE is None or name is None:
+        return
+    from repro.core.pipeline import CalibStats
+
+    key = "/".join(_SCOPE + [name])
+    st = _CAPTURE.get(key)
+    if st is None:
+        st = CalibStats.init(x.shape[-1], with_hessian=_CAPTURE_HESSIAN)
+    _CAPTURE[key] = st.update(x)
+
+
+def linear(p, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
+    """x [..., d_in] @ p -> [..., d_out]; p dense [d_in, d_out] or SlimLinear."""
+    _record(name, x)
+    if isinstance(p, SlimLinear):
+        lead = x.shape[:-1]
+        y = slim_linear_apply(p, x.reshape(-1, x.shape[-1]), compute_dtype=jnp.float32)
+        return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+    return jnp.dot(x, p.astype(x.dtype))
+
+
+def expert_matmul(p, xd: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
+    """MoE expert matmul: xd [n, E, C, K] @ p[E, K, M] -> [n, E, C, M].
+
+    Handles dense stacks and SlimLinear expert stacks (base + per-expert
+    LoRA). Capture records per-expert input stats (dispatch zero-padding
+    scales all channels uniformly, leaving saliency rankings intact).
+    """
+    if _CAPTURE is not None and name is not None:
+        e = xd.shape[1]
+        for ei in range(e):
+            with scope(f"expert_{ei}"):
+                _record(name, xd[:, ei].reshape(-1, xd.shape[-1]))
+    if isinstance(p, SlimLinear):
+        w = dequantize_base(p, jnp.float32)  # [E, K, M]
+        y = jnp.einsum("neck,ekm->necm", xd, w)
+        l, r = adapter_factors(p, xd.dtype)
+        if l is not None:
+            t = jnp.einsum("neck,ekr->necr", xd, l)
+            y = y + jnp.einsum("necr,erm->necm", t, r)
+        return y
+    return jnp.einsum("neck,ekm->necm", xd, p.astype(xd.dtype))
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, H, dh], positions [..., S] (broadcastable) -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core — flash-style scan over query chunks (bounded memory),
+# GQA via (KV, rep) head grouping, causal + optional sliding window.
+# ---------------------------------------------------------------------------
+
+def _attend_block(
+    q: jnp.ndarray,  # [B, Sq, KV, rep, dh]
+    k: jnp.ndarray,  # [B, Skv, KV, dh]
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # [Sq] or [B, Sq] absolute positions of queries
+    kv_pos: jnp.ndarray,  # [Skv] or [B, Skv] absolute positions of keys (-1 = invalid)
+    window: int,
+    probs_low_precision: bool = False,
+) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum(
+        "bqgrd,bsgd->bgrqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qp = q_pos if q_pos.ndim == 2 else q_pos[None, :]
+    kp = kv_pos if kv_pos.ndim == 2 else kv_pos[None, :]
+    valid = (kp[:, None, :] <= qp[:, :, None]) & (kp[:, None, :] >= 0)
+    if window > 0:
+        valid &= kp[:, None, :] > (qp[:, :, None] - window)
+    scores = jnp.where(valid[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if probs_low_precision:
+        # flash-attention convention: PV matmul in the value dtype — halves
+        # the largest live buffer of long-context prefill (§Perf memory)
+        probs = probs.astype(v.dtype)
+        out = jnp.einsum("bgrqs,bsgd->bqgrd", probs, v)
+    else:
+        out = jnp.einsum("bgrqs,bsgd->bqgrd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mha(
+    q: jnp.ndarray,  # [B, Sq, H, dh]
+    k: jnp.ndarray,  # [B, Skv, KV, dh]
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,  # [Sq] absolute positions
+    kv_pos: jnp.ndarray,  # [Skv] absolute key positions (-1 invalid)
+    window: int = 0,
+    q_chunk: int = 512,
+    probs_low_precision: bool = False,
+    expand_kv: bool = False,
+) -> jnp.ndarray:
+    """Memory-bounded attention: scores never exceed [B, ch, H, Skv]."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    if expand_kv and kv < h:
+        # GQA-expand: repeat K/V to the full head count so the head dim
+        # shards on wide model axes (kv=8 on 16-way replicates otherwise)
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+        kv = h
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, dh)
+    if sq <= q_chunk:
+        out = _attend_block(qg, k, v, q_pos, kv_pos, window, probs_low_precision)
+        return out.reshape(b, sq, h, dh)
+    if sq % q_chunk != 0:
+        # pad queries up to a chunk multiple; padded outputs are sliced away
+        pad = q_chunk - sq % q_chunk
+        qg = jnp.concatenate([qg, jnp.zeros((b, pad, kv, rep, dh), qg.dtype)], 1)
+        q_pos = jnp.concatenate([q_pos, jnp.full((pad,), q_pos[-1], q_pos.dtype)])
+        out = mha(
+            qg.reshape(b, sq + pad, h, dh), k, v, q_pos, kv_pos, window,
+            q_chunk, probs_low_precision,
+        )
+        return out[:, :sq]
+    nc = sq // q_chunk
+    qc = qg.reshape(b, nc, q_chunk, kv, rep, dh)
+    qc = jnp.moveaxis(qc, 1, 0)  # [nc, B, ch, KV, rep, dh]
+    qp = q_pos.reshape(nc, q_chunk)
+
+    def body(_, xs):
+        qblk, qpblk = xs
+        out = _attend_block(qblk, k, v, qpblk, kv_pos, window, probs_low_precision)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qc, qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Self-attention layer (train / prefill / single-token decode w/ ring cache)
+# ---------------------------------------------------------------------------
+
+def _qk_normalize(q, k, p, cfg):
+    if not cfg.qk_norm:
+        return q, k
+    q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k
+
+
+def _kv_quantize(t: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[B, S, KV, dh] -> (int8 codes, f32 scale [B, S, KV])."""
+    s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    codes = jnp.clip(jnp.round(t.astype(jnp.float32) / s[..., None]), -127, 127)
+    return codes.astype(jnp.int8), s.astype(jnp.float32)
+
+
+def _kv_dequantize(codes: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_layer(
+    p: Params,
+    x: jnp.ndarray,  # [B, S, D]
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,
+    pos0: Any = 0,  # int or traced scalar: absolute position of x[:, 0]
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, _ = x.shape
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = linear(p["wq"], h, "wq").reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = linear(p["wk"], h, "wk").reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = linear(p["wv"], h, "wv").reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q, k = _qk_normalize(q, k, p, cfg)
+    positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    plp = cfg.attn_probs_low_precision
+    xkv = cfg.gqa_expand_kv
+
+    def store(t):
+        return _kv_quantize(t) if cfg.kv_quant else (t, None)
+
+    new_cache = None
+    if cache is None:
+        # training: self-contained sequence
+        kv_pos = jnp.arange(s, dtype=jnp.int32)
+        out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
+    elif s > 1:
+        # prefill: fill the cache (ring layout if sliding window)
+        c_len = cache["k"].shape[1]
+        kq, ks = store(k)
+        vq, vs = store(v)
+        if c_len >= s:
+            upd = lambda buf, val, nd: jax.lax.dynamic_update_slice(
+                buf, val, (0,) * nd
+            )
+            ck = upd(cache["k"], kq, 4)
+            cv = upd(cache["v"], vq, 4)
+            cp = jax.lax.dynamic_update_slice(
+                cache["pos"], jnp.broadcast_to(positions[None], (b, s)), (0, 0)
+            )
+            new_cache = {"k": ck, "v": cv, "pos": cp}
+            if cfg.kv_quant:
+                new_cache["k_scale"] = upd(cache["k_scale"], ks, 3)
+                new_cache["v_scale"] = upd(cache["v_scale"], vs, 3)
+        else:
+            # sliding-window ring: keep the last c_len positions; roll so
+            # slot i holds pos (s - c_len + i) — decode writes at pos % c_len
+            shift = (s - c_len) % c_len
+            ring = lambda t: jnp.roll(t[:, s - c_len :], shift, axis=1)
+            new_cache = {
+                "k": ring(kq),
+                "v": ring(vq),
+                "pos": jnp.roll(
+                    jnp.broadcast_to(positions[None, s - c_len :], (b, c_len)),
+                    shift, axis=1,
+                ),
+            }
+            if cfg.kv_quant:
+                new_cache["k_scale"] = ring(ks)
+                new_cache["v_scale"] = ring(vs)
+        kv_pos = jnp.arange(s, dtype=jnp.int32)
+        out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
+    else:
+        # single-token decode against the cache (ring if windowed)
+        c_len = cache["k"].shape[1]
+        slot = jnp.asarray(pos0, jnp.int32) % c_len
+        kq, ks = store(k)
+        vq, vs = store(v)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        cp = jax.lax.dynamic_update_slice(
+            cache["pos"],
+            jnp.broadcast_to(jnp.asarray(pos0, jnp.int32)[None, None], (b, 1)),
+            (0, slot),
+        )
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        if cfg.kv_quant:
+            new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, slot, 0)
+            )
+            new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, slot, 0)
+            )
+            kd = _kv_dequantize(ck, new_cache["k_scale"], x.dtype)
+            vd = _kv_dequantize(cv, new_cache["v_scale"], x.dtype)
+        else:
+            kd, vd = ck, cv
+        out = mha(q, kd, vd, positions, cp, cfg.sliding_window, cfg.q_chunk, plp, xkv)
+    out = out.reshape(b, s, cfg.d_q)
+    return x + linear(p["wo"], out, "wo").astype(x.dtype), new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, b: int, max_len: int, dtype) -> Params:
+    c_len = max_len
+    if cfg.sliding_window:
+        c_len = min(max_len, cfg.sliding_window)
+    kv_dt = jnp.int8 if cfg.kv_quant else dtype
+    cache = {
+        "k": jnp.zeros((b, c_len, cfg.n_kv_heads, cfg.d_head), kv_dt),
+        "v": jnp.zeros((b, c_len, cfg.n_kv_heads, cfg.d_head), kv_dt),
+        "pos": -jnp.ones((b, c_len), jnp.int32),  # -1 = invalid slot
+    }
+    if cfg.kv_quant:
+        cache["k_scale"] = jnp.zeros((b, c_len, cfg.n_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros((b, c_len, cfg.n_kv_heads), jnp.float32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Gated cross-attention layer (Llama-3.2-Vision style): cross-attn to the
+# (stub) vision embeddings + its own gated FFN. Vision K/V are static during
+# decode — cached at prefill.
+# ---------------------------------------------------------------------------
+
+def cross_attention_layer(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    vision: Optional[jnp.ndarray],  # [B, Tv, D] or None when cached
+    cache: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, _ = x.shape
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    q = linear(p["wq"], h, "wq").reshape(b, s, cfg.n_heads, cfg.d_head)
+    new_cache = None
+    if cache is not None and vision is None:
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        hv = vision.astype(x.dtype)
+        k = linear(p["wk"], hv, "wk").reshape(b, -1, cfg.n_kv_heads, cfg.d_head)
+        v = linear(p["wv"], hv, "wv").reshape(b, -1, cfg.n_kv_heads, cfg.d_head)
+        if cache is not None:
+            new_cache = {"k": k, "v": v}
+    tv = k.shape[1]
+    q_pos = jnp.full((s,), tv, jnp.int32)  # attend over all vision tokens
+    kv_pos = jnp.arange(tv, dtype=jnp.int32)
+    out = mha(
+        q, k, v, q_pos, kv_pos, 0, cfg.q_chunk, cfg.attn_probs_low_precision
+    ).reshape(b, s, cfg.d_q)
+    x = x + jnp.tanh(p["gate_attn"].astype(jnp.float32)).astype(x.dtype) * linear(
+        p["wo"], out, "wo"
+    ).astype(x.dtype)
+    hm = rmsnorm(x, p["ln_mlp"], cfg.norm_eps)
+    mlp_out = swiglu(p, hm)
+    x = x + jnp.tanh(p["gate_mlp"].astype(jnp.float32)).astype(x.dtype) * mlp_out
+    return x, new_cache
+
+
+def init_cross_cache(cfg: ModelConfig, b: int, dtype) -> Params:
+    return {
+        "k": jnp.zeros((b, cfg.vision_tokens, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((b, cfg.vision_tokens, cfg.n_kv_heads, cfg.d_head), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(p: Params, h: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(linear(p["w_gate"], h, "w_gate").astype(jnp.float32))
+    u = linear(p["w_up"], h, "w_up").astype(jnp.float32)
+    return linear(p["w_down"], (g * u).astype(h.dtype), "w_down").astype(h.dtype)
+
+
+def mlp_layer(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    return x + swiglu(p, h)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k, GShard-style grouped dispatch with static capacity).
+#
+# Tokens are processed in groups of `cfg.moe_group`; within a group each
+# expert accepts at most C = ceil(g * top_k / E * capacity_factor) tokens
+# (overflow dropped — the standard capacity formulation). Dispatch/combine
+# are one-hot einsums: ~1-2% FLOP overhead vs expert matmuls at our shapes,
+# fully shardable (experts on the model axis -> XLA inserts all-to-alls).
+# ---------------------------------------------------------------------------
+
+def moe_layer(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss). x [B, S, D]."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    tokens = h.reshape(b * s, d)
+    n = tokens.shape[0]
+    g = min(cfg.moe_group, n)
+    while n % g != 0:  # largest divisor of n <= moe_group (odd batch shapes)
+        g -= 1
+    ng = n // g
+    cap = max(1, int(math.ceil(g * k / e * cfg.capacity_factor)))
+    cap = min(cap, g)
+
+    tg = tokens.reshape(ng, g, d)
+    logits = linear(p["router"], tg.astype(jnp.float32))  # [ng, g, E]
+    top_vals, top_idx = jax.lax.top_k(logits, k)  # [ng, g, k]
+    gates = jax.nn.softmax(top_vals, axis=-1)  # mixtral: softmax over top-k
+
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # [ng, g, k, E]
+    # position of each (token, slot) within its expert queue, counted over
+    # the flattened (g, k) order
+    flat = onehot.reshape(ng, g * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # exclusive prefix count
+    pos = pos.reshape(ng, g, k, e)
+    in_cap = (pos < cap).astype(jnp.float32) * onehot
+    pos_clip = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(pos_clip, cap, dtype=jnp.float32)  # [ng,g,k,E,C]
+    dispatch = jnp.einsum("ngke,ngkec->ngec", in_cap, slot_oh)  # {0,1}
+    combine = jnp.einsum("ngk,ngke,ngkec->ngec", gates, in_cap, slot_oh)
+
+    xd = jnp.einsum("ngec,ngd->necd", dispatch, tg.astype(jnp.float32))
+    act = jax.nn.silu(expert_matmul(p["w_gate"], xd, "w_gate"))
+    act = act * expert_matmul(p["w_up"], xd, "w_up")
+    ye = expert_matmul(p["w_down"], act, "w_down")
+    y = jnp.einsum("ngec,necd->ngd", combine, ye)
+    y = y.reshape(b, s, d).astype(x.dtype)
+
+    # Switch-style load-balance aux loss
+    probs = jax.nn.softmax(logits, axis=-1)
+    importance = jnp.mean(probs, axis=1)  # [ng, E]
+    load = jnp.mean(onehot.sum(axis=2), axis=1)  # [ng, E]
+    aux = e * jnp.mean(jnp.sum(importance * load, axis=-1))
+    return x + y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) layer — chunked matmul form (train/prefill) + recurrent step
+# (decode). State-space duality per arXiv:2405.21060, matmul-rich for the MXU.
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x [..., L] -> [..., L, L] with out[l, s] = sum_{s < j <= l} x[j]."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    xh: jnp.ndarray,  # [B, L, H, P]
+    dt: jnp.ndarray,  # [B, L, H] (post-softplus)
+    a: jnp.ndarray,  # [H] (negative)
+    bmat: jnp.ndarray,  # [B, L, G, N]
+    cmat: jnp.ndarray,  # [B, L, G, N]
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B, L, H, P], final_state [B, H, P, N])."""
+    b, l, h, pdim = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    if l % chunk != 0:
+        # zero-pad the tail: dt=0 => decay=1 and zero state contribution, so
+        # padded steps are exact no-ops; outputs are sliced back.
+        pad = chunk - l % chunk
+        xh = jnp.concatenate([xh, jnp.zeros((b, pad, h, pdim), xh.dtype)], 1)
+        dt = jnp.concatenate([dt, jnp.zeros((b, pad, h), dt.dtype)], 1)
+        bmat = jnp.concatenate([bmat, jnp.zeros((b, pad, g, n), bmat.dtype)], 1)
+        cmat = jnp.concatenate([cmat, jnp.zeros((b, pad, g, n), cmat.dtype)], 1)
+        y, fstate = ssd_chunked(xh, dt, a, bmat, cmat, chunk, init_state)
+        return y[:, :l], fstate
+    nc = l // chunk
+    xc = xh.reshape(b, nc, chunk, h, pdim)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    da = dtc * a.astype(jnp.float32)  # [B, nc, ch, H]
+    da = jnp.moveaxis(da, -1, -2)  # [B, nc, H, ch]
+    da_cs = jnp.cumsum(da, axis=-1)  # within-chunk cumulative
+
+    # intra-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(da))  # [B, nc, H, ch, ch]
+    # expand B/C groups to heads (head h belongs to group h // rep)
+    bh = jnp.repeat(bc, rep, axis=3) if rep > 1 else bc  # [B,nc,ch,H,N]
+    ch_ = jnp.repeat(cc, rep, axis=3) if rep > 1 else cc
+    att = jnp.einsum("bzlhn,bzshn->bzhls", ch_, bh)  # [B,nc,H,ch,ch]
+    att = att * lmat
+    dtx = xc.astype(jnp.float32) * dtc[..., None]  # [B,nc,ch,H,P]
+    y_diag = jnp.einsum("bzhls,bzshp->bzlhp", att, dtx)
+
+    # chunk states: contribution of each chunk to the running state
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)  # [B,nc,H,ch]
+    states = jnp.einsum(
+        "bzlhn,bzhl,bzlhp->bzhpn", bh, decay_states * jnp.moveaxis(dtc, -1, -2), xc.astype(jnp.float32)
+    )  # [B,nc,H,P,N]
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[..., -1])  # [B, nc, H]
+
+    def scan_fn(carry, xs):
+        st, dec = xs  # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = (
+        jnp.zeros((b, h, pdim, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,nc,H,P,N]
+
+    # inter-chunk output: y_off[l] = C[l] . (decay(l) * prev_state)
+    state_decay = jnp.exp(da_cs)  # [B,nc,H,ch]
+    y_off = jnp.einsum(
+        "bzlhn,bzhpn,bzhl->bzlhp", ch_, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(b, l, h, pdim)
+    return y, final_state
+
+
+def ssm_layer(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: Optional[Params] = None,
+    pos0: Any = 0,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    b, s, d = x.shape
+    h_in = rmsnorm(x, p["ln"], cfg.norm_eps)
+    d_inner = cfg.ssm_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * g * n
+
+    zxbcdt = linear(p["in_proj"], h_in, "in_proj")  # [B,S, 2*inner + 2*g*n + nh]
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+
+    # causal depthwise conv over [x, B, C]
+    kw = p["conv_w"]  # [conv_dim, K]
+    kk = kw.shape[-1]
+    new_conv_cache = None
+    if cache is None or s > 1:
+        pad = jnp.zeros((b, kk - 1, conv_dim), xbc.dtype)
+        xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+        if cache is not None:
+            new_conv_cache = xbc_pad[:, -(kk - 1) :, :]
+        conv = sum(
+            xbc_pad[:, i : i + s, :] * kw[:, i].astype(xbc.dtype)
+            for i in range(kk)
+        )
+    else:
+        hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, K, C]
+        conv = jnp.einsum("bkc,ck->bc", hist.astype(jnp.float32), kw.astype(jnp.float32))[
+            :, None, :
+        ].astype(xbc.dtype)
+        new_conv_cache = hist[:, 1:, :]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(conv, [d_inner, d_inner + g * n], axis=-1)
+    xh = xs.reshape(b, s, nh, hd)
+    bmat = bmat.reshape(b, s, g, n)
+    cmat = cmat.reshape(b, s, g, n)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+
+    new_cache = None
+    if cache is None or s > 1:
+        chunk = min(cfg.ssm_chunk, s)
+        y, fstate = ssd_chunked(xh, dt, a, bmat, cmat, chunk)
+        if cache is not None:
+            new_cache = {"conv": new_conv_cache, "state": fstate.astype(jnp.float32)}
+    else:
+        state = cache["state"]  # [B, H, P, N]
+        rep = nh // g
+        bh = jnp.repeat(bmat[:, 0], rep, axis=1) if rep > 1 else bmat[:, 0]
+        chh = jnp.repeat(cmat[:, 0], rep, axis=1) if rep > 1 else cmat[:, 0]
+        da = jnp.exp(dt[:, 0] * a)  # [B, H]
+        dbx = jnp.einsum(
+            "bh,bhp,bhn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32), bh.astype(jnp.float32)
+        )
+        state = state * da[..., None, None] + dbx
+        y = jnp.einsum("bhpn,bhn->bhp", state, chh.astype(jnp.float32))[:, None]
+        new_cache = {"conv": new_conv_cache, "state": state}
+        fstate = state
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(y.astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    return x + linear(p["out_proj"], y, "out_proj").astype(x.dtype), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, b: int, dtype) -> Params:
+    conv_dim = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((b, cfg.ssm_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros(
+            (b, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
+    }

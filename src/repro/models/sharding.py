@@ -1,0 +1,255 @@
+"""Sharding rules: parameter / batch / cache / optimizer PartitionSpecs.
+
+Strategy (DESIGN.md §5): Megatron-style tensor parallelism on the ``model``
+axis + FSDP-style parameter sharding on the ``data`` axis; the ``pod`` axis
+(multi-pod mesh) is pure data parallelism — parameters replicate across pods
+(cross-pod DCN carries only gradient all-reduces), batch shards over
+``(pod, data)``.
+
+Every rule passes through ``_fit`` which drops a mesh axis from any dim it
+does not divide — so the same rules serve all ten architectures (e.g.
+mamba2's vocab 50280 is not 16-divisible: its embed falls back to
+data-sharding on d_model automatically) and reduced smoke configs on one
+device.
+
+Compressed parameters (SlimLinear) shard like their dense counterparts: the
+packed dims are the weight dims divided by the packing factor, so the same
+(data, model) assignment applies; per-tensor scales replicate; LoRA factors
+shard L on d_in(data), R on d_out(model).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeCell
+
+Pytree = Any
+
+
+def dp_axes(mesh: Mesh):
+    """The data-parallel axis (or axes) of this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= mesh.shape[n]
+        return s
+    return mesh.shape[name]
+
+
+def _fit(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec entries that don't divide their dim (robust fallback)."""
+    fitted = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fitted.append(None)
+        elif dim % _axis_size(mesh, ax) == 0:
+            fitted.append(ax)
+        else:
+            fitted.append(None)
+    return P(*fitted)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        n = getattr(p, "key", None)
+        if n is None:
+            n = getattr(p, "name", None)
+        if n is None and hasattr(p, "idx"):
+            n = str(p.idx)
+        names.append(str(n))
+    return tuple(names)
+
+
+# weight-name -> (spec for [d_in, d_out]) orientation; leading stacked dims
+# (periods, experts) are replicated.
+_IN_OUT = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "lm_head"}
+_OUT_IN = {"wo", "w_down", "out_proj"}
+
+
+def _param_rule(
+    names: Tuple[str, ...], shape: Tuple[int, ...], mesh: Mesh, ep: bool = False
+) -> P:
+    last = names[-1]
+    nd = len(shape)
+
+    def lead(k: int):
+        return (None,) * (nd - k)
+
+    def _is_expert(wname: str) -> bool:
+        # MoE expert stacks carry an extra leading E dim under the 'moe' scope
+        return ep and "moe" in names and wname in ("w_gate", "w_up", "w_down")
+
+    # SlimLinear internals
+    if last == "packed_vals" or last == "packed_idx":
+        wname = names[-2] if len(names) >= 2 else ""
+        if _is_expert(wname) and nd >= 3:
+            # expert-parallel: E over 'model'; keep FSDP on the weight dims
+            if wname in _OUT_IN:
+                return _fit(lead(3) + ("model", None, "data"), shape, mesh)
+            return _fit(lead(3) + ("model", "data", None), shape, mesh)
+        if wname in _OUT_IN:
+            return _fit(lead(2) + ("model", "data"), shape, mesh)
+        return _fit(lead(2) + ("data", "model"), shape, mesh)
+    if last == "scale":
+        if nd >= 3:  # group scales [.., K/g, 1, N]
+            return _fit(lead(3) + ("data", None, "model"), shape, mesh)
+        return P()
+    if last == "inv_act_scale":
+        return _fit(lead(1) + ("data",), shape, mesh)
+    if last == "lora_l":
+        return _fit(lead(2) + ("data", None), shape, mesh)
+    if last == "lora_r":
+        return _fit(lead(2) + (None, "model"), shape, mesh)
+    if last == "lora_scale_l":  # [.., d_in/g, 1, r]
+        return _fit(lead(3) + ("data", None, None), shape, mesh)
+    if last == "lora_scale_r":  # [.., r/g, 1, d_out]
+        return _fit(lead(3) + (None, None, "model"), shape, mesh)
+
+    # dense weights
+    if last == "embed":
+        return _fit(("model", "data"), shape, mesh)
+    if _is_expert(last) and nd >= 3:
+        if last in _OUT_IN:
+            return _fit(lead(3) + ("model", None, "data"), shape, mesh)
+        return _fit(lead(3) + ("model", "data", None), shape, mesh)
+    if last in _IN_OUT:
+        return _fit(lead(2) + ("data", "model"), shape, mesh)
+    if last in _OUT_IN:
+        return _fit(lead(2) + ("model", "data"), shape, mesh)
+    if last == "router":
+        return _fit(lead(2) + ("data", None), shape, mesh)
+    if last == "conv_w":
+        return _fit(lead(2) + ("model", None), shape, mesh)
+    if last in ("a_log", "d_skip", "dt_bias", "gate_norm"):
+        return _fit(lead(1) + ("model",), shape, mesh)
+    # norms, gates, small vectors: replicate
+    return P(*([None] * nd))
+
+
+def param_specs(
+    params: Pytree, cfg: ModelConfig, mesh: Mesh, serving: bool = False
+) -> Pytree:
+    """PartitionSpec tree matching `params` (works on ShapeDtypeStructs).
+
+    serving=True drops the FSDP ('data') axis from weights: at decode the
+    whole model streams every step, so data-sharded weights cost a per-layer
+    all-gather on the hot path. Serving replicates weights across the dp
+    axis and keeps TP only — the classic inference topology (§Perf decode
+    iteration)."""
+
+    ep = bool(getattr(cfg, "moe_expert_parallel", False))
+
+    def rule(path, leaf):
+        if leaf is None:
+            return P()
+        spec = _param_rule(_path_names(path), tuple(leaf.shape), mesh, ep=ep)
+        if serving:
+            spec = P(*(None if ax == "data" else ax for ax in spec))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    specs = {
+        "tokens": P(dp, None),
+        "labels": P(dp, None),
+    }
+    if cfg.input_mode == "embeddings":
+        specs["embeds"] = P(dp, None, None)
+    if cfg.vision_tokens:
+        specs["vision_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(cache: Pytree, cfg: ModelConfig, mesh: Mesh, batch: int) -> Pytree:
+    """KV / SSM cache specs.
+
+    batch >= dp size -> shard batch over dp; otherwise (long-context, B=1)
+    shard the sequence dim of attention caches over 'data' (the
+    flash-decoding layout: partial softmax stats all-reduce over 'data').
+    Heads / feature dims shard over 'model' where divisible.
+    """
+    dp = dp_axes(mesh)
+    batch_sharded = batch % _axis_size(mesh, dp) == 0
+
+    model_size = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        last = names[-1]
+        nd = leaf.ndim
+        if last in ("k", "v"):  # [periods, B, S, KV, dh]
+            kv, dh = leaf.shape[-2], leaf.shape[-1]
+            # prefer sharding kv heads; fall back to head_dim (GQA kv=8 on a
+            # 16-way model axis would otherwise replicate the whole cache)
+            head_ax = (
+                ("model", None) if kv % model_size == 0 else (None, "model")
+            )
+            if batch_sharded:
+                return _fit((None, dp, None) + head_ax, leaf.shape, mesh)
+            return _fit((None, None, "data") + head_ax, leaf.shape, mesh)
+        if last == "pos":  # [periods, B, S]
+            if batch_sharded:
+                return _fit((None, dp, None), leaf.shape, mesh)
+            return _fit((None, None, "data"), leaf.shape, mesh)
+        if last in ("k_scale", "v_scale"):  # [periods, B, S, KV]
+            kv = leaf.shape[-1]
+            head_ax = "model" if kv % model_size == 0 else None
+            if batch_sharded:
+                return _fit((None, dp, None, head_ax), leaf.shape, mesh)
+            return _fit((None, None, "data", head_ax), leaf.shape, mesh)
+        if last == "conv":  # [periods, B, K-1, conv_dim]
+            spec = (None, dp if batch_sharded else None, None, "model")
+            return _fit(spec, leaf.shape, mesh)
+        if last == "state":  # [periods, B, H, P, N]
+            spec = (None, dp if batch_sharded else None, "model", None, None)
+            return _fit(spec, leaf.shape, mesh)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def opt_specs(opt_state: Pytree, pspecs: Pytree) -> Pytree:
+    """Optimizer state shards like its parameter; sentinels/scalars replicate.
+
+    opt_state: OptState(step, mu, nu, residual) where mu/nu/residual mirror
+    the param tree (possibly with zero-size sentinels or factored shapes).
+    """
+    from repro.optim.optimizers import OptState
+
+    def match(spec_tree, state_tree):
+        return jax.tree.map(
+            lambda sp, st: sp
+            if (hasattr(st, "shape") and st.ndim == len(sp))
+            else P(),
+            spec_tree,
+            state_tree,
+        )
+
+    return OptState(
+        step=P(),
+        mu=match(pspecs, opt_state.mu),
+        nu=match(pspecs, opt_state.nu),
+        residual=None
+        if opt_state.residual is None
+        else match(pspecs, opt_state.residual),
+    )
+
+
+def named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,348 @@
+"""Decoder-only LM assembled from the layer zoo, scanning over layer periods.
+
+Entry points:
+  init_params(cfg, key)                 -> dense parameter pytree
+  train_loss(params, cfg, batch)        -> (loss, aux)   [chunked xent]
+  prefill(params, cfg, batch)           -> (last_logits, cache)
+  decode_step(params, cfg, cache, ...)  -> (logits, cache)
+  init_cache(cfg, batch, max_len)       -> cache pytree
+
+All heavy dims flow through ``layers.linear`` so any weight leaf may be a
+dense array or a ``SlimLinear``; the same code path serves dense training,
+compressed inference, and adapter-only PEFT. The layer stack is a
+``lax.scan`` over ``cfg.n_periods`` with per-period parameter stacks — HLO
+size stays O(period), critical at 88-100 layers and for fast multi-pod
+compiles. Training applies ``jax.checkpoint`` per period (full remat).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import LayerSpec, ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init_linear(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    keys = jax.random.split(key, 16)
+    p: Params = {}
+    if spec.kind in ("attn", "cross_attn"):
+        p["ln"] = jnp.ones((d,), dt)
+        p["wq"] = _init_linear(keys[0], d, cfg.d_q, dt)
+        p["wk"] = _init_linear(keys[1], d, cfg.d_kv, dt)
+        p["wv"] = _init_linear(keys[2], d, cfg.d_kv, dt)
+        p["wo"] = _init_linear(keys[3], cfg.d_q, d, dt)
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.ones((cfg.d_head,), dt)
+            p["k_norm"] = jnp.ones((cfg.d_head,), dt)
+        if spec.kind == "cross_attn":
+            p["gate_attn"] = jnp.zeros((), jnp.float32)
+            p["gate_mlp"] = jnp.zeros((), jnp.float32)
+            p["ln_mlp"] = jnp.ones((d,), dt)
+            p["w_gate"] = _init_linear(keys[4], d, cfg.d_ff, dt)
+            p["w_up"] = _init_linear(keys[5], d, cfg.d_ff, dt)
+            p["w_down"] = _init_linear(keys[6], cfg.d_ff, d, dt)
+            return p
+    elif spec.kind == "ssm":
+        d_inner = cfg.ssm_inner
+        conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        proj_out = 2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+        p["ln"] = jnp.ones((d,), dt)
+        p["in_proj"] = _init_linear(keys[0], d, proj_out, dt)
+        p["conv_w"] = (
+            jax.random.normal(keys[1], (conv_dim, cfg.ssm_conv), jnp.float32) * 0.2
+        ).astype(dt)
+        p["a_log"] = jnp.log(
+            jnp.linspace(1.0, 16.0, cfg.ssm_heads, dtype=jnp.float32)
+        )
+        p["d_skip"] = jnp.ones((cfg.ssm_heads,), jnp.float32)
+        p["dt_bias"] = jnp.zeros((cfg.ssm_heads,), jnp.float32)
+        p["gate_norm"] = jnp.ones((d_inner,), dt)
+        p["out_proj"] = _init_linear(keys[2], d_inner, d, dt)
+    else:
+        raise ValueError(spec.kind)
+
+    # feed-forward (dense or MoE); cross_attn returned above with its own FFN
+    if spec.moe:
+        f = cfg.moe_ff
+        p["moe"] = {
+            "ln": jnp.ones((d,), dt),
+            "router": _init_linear(keys[8], d, cfg.n_experts, jnp.float32),
+            "w_gate": jnp.stack(
+                [_init_linear(k, d, f, dt) for k in jax.random.split(keys[9], cfg.n_experts)]
+            ),
+            "w_up": jnp.stack(
+                [_init_linear(k, d, f, dt) for k in jax.random.split(keys[10], cfg.n_experts)]
+            ),
+            "w_down": jnp.stack(
+                [_init_linear(k, f, d, dt) for k in jax.random.split(keys[11], cfg.n_experts)]
+            ),
+        }
+    elif spec.kind != "cross_attn" and cfg.d_ff > 0:
+        p["mlp"] = {
+            "ln": jnp.ones((d,), dt),
+            "w_gate": _init_linear(keys[8], d, cfg.d_ff, dt),
+            "w_up": _init_linear(keys[9], d, cfg.d_ff, dt),
+            "w_down": _init_linear(keys[10], cfg.d_ff, d, dt),
+        }
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+    period_keys = jax.random.split(k_blocks, cfg.n_periods)
+
+    def init_period(k):
+        lkeys = jax.random.split(k, len(cfg.period))
+        return {
+            f"layer_{i}": _init_layer(lkeys[i], spec, cfg)
+            for i, spec in enumerate(cfg.period)
+        }
+
+    blocks = jax.vmap(init_period)(period_keys)  # stacked leading dim
+    params: Params = {
+        "embed": (
+            jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dt),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init_linear(k_head, cfg.d_model, cfg.vocab_size, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_period(
+    cfg: ModelConfig,
+    period_params: Params,
+    x: jnp.ndarray,
+    cache: Optional[Params],
+    pos0,
+    vision: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    new_cache: Params = {}
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.period):
+        p = period_params[f"layer_{i}"]
+        c = None if cache is None else cache.get(f"layer_{i}")
+        with L.scope(f"layer_{i}"):
+            if spec.kind == "attn":
+                x, nc = L.attention_layer(p, x, cfg, c, pos0)
+            elif spec.kind == "ssm":
+                x, nc = L.ssm_layer(p, x, cfg, c, pos0)
+            elif spec.kind == "cross_attn":
+                x, nc = L.cross_attention_layer(p, x, cfg, vision, c)
+                if nc is not None:
+                    new_cache[f"layer_{i}"] = nc
+                continue  # cross layer bundles its own FFN
+            else:
+                raise ValueError(spec.kind)
+            if nc is not None:
+                new_cache[f"layer_{i}"] = nc
+            if spec.moe:
+                x, a = L.moe_layer(p["moe"], x, cfg)
+                aux = aux + a
+            elif "mlp" in p:
+                x = L.mlp_layer(p["mlp"], x, cfg)
+    return x, (new_cache if cache is not None else None), aux
+
+
+def forward_hidden(
+    params: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [B, S, D] embedded inputs
+    cache: Optional[Params] = None,
+    pos0=0,
+    vision: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    def body(carry, xs):
+        h, aux = carry
+        if cache is None:
+            pp = xs
+            h, _, a = period_fn(pp, h, None)
+            return (h, aux + a), None
+        pp, c = xs
+        h, nc, a = period_fn(pp, h, c)
+        return (h, aux + a), nc
+
+    def period_fn(pp, h, c):
+        return _apply_period(cfg, pp, h, c, pos0, vision)
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+
+    if cfg.unroll_layers:
+        # straight-line variant for cost analysis (scan bodies are counted
+        # once by XLA cost_analysis regardless of trip count)
+        h, aux = x, jnp.zeros((), jnp.float32)
+        caches = []
+        for i in range(cfg.n_periods):
+            pp = jax.tree.map(lambda a: a[i], params["blocks"])
+            c = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+            h, nc, a = period_fn(pp, h, c)
+            aux = aux + a
+            if nc is not None:
+                caches.append(nc)
+        new_cache = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *caches) if caches else None
+        )
+        h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        return h, new_cache, aux
+
+    if cfg.scan_groups > 1 and cache is None and cfg.n_periods % cfg.scan_groups == 0:
+        # two-level (sqrt) remat: outer scan over groups (checkpointed as a
+        # unit), inner scan over periods (checkpointed per period). Peak
+        # residuals: n_groups + n_periods/n_groups period inputs instead of
+        # n_periods (see EXPERIMENTS §Perf, memory-term iteration).
+        g = cfg.scan_groups
+        inner = cfg.n_periods // g
+        blocks_r = jax.tree.map(
+            lambda a: a.reshape(g, inner, *a.shape[1:]), params["blocks"]
+        )
+
+        def group_fn(carry, gp):
+            def inner_body(c, pp):
+                h, aux = c
+                h, _, a = period_fn(pp, h, None)
+                return (h, aux + a), None
+
+            return jax.lax.scan(inner_body, carry, gp)[0]
+
+        if remat:
+            group_fn = jax.checkpoint(group_fn)
+
+        def outer_body(carry, gp):
+            return group_fn(carry, gp), None
+
+        (h, aux), _ = jax.lax.scan(
+            outer_body, (x, jnp.zeros((), jnp.float32)), blocks_r
+        )
+        h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        return h, None, aux
+
+    xs = params["blocks"] if cache is None else (params["blocks"], cache)
+    (h, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, new_cache, aux
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Params) -> jnp.ndarray:
+    if cfg.input_mode == "embeddings":
+        return batch["embeds"].astype(_dtype(cfg))
+    return jnp.take(params["embed"], batch["tokens"], axis=0).astype(_dtype(cfg))
+
+
+def _head_weights(params: Params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T  # dense only; none of the zoo ties
+    return params["lm_head"]
+
+
+def chunked_xent(
+    h: jnp.ndarray,  # [B, S, D]
+    head, labels: jnp.ndarray, chunk: int
+) -> jnp.ndarray:
+    """Cross-entropy without ever materializing [B, S, V]."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(tot, xs):
+        hb, lb = xs
+        logits = L.linear(head, hb).astype(jnp.float32)  # [B, chunk, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (b * s)
+
+
+def train_loss(
+    params: Params, cfg: ModelConfig, batch: Params, aux_weight: float = 0.01
+) -> jnp.ndarray:
+    x = embed_inputs(params, cfg, batch)
+    vision = batch.get("vision_embeds")
+    h, _, aux = forward_hidden(params, cfg, x, None, 0, vision, remat=True)
+    loss = chunked_xent(h, _head_weights(params, cfg), batch["labels"], cfg.vocab_chunk)
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init, prefill, decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, b: int, max_len: int) -> Params:
+    dt = _dtype(cfg)
+    c: Params = {}
+    for i, spec in enumerate(cfg.period):
+        if spec.kind == "attn":
+            c[f"layer_{i}"] = L.init_attn_cache(cfg, b, max_len, dt)
+        elif spec.kind == "ssm":
+            c[f"layer_{i}"] = L.init_ssm_cache(cfg, b, dt)
+        elif spec.kind == "cross_attn":
+            c[f"layer_{i}"] = L.init_cross_cache(cfg, b, dt)
+    # stack one per period for the layer scan
+    return jax.tree.map(
+        lambda a: jnp.tile(a[None], (cfg.n_periods,) + (1,) * a.ndim), c
+    )
+
+
+def prefill(
+    params: Params, cfg: ModelConfig, batch: Params, max_len: int
+) -> Tuple[jnp.ndarray, Params]:
+    """Process the prompt, fill the cache, return logits of the last token."""
+    x = embed_inputs(params, cfg, batch)
+    b = x.shape[0]
+    cache = init_cache(cfg, b, max_len)
+    vision = batch.get("vision_embeds")
+    h, cache, _ = forward_hidden(params, cfg, x, cache, 0, vision)
+    logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
+    return logits[:, 0], cache
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    token_or_embed: jnp.ndarray,  # tokens [B, 1] int32 or embeds [B, 1, D]
+    pos: jnp.ndarray,  # scalar int32: position of this token
+) -> Tuple[jnp.ndarray, Params]:
+    if cfg.input_mode == "embeddings":
+        x = token_or_embed.astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], token_or_embed, axis=0).astype(_dtype(cfg))
+    h, cache, _ = forward_hidden(params, cfg, x, cache, pos, None)
+    logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
+    return logits[:, 0], cache

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    adafactor,
+    sgd_momentum,
+    apply_updates,
+    cosine_schedule,
+    linear_schedule,
+    global_norm,
+    clip_by_global_norm,
+)

@@ -1,0 +1,303 @@
+"""Optimizers in pure JAX (no optax): AdamW, AdaFactor, SGD-momentum.
+
+Functional API, pytree-native, tolerant of integer / packed-uint8 leaves
+(compressed models) via a trainable ``mask`` tree for PEFT (paper §3.4:
+freeze W^C, train adapters only; AdaFactor is the paper's fine-tuning
+optimizer — §T).
+
+Implementation notes:
+  * Frozen/non-float leaves carry a zero-size f32 sentinel in the optimizer
+    state (``_EMPTY``) so every state tree has **exactly the parameter tree's
+    structure** — jit-safe, checkpoint-safe, no optax-style MaskedNode.
+  * Moment dtype is configurable; bf16 moments halve optimizer HBM at
+    100B-param scale (used by the big configs).
+  * AdaFactor stores factored second moments packed as one array
+    ``[..., d_in + d_out]`` (row ‖ col) — sublinear memory, single-leaf state.
+  * State shards like its parameter (specs from ``repro.models.sharding``) —
+    ZeRO-style sharded optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+_EMPTY = lambda: jnp.zeros((0,), jnp.float32)
+
+
+def _frozen(leaf) -> bool:
+    return leaf is None or not (
+        hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
+    )
+
+
+def _gvalid(g) -> bool:
+    return (
+        g is not None
+        and hasattr(g, "dtype")
+        and jnp.issubdtype(g.dtype, jnp.floating)
+        and g.dtype != jax.dtypes.float0
+    )
+
+
+def _resolve_mask(params: Pytree, mask: Optional[Pytree]) -> Pytree:
+    if mask is None:
+        return jax.tree.map(lambda p: not _frozen(p), params)
+    return jax.tree.map(lambda p, m: (not _frozen(p)) and bool(m), params, mask)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OptState:
+    step: jnp.ndarray
+    mu: Pytree
+    nu: Pytree
+    residual: Pytree = None  # error-feedback accumulator (grad compression)
+
+    def tree_flatten(self):
+        return (self.step, self.mu, self.nu, self.residual), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def linear_schedule(base_lr: float, total_steps: int, warmup: int = 0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        return base_lr * warm * (1.0 - frac)
+
+    return fn
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0, min_frac=0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * warm * (min_frac + (1 - min_frac) * cos)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# gradient utilities
+# ---------------------------------------------------------------------------
+
+def global_norm(grads: Pytree) -> jnp.ndarray:
+    leaves = [
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)
+        if _gvalid(g) and g.size
+    ]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+
+    def clip(g):
+        return g * factor.astype(g.dtype) if _gvalid(g) else g
+
+    return jax.tree.map(clip, grads), norm
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    def add(p, u):
+        if _frozen(p) or u is None or u.size == 0:
+            return p
+        return (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype)
+
+    return jax.tree.map(add, params, updates)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype: str = "float32",
+    mask: Optional[Pytree] = None,
+):
+    """Returns (init_fn, update_fn). mask: pytree of bool — True = trainable."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params: Pytree) -> OptState:
+        tmask = _resolve_mask(params, mask)
+        zeros = lambda p, m: jnp.zeros(p.shape, mdt) if m else _EMPTY()
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params, tmask),
+            nu=jax.tree.map(zeros, params, tmask),
+        )
+
+    def update(grads: Pytree, state: OptState, params: Pytree):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd_u(g, m, v, p):
+            if m.size == 0 or not _gvalid(g):
+                return _EMPTY()
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            return -lr_t * (
+                (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+                + weight_decay * p.astype(jnp.float32)
+            )
+
+        def upd_m(g, m):
+            if m.size == 0 or not _gvalid(g):
+                return m
+            return (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(mdt)
+
+        def upd_v(g, v):
+            if v.size == 0 or not _gvalid(g):
+                return v
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32).astype(mdt)
+
+        updates = jax.tree.map(upd_u, grads, state.mu, state.nu, params)
+        mu = jax.tree.map(upd_m, grads, state.mu)
+        nu = jax.tree.map(upd_v, grads, state.nu)
+        return updates, OptState(step=step, mu=mu, nu=nu, residual=state.residual)
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# AdaFactor (Shazeer & Stern 2018) — the paper's PEFT optimizer (§T).
+# Factored second moment packed as [..., d_in + d_out]; full moment for <2D.
+# ---------------------------------------------------------------------------
+
+def adafactor(
+    lr: Callable | float = 1e-3,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    mask: Optional[Pytree] = None,
+):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params: Pytree) -> OptState:
+        tmask = _resolve_mask(params, mask)
+
+        def vstate(p, m):
+            if not m:
+                return _EMPTY()
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + (p.shape[-2] + p.shape[-1],), jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(lambda p: _EMPTY(), params),
+            nu=jax.tree.map(vstate, params, tmask),
+        )
+
+    def _moments(g2, v, p):
+        """Returns (vhat like p, new_v)."""
+        if _factored(p):
+            d0, d1 = p.shape[-2], p.shape[-1]
+            rho = _moments.rho
+            row = rho * v[..., :d0] + (1 - rho) * jnp.mean(g2, axis=-1)
+            col = rho * v[..., d0:] + (1 - rho) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            vhat = (row / jnp.maximum(row_mean, eps))[..., :, None] * col[..., None, :]
+            return vhat, jnp.concatenate([row, col], axis=-1)
+        rho = _moments.rho
+        new_v = rho * v + (1 - rho) * g2
+        return new_v, new_v
+
+    def update(grads: Pytree, state: OptState, params: Pytree):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        _moments.rho = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd_u(g, v, p):
+            if v.size == 0 or not _gvalid(g):
+                return _EMPTY()
+            g32 = g.astype(jnp.float32)
+            vhat, _ = _moments(g32 * g32 + eps, v, p)
+            u = g32 / jnp.sqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * (u + weight_decay * p.astype(jnp.float32))
+
+        def upd_v(g, v, p):
+            if v.size == 0 or not _gvalid(g):
+                return v
+            g32 = g.astype(jnp.float32)
+            _, new_v = _moments(g32 * g32 + eps, v, p)
+            return new_v
+
+        updates = jax.tree.map(upd_u, grads, state.nu, params)
+        nu = jax.tree.map(upd_v, grads, state.nu, params)
+        return updates, OptState(step=step, mu=state.mu, nu=nu, residual=state.residual)
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# SGD momentum (baseline / ablations)
+# ---------------------------------------------------------------------------
+
+def sgd_momentum(
+    lr: Callable | float = 0.1, momentum: float = 0.9, mask: Optional[Pytree] = None
+):
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        tmask = _resolve_mask(params, mask)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(
+                lambda p, m: jnp.zeros(p.shape, jnp.float32) if m else _EMPTY(),
+                params,
+                tmask,
+            ),
+            nu=jax.tree.map(lambda p: _EMPTY(), params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd_m(g, m):
+            if m.size == 0 or not _gvalid(g):
+                return m
+            return momentum * m + g.astype(jnp.float32)
+
+        mu = jax.tree.map(upd_m, grads, state.mu)
+        updates = jax.tree.map(
+            lambda m: -lr_t * m if m.size else _EMPTY(), mu
+        )
+        return updates, OptState(step=step, mu=mu, nu=state.nu)
+
+    return init, update

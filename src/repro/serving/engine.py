@@ -1,0 +1,111 @@
+"""Batched serving engine for (compressed) models.
+
+Static-batch continuous decoding: a fixed slot count, per-slot positions and
+EOS tracking, greedy or temperature sampling, one jit'd decode_step shared
+across the run (cache donated — no per-token reallocation). Works with dense
+or SLiM-compressed parameter trees (the forward dispatches per leaf).
+
+This is the serving counterpart of the paper's deployment section: weights
+live in the packed SLiM format; decode is the memory-bound regime where the
+3-bit weight stream pays off (bench_speedup.py quantifies it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[List[int]]  # per-slot generated tokens (post-prompt)
+    steps: int
+    prefill_s: float
+    decode_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        n = sum(len(t) for t in self.tokens)
+        return n / max(self.decode_s, 1e-9)
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        params: Params,
+        cfg: ModelConfig,
+        max_len: int = 512,
+        eos_id: Optional[int] = None,
+        donate_cache: bool = True,
+    ):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.eos_id = eos_id
+
+        def _decode(params, cache, tok, pos):
+            return T.decode_step(params, cfg, cache, tok, pos)
+
+        self._decode = jax.jit(
+            _decode, donate_argnums=(1,) if donate_cache else ()
+        )
+        self._prefill = jax.jit(
+            lambda params, batch: T.prefill(params, cfg, batch, max_len=max_len)
+        )
+
+    def generate(
+        self,
+        batch: Params,  # {"tokens": [B, S]} or embeddings variant
+        max_new_tokens: int = 32,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> GenerationResult:
+        tok_key = "tokens" if "tokens" in batch else "embeds"
+        b, s = batch[tok_key].shape[:2]
+        assert s + max_new_tokens <= self.max_len
+
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        prefill_s = time.time() - t0
+
+        key = jax.random.PRNGKey(seed)
+        done = jnp.zeros((b,), bool)
+        out: List[List[int]] = [[] for _ in range(b)]
+
+        t0 = time.time()
+        steps = 0
+        for i in range(max_new_tokens):
+            if temperature > 0:
+                key, sk = jax.random.split(key)
+                nxt = jax.random.categorical(sk, logits / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            host = jax.device_get(nxt)
+            for j in range(b):
+                if not bool(done[j]):
+                    out[j].append(int(host[j]))
+            if self.eos_id is not None:
+                done = done | (nxt == self.eos_id)
+                if bool(jnp.all(done)):
+                    steps = i + 1
+                    break
+            logits, cache = self._decode(
+                self.params, cache, nxt[:, None], jnp.int32(s + i)
+            )
+            steps = i + 1
+        jax.block_until_ready(logits)
+        decode_s = time.time() - t0
+        return GenerationResult(
+            tokens=out, steps=steps, prefill_s=prefill_s, decode_s=decode_s
+        )

@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the real single
+CPU device; multi-device tests (dry-run, collectives) spawn subprocesses that
+set --xla_force_host_platform_device_count before importing jax."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

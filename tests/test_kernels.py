@@ -1,0 +1,118 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressed import SlimLinear, slim_linear_apply
+from repro.core.packing import pack_dense_24, pack_int4
+from repro.core.pruning import nm_mask
+from repro.kernels import ref as R
+from repro.kernels.int4_matmul import int4_matmul
+from repro.kernels.ops import slim_linear_op
+from repro.kernels.slim_linear import slim_linear
+from repro.kernels.sparse24_matmul import sparse24_matmul
+
+SHAPES = [
+    (16, 32, 16),
+    (32, 64, 48),
+    (64, 256, 128),
+    (128, 128, 256),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(seed, m, k, n, dtype):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (m, k), dtype)
+    codes = jax.random.randint(ks[1], (k, n), -7, 8).astype(jnp.int8)
+    scale = jnp.float32(0.23 + 0.1 * seed)
+    sal = jnp.abs(jax.random.normal(ks[2], (k, n)))
+    mask = nm_mask(sal, 2, 4)
+    masked = (codes * mask.astype(jnp.int8)).astype(jnp.int8)
+    return x, codes, masked, mask, scale, ks
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_int4_matmul_pertensor(shape, dtype):
+    m, k, n = shape
+    x, codes, _, _, scale, _ = _mk(1, m, k, n, dtype)
+    wp = pack_int4(codes)
+    got = int4_matmul(x, wp, scale, bm=16, bn=16, bk=32)
+    want = R.int4_matmul_ref(x, wp, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", [(32, 128, 64), (64, 256, 128)])
+def test_int4_matmul_group(shape):
+    m, k, n = shape
+    g = 64
+    x, codes, _, _, _, ks = _mk(2, m, k, n, jnp.float32)
+    wp = pack_int4(codes)
+    gs = jax.random.uniform(ks[3], (k // g, 1, n), jnp.float32, 0.05, 0.8)
+    got = int4_matmul(x, wp, gs, group_size=g, bm=16, bn=16, bk=64)
+    want = R.int4_matmul_ref(x, wp, gs, group_size=g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sparse24_matmul(shape, dtype):
+    m, k, n = shape
+    x, _, masked, mask, scale, _ = _mk(3, m, k, n, dtype)
+    pv, pi = pack_dense_24(masked, mask)
+    got = sparse24_matmul(x, pv, pi, scale, bm=16, bn=16, bk=32)
+    want = R.sparse24_matmul_ref(x, pv, pi, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("with_ias", [False, True])
+def test_slim_linear_fused(shape, with_ias):
+    m, k, n = shape
+    r = 16
+    x, _, masked, mask, scale, ks = _mk(4, m, k, n, jnp.float32)
+    pv, pi = pack_dense_24(masked, mask)
+    l = jax.random.normal(ks[3], (k, r)) * 0.1
+    rr = jax.random.normal(ks[4], (r, n)) * 0.1
+    ias = (
+        jax.random.uniform(ks[5], (k,), jnp.float32, 0.5, 1.5) if with_ias else None
+    )
+    got = slim_linear(x, pv, pi, scale, l, rr, ias, bm=16, bn=16, bk=32)
+    want = R.slim_linear_ref(x, pv, pi, scale, l, rr, ias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_kernel_matches_model_xla_path():
+    """ops.slim_linear_op == core.compressed.slim_linear_apply (the model's
+    XLA path) on the same SlimLinear — one semantics, two backends."""
+    m, k, n, r = 32, 64, 48, 8
+    x, _, masked, mask, scale, ks = _mk(5, m, k, n, jnp.float32)
+    pv, pi = pack_dense_24(masked, mask)
+    l = jax.random.normal(ks[3], (k, r)) * 0.1
+    rr = jax.random.normal(ks[4], (r, n)) * 0.1
+    ias = jax.random.uniform(ks[5], (k,), jnp.float32, 0.5, 1.5)
+    p = SlimLinear(pv, pi, scale, ias, l, rr, None, None, k, n, 4, 0, "sparse24", 0, 128)
+    got = slim_linear_op(p, x)
+    want = slim_linear_apply(p, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_block_shape_independence():
+    """Result must not depend on BlockSpec tiling."""
+    m, k, n = 64, 128, 64
+    x, _, masked, mask, scale, _ = _mk(6, m, k, n, jnp.float32)
+    pv, pi = pack_dense_24(masked, mask)
+    outs = [
+        np.asarray(sparse24_matmul(x, pv, pi, scale, bm=bm, bn=bn, bk=bk))
+        for bm, bn, bk in [(16, 16, 32), (32, 64, 64), (64, 32, 128), (64, 64, 8)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,75 @@
+"""Sweeps for the serving-stack kernels: group (de)quant (the paper's §3.4
+Triton kernels, Pallas analogue) and flash-decoding attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.group_quant import group_dequantize, group_quantize
+
+
+@pytest.mark.parametrize("shape,g", [((128, 32), 32), ((256, 64), 64), ((512, 128), 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_group_quant_matches_ref(shape, g, dtype):
+    k, n = shape
+    x = jax.random.normal(jax.random.PRNGKey(0), (k, n), dtype) * 0.3
+    c, s = group_quantize(x, g=g, bk=min(k, 2 * g), bn=min(n, 64))
+    cr, sr = R.group_quantize_ref(x, g=g)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("g", [32, 64])
+def test_group_roundtrip_error_bounded(g):
+    k, n = 256, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.5
+    c, s = group_quantize(x, g=g, bk=128, bn=32)
+    xd = group_dequantize(c, s, g=g, bk=128, bn=32)
+    # max error <= scale/half per group
+    err = jnp.abs(xd - x).reshape(k // g, g, n)
+    bound = s / 8.0 + 1e-6
+    assert bool(jnp.all(jnp.max(err, axis=1, keepdims=True) <= bound))
+
+
+@pytest.mark.parametrize(
+    "B,S,H,dh,bs", [(2, 128, 4, 32, 32), (1, 256, 8, 64, 64), (4, 64, 2, 16, 16)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_ref(B, S, H, dh, bs, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, dh), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, dh), dtype)
+    lens = jax.random.randint(ks[3], (B,), 1, S + 1)
+    got = flash_decode(q, k, v, lens, bs=bs)
+    want = R.flash_decode_ref(q, k, v, lens)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+def test_flash_decode_block_independence():
+    B, S, H, dh = 2, 256, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    lens = jnp.asarray([200, 256], jnp.int32)
+    outs = [np.asarray(flash_decode(q, k, v, lens, bs=bs)) for bs in (32, 64, 128, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_ragged_lengths():
+    """Rows with different fill levels must only see their valid prefix."""
+    B, S, H, dh = 2, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    lens = jnp.asarray([10, 64], jnp.int32)
+    out = flash_decode(q, k, v, lens, bs=16)
+    # row 0 must equal attention over just the first 10 positions
+    want0 = R.flash_decode_ref(q[:1], k[:1, :10], v[:1, :10], jnp.asarray([10]))
+    np.testing.assert_allclose(np.asarray(out[:1]), np.asarray(want0), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,91 @@
+"""SLiM-LoRA (Alg. 2) tests: optimality in the saliency norm, invertibility,
+adapter quantization, rank monotonicity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import naive_lora, quantize_adapters, slim_lora
+from repro.core.lora import (
+    default_rank,
+    lowrank_factor,
+    saliency_error,
+    shift_activation_mean,
+)
+
+
+def _setup(seed=0, d_in=64, d_out=48):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.1, (d_in, d_out)), jnp.float32)
+    w_c = w * jnp.asarray(rng.random((d_in, d_out)) > 0.5, jnp.float32)
+    x = jnp.abs(jnp.asarray(rng.normal(0, 1.0, (d_in,)), jnp.float32))
+    return w, w_c, x
+
+
+class TestSlimLora:
+    def test_saliency_optimality(self):
+        """SLiM-LoRA must beat Naive-LoRA in the diag(x)-weighted norm, and
+        Naive-LoRA must beat SLiM-LoRA in the plain Frobenius norm — the
+        Eckart-Young optimality of each in its own metric (paper Eq. 8-11)."""
+        w, w_c, x = _setup()
+        r = 8
+        ln, rn = naive_lora(w, w_c, r)
+        ls, rs = slim_lora(w, w_c, x, r)
+        sal_naive = float(saliency_error(w, w_c, ln, rn, x))
+        sal_slim = float(saliency_error(w, w_c, ls, rs, x))
+        assert sal_slim <= sal_naive * 1.0001
+        fro_naive = float(jnp.sum((w - (w_c + ln @ rn)) ** 2))
+        fro_slim = float(jnp.sum((w - (w_c + ls @ rs)) ** 2))
+        assert fro_naive <= fro_slim * 1.0001
+
+    def test_full_rank_exact(self):
+        """Invertibility: at full rank the adapters reconstruct W exactly."""
+        w, w_c, x = _setup(1, 32, 24)
+        l, r = slim_lora(w, w_c, x, rank=24)
+        np.testing.assert_allclose(
+            np.asarray(w_c + l @ r), np.asarray(w), rtol=0, atol=1e-4
+        )
+
+    @given(st.integers(1, 5))
+    @settings(max_examples=5, deadline=None)
+    def test_rank_monotone(self, k):
+        w, w_c, x = _setup(2)
+        e_lo = float(saliency_error(w, w_c, *slim_lora(w, w_c, x, 4 * k), x))
+        e_hi = float(saliency_error(w, w_c, *slim_lora(w, w_c, x, 4 * k + 4), x))
+        assert e_hi <= e_lo * 1.0001
+
+    def test_shift_makes_positive(self):
+        x = jnp.asarray([0.0, 1e-9, 0.5, 2.0])
+        s = shift_activation_mean(x)
+        assert float(jnp.min(s)) > 0
+
+    def test_randomized_svd_close_to_exact(self):
+        w, w_c, x = _setup(3, 128, 96)
+        le, re_ = slim_lora(w, w_c, x, 16, method="exact")
+        lr, rr = slim_lora(w, w_c, x, 16, method="randomized")
+        e_exact = float(saliency_error(w, w_c, le, re_, x))
+        e_rand = float(saliency_error(w, w_c, lr, rr, x))
+        assert e_rand <= e_exact * 1.10  # HMT bound is loose; 10% observed
+
+    def test_default_rank(self):
+        assert default_rank(4096, 0.1) == 416  # 409.6 -> mult of 8
+        assert default_rank(10, 0.1) == 8
+
+
+class TestAdapterQuant:
+    def test_group_quant_roundtrip_error(self):
+        w, w_c, x = _setup(4, 256, 128)
+        l, r = slim_lora(w, w_c, x, 16)
+        lq, rq = quantize_adapters(l, r, bits=4, group_size=128)
+        l2, r2 = lq.dequantize(), rq.dequantize()
+        rel = float(jnp.linalg.norm(l2 - l) / jnp.linalg.norm(l))
+        assert rel < 0.2  # 4-bit group quant keeps adapters close
+
+    def test_lowrank_factor_eckart_young(self):
+        a = jnp.asarray(np.random.default_rng(0).normal(0, 1, (40, 30)), jnp.float32)
+        l, r = lowrank_factor(a, 10)
+        u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+        best = float(jnp.sum(s[10:] ** 2))
+        got = float(jnp.sum((a - l @ r) ** 2))
+        assert abs(got - best) < 1e-3 * max(best, 1.0)

@@ -1,0 +1,65 @@
+"""Packing round-trip properties (hypothesis) — the deployed HBM layout."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import (
+    compress_24,
+    decompress_24,
+    pack_dense_24,
+    pack_idx2,
+    pack_int4,
+    unpack_dense_24,
+    unpack_idx2,
+    unpack_int4,
+)
+from repro.core.pruning import nm_mask
+
+
+@given(st.integers(0, 500), st.sampled_from([(8, 4), (16, 8), (64, 32)]))
+@settings(max_examples=20, deadline=None)
+def test_int4_roundtrip(seed, shape):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(-8, 8, shape), jnp.int8)
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(codes))), codes)
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_idx2_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 4, (32, 16)), jnp.uint8)
+    np.testing.assert_array_equal(np.asarray(unpack_idx2(pack_idx2(idx))), idx)
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_24_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    d_in, d_out = 32, 16
+    codes = jnp.asarray(rng.integers(-7, 8, (d_in, d_out)), jnp.int8)
+    sal = jnp.asarray(rng.random((d_in, d_out)), jnp.float32)
+    mask = nm_mask(sal, 2, 4)
+    masked = (codes * mask.astype(jnp.int8)).astype(jnp.int8)
+    vals, idx = compress_24(masked, mask)
+    np.testing.assert_array_equal(
+        np.asarray(decompress_24(vals, idx, d_in)), np.asarray(masked)
+    )
+    pv, pi = pack_dense_24(masked, mask)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_dense_24(pv, pi, d_in)), np.asarray(masked)
+    )
+    # deployed layout is 3 bits/position: d_in/4 + d_in/8 bytes per column
+    assert pv.shape == (d_in // 4, d_out) and pi.shape == (d_in // 8, d_out)
+
+
+def test_leading_dims():
+    rng = np.random.default_rng(1)
+    codes = jnp.asarray(rng.integers(-7, 8, (3, 5, 16, 8)), jnp.int8)
+    sal = jnp.asarray(rng.random((3, 5, 16, 8)), jnp.float32)
+    mask = jnp.stack([jnp.stack([nm_mask(sal[i, j]) for j in range(5)]) for i in range(3)])
+    masked = (codes * mask.astype(jnp.int8)).astype(jnp.int8)
+    pv, pi = pack_dense_24(masked, mask)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_dense_24(pv, pi, 16)), np.asarray(masked)
+    )

@@ -1,0 +1,95 @@
+"""Perf-iteration feature tests (EXPERIMENTS §Perf toggles): packed int4
+adapters, int8 KV cache, low-precision attention probs, sqrt remat."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressed import slim_linear_apply
+from repro.core.pipeline import CalibStats, CompressionConfig, compress_matrix
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import LayerSpec, ModelConfig
+
+V = 64
+
+
+def _cfg(**kw):
+    base = dict(
+        name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab_size=V, dtype="float32", q_chunk=16, vocab_chunk=16,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestPackedAdapters:
+    def test_close_to_fp_adapters(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(0, 0.08, (128, 64)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1, (64, 128)), jnp.float32)
+        stats = CalibStats.init(128).update(x)
+        p_fp, _ = compress_matrix(w, stats, CompressionConfig(adapter="slim", rank=16))
+        p_pk, _ = compress_matrix(
+            w, stats, CompressionConfig(adapter="slim", rank=16, pack_adapters=True)
+        )
+        y_fp = slim_linear_apply(p_fp, x)
+        y_pk = slim_linear_apply(p_pk, x)
+        rel = float(jnp.linalg.norm(y_pk - y_fp) / jnp.linalg.norm(y_fp))
+        assert rel < 0.08
+        assert p_pk.lora_l.dtype == jnp.uint8
+        assert p_pk.packed_bytes() < p_fp.packed_bytes()
+
+    def test_byte_accounting(self):
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(0, 0.08, (256, 128)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1, (32, 256)), jnp.float32)
+        stats = CalibStats.init(256).update(x)
+        p, _ = compress_matrix(
+            w, stats, CompressionConfig(adapter="slim", rank=32, pack_adapters=True)
+        )
+        # adapters: (256*32 + 32*128)/2 bytes packed
+        assert p.lora_l.shape == (128, 32)
+        assert p.lora_r.shape == (16, 128)
+
+
+class TestKVQuant:
+    def test_decode_consistency(self):
+        cfg = _cfg()
+        cfgq = dataclasses.replace(cfg, kv_quant=True)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0, V)
+        x = T.embed_inputs(params, cfg, {"tokens": toks})
+        h, _, _ = T.forward_hidden(params, cfg, x)
+        full = L.linear(T._head_weights(params, cfg), h[:, -1:, :])[:, 0]
+        _, cache = T.prefill(params, cfgq, {"tokens": toks[:, :32]}, max_len=40)
+        dec, _ = T.decode_step(params, cfgq, cache, toks[:, 32:33], jnp.int32(32))
+        # int8 KV costs a small, bounded error
+        err = float(jnp.max(jnp.abs(dec - full)))
+        assert err < 0.25, err
+        assert cache["layer_0"]["k"].dtype == jnp.int8
+
+    def test_swa_ring_with_kv_quant(self):
+        cfgq = _cfg(sliding_window=16, kv_quant=True)
+        params = T.init_params(cfgq, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, V)
+        _, cache = T.prefill(params, cfgq, {"tokens": toks}, max_len=32)
+        dec, cache = T.decode_step(
+            params, cfgq, cache, toks[:, :1], jnp.int32(24)
+        )
+        assert bool(jnp.all(jnp.isfinite(dec)))
+        assert cache["layer_0"]["k_scale"].shape[-1] == cfgq.n_kv_heads
+
+
+class TestProbsLowPrecision:
+    def test_close_to_f32(self):
+        cfg = _cfg()
+        cfgp = dataclasses.replace(cfg, attn_probs_low_precision=True)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, V)
+        b = {"tokens": toks, "labels": toks}
+        l0 = float(T.train_loss(params, cfg, b))
+        l1 = float(T.train_loss(params, cfgp, b))
+        assert abs(l0 - l1) < 5e-3  # f32 model: cast is exact modulo rounding

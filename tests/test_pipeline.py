@@ -1,0 +1,94 @@
+"""End-to-end single-matrix pipeline tests (paper Fig. 1 ordering claims)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CalibStats, CompressionConfig, compress_matrix
+from repro.core.compressed import slim_linear_apply
+
+
+def _setup(seed=0, d_in=128, d_out=64, n=256):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 0.08, (d_in, d_out)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1.0, (n, d_in)) * (1 + rng.random(d_in)), jnp.float32)
+    stats = CalibStats.init(d_in, with_hessian=True).update(x)
+    return w, x, stats
+
+
+def _out_err(p, x, w):
+    y = slim_linear_apply(p, x)
+    ref = x @ w
+    return float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+
+
+class TestPipelineOrdering:
+    def test_adapters_reduce_output_error(self):
+        w, x, stats = _setup()
+        errs = {}
+        for adapter in ["none", "naive", "slim"]:
+            cfg = CompressionConfig(adapter=adapter, rank=16)
+            p, _ = compress_matrix(w, stats, cfg)
+            errs[adapter] = _out_err(p, x, w)
+        assert errs["naive"] < errs["none"]
+        assert errs["slim"] < errs["none"]
+        # SLiM-LoRA optimizes the saliency-weighted error, which tracks the
+        # true output error better than plain Frobenius (paper Tbl 1)
+        assert errs["slim"] <= errs["naive"] * 1.05
+
+    def test_l2qer_misses_sparsity_error(self):
+        """Adapters fit only E_Q (L2QER-style) underperform SLiM-LoRA when
+        sparsity is on — the paper's key comparison."""
+        w, x, stats = _setup(1)
+        p_slim, _ = compress_matrix(w, stats, CompressionConfig(adapter="slim", rank=16))
+        p_l2, _ = compress_matrix(w, stats, CompressionConfig(adapter="l2qer", rank=16))
+        assert _out_err(p_slim, x, w) < _out_err(p_l2, x, w)
+
+    def test_quantized_adapters_close(self):
+        w, x, stats = _setup(2)
+        p_fp, _ = compress_matrix(w, stats, CompressionConfig(adapter="slim", rank=16))
+        p_q, _ = compress_matrix(
+            w, stats,
+            CompressionConfig(adapter="slim", rank=16, quantize_adapters=True),
+        )
+        # SLiM-LoRA^Q costs little accuracy (paper: "negligible")
+        assert _out_err(p_q, x, w) <= _out_err(p_fp, x, w) * 1.3
+
+    def test_reports_consistent(self):
+        w, x, stats = _setup(3)
+        p, rep = compress_matrix(w, stats, CompressionConfig(adapter="slim", rank=16))
+        assert rep.total_err_after <= rep.total_err_before * 1.0001
+        assert rep.saliency_err_after <= rep.saliency_err_before * 1.0001
+        assert rep.quant_err > 0 and rep.sparse_err > 0
+
+    @pytest.mark.parametrize("quantizer", ["slim", "absmax", "group_absmax", "slim_o"])
+    def test_quantizer_grid(self, quantizer):
+        w, x, stats = _setup(4)
+        cfg = CompressionConfig(quantizer=quantizer, adapter="slim", rank=16)
+        p, _ = compress_matrix(w, stats, cfg)
+        assert _out_err(p, x, w) < 0.5
+
+    @pytest.mark.parametrize("pruner", ["wanda", "magnitude", "sparsegpt"])
+    def test_pruner_grid(self, pruner):
+        w, x, stats = _setup(5)
+        cfg = CompressionConfig(pruner=pruner, adapter="slim", rank=16)
+        p, _ = compress_matrix(w, stats, cfg)
+        assert _out_err(p, x, w) < 0.5
+
+    def test_unstructured_pattern(self):
+        w, x, stats = _setup(6)
+        cfg = CompressionConfig(pattern="unstructured", adapter="slim", rank=16)
+        p, _ = compress_matrix(w, stats, cfg)
+        assert p.fmt == "dense_int4"
+        # unstructured 50% beats 2:4 (less constrained) — paper Tbl 1
+        p24, _ = compress_matrix(w, stats, CompressionConfig(adapter="slim", rank=16))
+        assert _out_err(p, x, w) <= _out_err(p24, x, w) * 1.05
+
+    def test_wanda_on_quantized_weights(self):
+        """SLiM prunes W^Q, not W (paper §3.2): masks must differ when
+        quantization moves saliency across the 2:4 group boundary."""
+        w, x, stats = _setup(7)
+        p, rep = compress_matrix(w, stats, CompressionConfig(adapter="none"))
+        # sanity: the pipeline produced a true 2:4 layout
+        assert p.fmt == "sparse24"
+        assert p.packed_vals.shape == (w.shape[0] // 4, w.shape[1])

@@ -1,0 +1,91 @@
+"""Pruning tests: mask invariants (hypothesis), Wanda vs magnitude, SparseGPT."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    check_nm,
+    jsq_compress,
+    magnitude_prune,
+    make_mask,
+    nm_mask,
+    sparsegpt_prune,
+    wanda_prune,
+)
+from repro.core.pruning import unstructured_mask, wanda_saliency
+
+
+def _w(seed=0, shape=(128, 64)):
+    return jnp.asarray(np.random.default_rng(seed).normal(0, 0.1, shape), jnp.float32)
+
+
+class TestMasks:
+    @given(st.integers(0, 100), st.sampled_from([(1, 4), (2, 4), (4, 8)]))
+    @settings(max_examples=20, deadline=None)
+    def test_nm_invariant(self, seed, nm):
+        n, m = nm
+        sal = jnp.abs(_w(seed, (64, 32)))
+        mask = nm_mask(sal, n, m)
+        assert check_nm(mask, n, m)
+
+    def test_nm_keeps_top(self):
+        sal = jnp.asarray(
+            np.tile(np.array([4.0, 3.0, 2.0, 1.0]), 8)[:, None], jnp.float32
+        )
+        sal = jnp.broadcast_to(sal, (32, 4))
+        mask = nm_mask(sal, 2, 4)
+        m = np.asarray(mask).reshape(8, 4, 4)
+        assert (m[:, 0] == 1).all() and (m[:, 1] == 1).all()
+        assert (m[:, 2] == 0).all() and (m[:, 3] == 0).all()
+
+    @given(st.floats(0.1, 0.9))
+    @settings(max_examples=10, deadline=None)
+    def test_unstructured_rate(self, sparsity):
+        sal = jnp.abs(_w(3, (100, 40)))
+        mask = unstructured_mask(sal, sparsity)
+        per_col = np.asarray(mask).sum(0)
+        expect = round(100 * (1 - sparsity))
+        assert (per_col == expect).all()
+
+    def test_wanda_uses_activations(self):
+        w = jnp.ones((8, 4))
+        x_l2 = jnp.asarray([10.0, 1, 1, 1, 1, 1, 1, 10.0])
+        mask = wanda_prune(w, x_l2, pattern="2:4")
+        m = np.asarray(mask)
+        assert m[0].all() and m[7].all()  # high-activation channels survive
+
+
+class TestSparseGPT:
+    def test_updates_reduce_output_error(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(0, 1, (256, 32)), jnp.float32)
+        mix = jnp.asarray(np.eye(32) + rng.normal(0, 0.25, (32, 32)), jnp.float32)
+        x = x @ mix
+        w = jnp.asarray(rng.normal(0, 0.1, (32, 16)), jnp.float32)
+        h = x.T @ x
+        w_sg, mask_sg = sparsegpt_prune(w, h, pattern="2:4")
+        assert check_nm(mask_sg, 2, 4)
+        # baseline: magnitude mask, no updates
+        mask_mag = magnitude_prune(w, pattern="2:4")
+        e_sg = float(jnp.sum((x @ (w_sg - w)) ** 2))
+        e_mag = float(jnp.sum((x @ (w * mask_mag - w)) ** 2))
+        assert e_sg < e_mag
+
+    def test_unstructured_path(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(0, 1, (128, 16)), jnp.float32)
+        w = jnp.asarray(rng.normal(0, 0.1, (16, 8)), jnp.float32)
+        w_sg, mask = sparsegpt_prune(w, x.T @ x, sparsity=0.5, pattern="unstructured")
+        assert abs(float(mask.mean()) - 0.5) < 0.05
+        # pruned positions are zero
+        assert float(jnp.max(jnp.abs(w_sg * (1 - mask)))) == 0.0
+
+
+class TestJSQ:
+    def test_joint_compress(self):
+        w = _w(2, (64, 32))
+        x_l2 = jnp.abs(_w(3, (64,))) + 0.1
+        qt, mask = jsq_compress(w, x_l2[:, 0] if x_l2.ndim > 1 else x_l2)
+        assert check_nm(mask, 2, 4)
+        assert qt.codes.shape == w.shape

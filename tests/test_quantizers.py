@@ -1,0 +1,138 @@
+"""Quantizer unit + property tests (paper §3.1 baselines + SLiM-Quant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    absmax_quantize,
+    group_absmax_quantize,
+    optq_quantize,
+    slim_quantize,
+)
+from repro.core.quantizers import dequantize, reconstruction_error, output_error
+from repro.core.slim_quant import (
+    estimate_error_curve,
+    slim_quant_alpha,
+    weight_abs_histogram,
+)
+
+
+def _w(seed=0, shape=(256, 128), scale=0.05, outliers=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, scale, shape)
+    if outliers:
+        idx = rng.integers(0, w.size, outliers)
+        w.flat[idx] *= 20.0
+    return jnp.asarray(w, jnp.float32)
+
+
+class TestAbsMax:
+    def test_range(self):
+        w = _w()
+        qt = absmax_quantize(w, bits=4)
+        assert qt.codes.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(qt.codes))) <= 7
+
+    def test_exact_on_grid(self):
+        # weights already on the quantization grid reconstruct exactly
+        alpha = 1.0
+        codes = jnp.arange(-7, 8, dtype=jnp.float32)
+        w = (codes / 8.0).reshape(-1, 1)
+        qt = absmax_quantize(w, bits=4)
+        # absmax alpha = 7/8; grid differs — just check max error bound
+        # symmetric level clamp (+-7 of 8) costs up to one step at the edge
+        err = jnp.max(jnp.abs(dequantize(qt) - w))
+        assert float(err) <= float(qt.scale) / 8 + 1e-6
+
+    @given(st.integers(3, 7))
+    @settings(max_examples=6, deadline=None)
+    def test_bits_monotone(self, bits):
+        # near-monotone: the symmetric edge clamp adds a small non-monotone
+        # component at very low bit widths; int8 storage caps bits at 8
+        w = _w(3)
+        e = float(reconstruction_error(w, absmax_quantize(w, bits=bits)))
+        e_hi = float(reconstruction_error(w, absmax_quantize(w, bits=bits + 1)))
+        assert e_hi <= e * 1.1
+
+    def test_bits_over_8_rejected(self):
+        with pytest.raises(ValueError):
+            absmax_quantize(_w(1), bits=9)
+
+
+class TestGroupAbsMax:
+    def test_matches_absmax_when_one_group(self):
+        w = _w(1, (128, 64))
+        qg = group_absmax_quantize(w, bits=4, group_size=128)
+        qa = absmax_quantize(w, bits=4)
+        # per-column groups are finer than per-tensor: error must be <=
+        eg = float(reconstruction_error(w, qg))
+        ea = float(reconstruction_error(w, qa))
+        assert eg <= ea * 1.001
+
+    def test_group_error_beats_per_tensor_with_outliers(self):
+        w = _w(2, (256, 128), outliers=30)
+        eg = float(reconstruction_error(w, group_absmax_quantize(w, 4, 64)))
+        ea = float(reconstruction_error(w, absmax_quantize(w, 4)))
+        assert eg < ea
+
+
+class TestSlimQuant:
+    def test_beats_absmax(self):
+        # the paper's core quantization claim: the Alg.1 scale has lower
+        # reconstruction error than AbsMax on bell-shaped weights
+        for seed in range(5):
+            w = _w(seed)
+            es = float(reconstruction_error(w, slim_quantize(w, bits=4)))
+            ea = float(reconstruction_error(w, absmax_quantize(w, bits=4)))
+            assert es <= ea * 1.001, f"seed {seed}: slim {es} > absmax {ea}"
+
+    def test_beats_absmax_heavy_tails(self):
+        w = _w(7, outliers=50)
+        es = float(reconstruction_error(w, slim_quantize(w, bits=4)))
+        ea = float(reconstruction_error(w, absmax_quantize(w, bits=4)))
+        assert es < ea  # clipping outliers must win
+
+    def test_multigrid_matches_exhaustive(self):
+        """Alg. 1 multigrid finds (near-)the exhaustive-grid optimum."""
+        w = _w(11)
+        p, centers = weight_abs_histogram(w, 512)
+        alpha_mg = float(slim_quant_alpha(p, centers, bits=4))
+        dense_grid = jnp.linspace(1e-4, float(jnp.max(jnp.abs(w))), 2048)
+        errs = estimate_error_curve(w, dense_grid, bits=4, n_bins=512)
+        alpha_ex = float(dense_grid[int(jnp.argmin(errs))])
+        e_mg = float(estimate_error_curve(w, jnp.array([alpha_mg]), 4, 512)[0])
+        e_ex = float(errs[int(jnp.argmin(errs))])
+        assert e_mg <= e_ex * 1.05
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_scale_positive_bounded(self, seed):
+        w = _w(seed, (64, 32))
+        qt = slim_quantize(w, bits=4)
+        assert 0 < float(qt.scale) <= float(jnp.max(jnp.abs(w))) + 1e-6
+
+
+class TestOPTQ:
+    def test_beats_rtn_on_output_error(self):
+        # OPTQ's whole point: Hessian-aware updates lower ||X(W_hat-W)||^2
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(0, 1, (512, 64)), jnp.float32)
+        # correlated inputs make the OBS update matter
+        mix = jnp.asarray(rng.normal(0, 1, (64, 64)) * 0.3 + np.eye(64), jnp.float32)
+        x = x @ mix
+        w = jnp.asarray(rng.normal(0, 0.1, (64, 32)), jnp.float32)
+        h = x.T @ x
+        q_optq = optq_quantize(w, h, bits=3, group_size=0)
+        q_rtn = absmax_quantize(w, bits=3)
+        e_optq = float(output_error(x, w, q_optq))
+        e_rtn = float(output_error(x, w, q_rtn))
+        assert e_optq < e_rtn
+
+    def test_group_shapes(self):
+        w = _w(1, (128, 32))
+        x = _w(2, (64, 128), scale=1.0)
+        qt = optq_quantize(w, x.T @ x, bits=4, group_size=64)
+        assert qt.scale.shape == (2, 1, 32)
+        assert qt.codes.shape == (128, 32)
