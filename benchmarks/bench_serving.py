@@ -1,0 +1,148 @@
+"""Static-batch vs continuous-batching serving under staggered arrivals.
+
+Replays the same synthetic Poisson-arrival trace (requests > slots, ragged
+generation budgets) through both engines, dense and SLiM-compressed:
+
+  * static  — waves of ``slots`` requests; each wave waits for its last
+    arrival and decodes until its longest member finishes (drained slots
+    burn steps).
+  * continuous — the scheduler admits each arrival into the first freed
+    slot; per-slot positions keep the ragged decode exact.
+
+Reports total tokens/s, mean/p95 TTFT and mean occupancy for each
+engine x params cell. Continuous batching must strictly beat static on
+tokens/s and mean TTFT (the VERDICT lines; a miss raises).
+
+    PYTHONPATH=src python benchmarks/bench_serving.py
+    PYTHONPATH=src python -m benchmarks.run serving
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from benchmarks.common import Table, compress_with, trained_model
+from repro.core.pipeline import CompressionConfig
+from repro.serving import ContinuousEngine, ServeEngine, ServingMetrics
+from repro.serving import synthetic_trace
+
+# Heavy-traffic regime: arrivals fast enough that a backlog forms (the
+# decode-bound case continuous batching targets) but staggered enough that
+# waves assemble at different times. At very low rates both engines are
+# arrival-bound and converge — see docs/serving.md.
+N_REQUESTS = int(os.environ.get("BENCH_SERVE_REQUESTS", "16"))
+N_SLOTS = int(os.environ.get("BENCH_SERVE_SLOTS", "4"))
+RATE = float(os.environ.get("BENCH_SERVE_RATE", "25.0"))
+PROMPT_LEN = 32
+MAX_NEW = (4, 48)  # wide budget spread: static waves drain, continuous refills
+MAX_LEN = PROMPT_LEN + MAX_NEW[1] + 8
+
+
+def fresh_trace(vocab, seed=0):
+    return synthetic_trace(
+        N_REQUESTS, rate=RATE, vocab_size=vocab,
+        prompt_len=(PROMPT_LEN, PROMPT_LEN), max_new_tokens=MAX_NEW, seed=seed,
+    )
+
+
+def run_static(params, cfg, requests):
+    """Wave scheduling: the best a static-batch engine can do with arrivals —
+    group ``N_SLOTS`` requests in arrival order, start a wave once its last
+    member has arrived and the previous wave has drained."""
+    engine = ServeEngine(params, cfg, max_len=MAX_LEN)
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    waves = [reqs[i : i + N_SLOTS] for i in range(0, len(reqs), N_SLOTS)]
+
+    # warm the jit caches outside the timed replay (per-wave shapes)
+    for wave in waves:
+        dummy = jnp.zeros((len(wave), PROMPT_LEN), jnp.int32)
+        engine.generate(
+            {"tokens": dummy},
+            max_new_tokens=max(r.max_new_tokens for r in wave),
+        )
+
+    metrics = ServingMetrics(N_SLOTS)
+    for r in reqs:
+        metrics.on_submit(r.rid, r.arrival)
+    t0 = time.time()
+    now = lambda: time.time() - t0
+    for wave in waves:
+        wait = max(r.arrival for r in wave) - now()
+        if wait > 0:
+            time.sleep(wait)
+        for r in wave:
+            metrics.on_admit(r.rid, now())
+        batch = jnp.asarray([r.prompt for r in wave], jnp.int32)
+        steps = max(r.max_new_tokens for r in wave)
+        res = engine.generate({"tokens": batch}, max_new_tokens=steps)
+        t_end = now()
+        t_first = t_end - res.decode_s  # prefill completion
+        for j, r in enumerate(wave):
+            metrics.on_first_token(r.rid, t_first)
+            r.output = res.tokens[j][: r.max_new_tokens]
+            metrics.on_finish(r.rid, t_end, len(r.output))
+        # token-exact occupancy (same accounting as the continuous engine):
+        # slots drain as their budgets are exhausted
+        metrics.on_decode_steps(steps)
+    return metrics.summary()
+
+
+def run_continuous(params, cfg, requests, vocab):
+    engine = ContinuousEngine(
+        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+        prefill_bucket=PROMPT_LEN,
+    )
+    # warm the prefill/decode jit caches with a minimal same-shape trace
+    warm = synthetic_trace(
+        2, rate=1e6, vocab_size=vocab,
+        prompt_len=(PROMPT_LEN, PROMPT_LEN), max_new_tokens=(2, 2), seed=99,
+    )
+    engine.run(warm, sync_every=4, max_new_cap=MAX_NEW[1])
+    res = engine.run(requests, sync_every=4, max_new_cap=MAX_NEW[1])
+    return res.metrics
+
+
+def run(table: Table):
+    cfg, dcfg, dense = trained_model()
+    vocab = cfg.vocab_size
+    slim, _ = compress_with(
+        dense, cfg, dcfg,
+        CompressionConfig(adapter="slim", rank=16, quantize_adapters=True),
+    )
+
+    verdicts = []
+    for plabel, params in [("dense", dense), ("slim", slim)]:
+        s = run_static(params, cfg, fresh_trace(vocab, seed=1))
+        c = run_continuous(params, cfg, fresh_trace(vocab, seed=1), vocab)
+        for elabel, m in [("static", s), ("continuous", c)]:
+            table.add(
+                f"{plabel}/{elabel}",
+                tokens_per_s=round(m["tokens_per_s"], 2),
+                mean_ttft_s=round(m["mean_ttft_s"], 4),
+                p95_ttft_s=round(m["p95_ttft_s"], 4),
+                mean_occupancy=round(m["mean_occupancy"], 3),
+                total_tokens=int(m["total_tokens"]),
+            )
+        wins = (
+            c["tokens_per_s"] > s["tokens_per_s"]
+            and c["mean_ttft_s"] < s["mean_ttft_s"]
+        )
+        verdicts.append(wins)
+        print(
+            f"VERDICT[{plabel}]: continuous "
+            f"{'BEATS' if wins else 'DOES NOT BEAT'} static "
+            f"(tok/s {c['tokens_per_s']:.1f} vs {s['tokens_per_s']:.1f}, "
+            f"ttft {c['mean_ttft_s']:.3f}s vs {s['mean_ttft_s']:.3f}s)"
+        )
+    if not all(verdicts):
+        raise RuntimeError("continuous batching failed to beat static")
+
+
+if __name__ == "__main__":
+    t = Table("serving")
+    run(t)
+    t.emit()

@@ -22,6 +22,7 @@ from benchmarks import (
     bench_multipod,
     bench_quant_error,
     bench_rank,
+    bench_serving,
     bench_sparsity,
     bench_sparsity_vs_quant,
     bench_speedup,
@@ -42,6 +43,7 @@ MODULES = [
     ("fig6_sparsity", bench_sparsity),
     ("kernel_bytes", bench_kernels),
     ("multipod_scaling", bench_multipod),
+    ("serving_continuous", bench_serving),
 ]
 
 

@@ -1,5 +1,6 @@
-"""Batched serving of a SLiM-compressed model: prefill + continuous greedy
-decode with per-slot tracking (the paper's deployment regime).
+"""Static-batch serving of a SLiM-compressed model: one prefill + greedy
+decode with per-slot EOS tracking (the paper's deployment regime). For
+staggered arrivals and slot recycling see serve_continuous.py.
 
     PYTHONPATH=src python examples/serve_compressed.py
 """

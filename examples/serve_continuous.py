@@ -1,0 +1,79 @@
+"""Continuous-batching walkthrough: queue -> scheduler -> per-slot KV cache.
+
+Builds a tiny model, SLiM-compresses it, then replays a staggered Poisson
+arrival trace through the continuous engine: 8 requests share 3 decode
+slots, freed slots are re-prefilled mid-flight (watch the slot assignments
+repeat), and every output is verified against a solo static-batch run of
+the same prompt — slot recycling is exact, not approximate.
+
+    PYTHONPATH=src python examples/serve_continuous.py [--dense]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.pipeline import CompressionConfig
+from repro.data import SyntheticLMConfig, calibration_batch
+from repro.models import transformer as T
+from repro.models.compress import compress_model, summarize_reports
+from repro.serving import ContinuousEngine, ServeEngine, synthetic_trace
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    cfg = get_config("slim-tiny")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    if "--dense" not in argv:
+        dcfg = SyntheticLMConfig(
+            vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, seed=0
+        )
+        calib = calibration_batch(dcfg, n_samples=8)
+        ccfg = CompressionConfig(
+            quantizer="slim", pattern="2:4", pruner="wanda", adapter="slim",
+            quantize_adapters=True,
+        )
+        params, reports = compress_model(params, cfg, calib, ccfg)
+        print("[1] compressed:", summarize_reports(reports))
+    else:
+        print("[1] serving dense params (--dense)")
+
+    # 8 requests, 3 slots: arrivals force queueing, ragged budgets force
+    # mid-flight slot recycling
+    trace = synthetic_trace(
+        8, rate=12.0, vocab_size=cfg.vocab_size,
+        prompt_len=(8, 24), max_new_tokens=(6, 16), seed=1,
+    )
+    print(f"[2] trace: {len(trace)} requests, arrivals "
+          f"{[round(r.arrival, 2) for r in trace]}")
+
+    max_len = 24 + 16 + 8
+    engine = ContinuousEngine(
+        params, cfg, n_slots=3, max_len=max_len, prefill_bucket=8
+    )
+    res = engine.run(trace, sync_every=4)
+    m = res.metrics
+    print(f"[3] slots used per request: {res.slot_of} (recycled mid-flight)")
+    print(f"[3] {m['total_tokens']:.0f} tokens in {m['duration_s']:.2f}s "
+          f"({m['tokens_per_s']:.1f} tok/s), occupancy {m['mean_occupancy']:.2f}")
+    print(f"[3] ttft mean {m['mean_ttft_s']:.3f}s p95 {m['p95_ttft_s']:.3f}s")
+
+    # verify: every continuous output == a fresh static run of that prompt
+    static = ServeEngine(params, cfg, max_len=max_len)
+    for r in res.requests:
+        solo = static.generate(
+            {"tokens": jnp.asarray([r.prompt], jnp.int32)},
+            max_new_tokens=r.max_new_tokens,
+        )
+        assert solo.tokens[0] == r.output, (r.rid, solo.tokens[0], r.output)
+    print("[4] all outputs identical to solo static-batch runs — "
+          "slot recycling is exact")
+
+
+if __name__ == "__main__":
+    main()

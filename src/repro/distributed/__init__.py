@@ -1,3 +1,5 @@
+import jax as _jax
+
 from repro.distributed.compress import (
     quantize_int8,
     dequantize_int8,
@@ -7,3 +9,9 @@ from repro.distributed.compress import (
 from repro.distributed.accum import microbatch_grads
 from repro.distributed.elastic import choose_mesh_shape, elastic_mesh
 from repro.distributed.straggler import StepMonitor
+
+# shard_map moved from jax.experimental to the jax namespace (~0.6); resolve
+# once here so callers of the distributed collectives don't fork on version.
+shard_map = getattr(_jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map  # noqa: F401

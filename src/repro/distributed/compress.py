@@ -94,7 +94,7 @@ def ef_allreduce_int8(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     Must run inside shard_map/pmap over `axis_name`. x: any shape; padded to
     a multiple of the axis size on the leading (flattened) dim.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = jax.lax.psum(1, axis_name)  # portable axis-size idiom (all jax versions)
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % n
     flat = jnp.pad(flat, (0, pad))

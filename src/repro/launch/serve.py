@@ -1,12 +1,21 @@
 """Serving launcher: batched generation from a (compressed) model.
 
+Static batch (one shot, all requests start together):
+
     PYTHONPATH=src python -m repro.launch.serve --arch slim-tiny \
         --batch 8 --prompt-len 64 --new-tokens 32 --compress
 
-Compresses the model one-shot with SLiM (optional), then runs the batched
-decode engine and reports prefill latency + decode tokens/s. On this CPU
-container the numbers are functional smoke only; the TPU roofline story is
-in benchmarks/bench_speedup.py and EXPERIMENTS §Roofline.
+Continuous batching (replay a synthetic Poisson arrival trace through the
+scheduler + per-slot KV cache engine):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch slim-tiny \
+        --workload poisson --requests 16 --slots 4 --rate 8 --compress
+
+Compresses the model one-shot with SLiM (optional), then runs the chosen
+engine and reports prefill latency + decode tokens/s (static) or the full
+serving metrics — TTFT, per-request latency, slot occupancy (workload).
+On this CPU container the numbers are functional smoke only; the TPU
+roofline story is in benchmarks/bench_speedup.py and EXPERIMENTS §Roofline.
 """
 from __future__ import annotations
 
@@ -20,7 +29,7 @@ from repro.core.pipeline import CompressionConfig
 from repro.data import SyntheticLMConfig, calibration_batch, synthetic_batches
 from repro.models import transformer as T
 from repro.models.compress import compress_model, summarize_reports
-from repro.serving import ServeEngine
+from repro.serving import ContinuousEngine, ServeEngine, synthetic_trace
 
 
 def main(argv=None):
@@ -34,6 +43,17 @@ def main(argv=None):
     p.add_argument("--compress", action="store_true")
     p.add_argument("--rank", type=int, default=None)
     p.add_argument("--seed", type=int, default=0)
+    # continuous-batching workload mode
+    p.add_argument(
+        "--workload", choices=["static", "poisson"], default="static",
+        help="static: one batch, all requests together; poisson: replay a "
+        "synthetic arrival trace through the continuous-batching engine",
+    )
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--rate", type=float, default=8.0, help="arrivals per second")
+    p.add_argument("--prefill-bucket", type=int, default=16)
+    p.add_argument("--sync-every", type=int, default=8)
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -56,6 +76,38 @@ def main(argv=None):
         )
         params, reports = compress_model(params, cfg, calib, ccfg)
         print("[slim]", summarize_reports(reports))
+
+    if args.workload == "poisson":
+        max_len = args.prompt_len + args.new_tokens + 8
+        bucket = args.prefill_bucket if T.supports_ragged_prefill(cfg) else 0
+        trace = synthetic_trace(
+            args.requests,
+            rate=args.rate,
+            vocab_size=cfg.vocab_size,
+            prompt_len=(max(4, args.prompt_len // 2), args.prompt_len),
+            max_new_tokens=(max(1, args.new_tokens // 2), args.new_tokens),
+            temperature=args.temperature,
+            seed=args.seed,
+        )
+        engine = ContinuousEngine(
+            params, cfg, n_slots=args.slots, max_len=max_len,
+            prefill_bucket=bucket, seed=args.seed,
+        )
+        res = engine.run(trace, sync_every=args.sync_every)
+        m = res.metrics
+        print(
+            f"[serve/continuous] requests={args.requests} slots={args.slots} "
+            f"rate={args.rate}/s: {m['total_tokens']:.0f} tokens in "
+            f"{m['duration_s']:.2f}s ({m['tokens_per_s']:.1f} tok/s)"
+        )
+        print(
+            f"[serve/continuous] ttft mean {m['mean_ttft_s']:.3f}s "
+            f"p95 {m['p95_ttft_s']:.3f}s | latency mean "
+            f"{m['mean_latency_s']:.3f}s | occupancy {m['mean_occupancy']:.2f}"
+        )
+        first = res.requests[0]
+        print("[serve/continuous] first request:", first.output[:16])
+        return
 
     engine = ServeEngine(
         params, cfg, max_len=args.prompt_len + args.new_tokens + 8

@@ -132,10 +132,10 @@ def lower_cell(
 
             return jax.jit(prefill_step).lower(params, batch), chips
 
-        # decode
+        # decode (per-slot position vector: continuous-batching serving shape)
         cache = cache_specs_abstract(cfg, cell, mesh)
         tok = batch.get("tokens", batch.get("embeds"))
-        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        pos = jax.ShapeDtypeStruct((tok.shape[0],), jnp.int32)
 
         def serve_step(params, cache, tok, pos):
             return T.decode_step(params, cfg, cache, tok, pos)

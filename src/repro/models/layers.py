@@ -245,7 +245,7 @@ def attention_layer(
     x: jnp.ndarray,  # [B, S, D]
     cfg: ModelConfig,
     cache: Optional[Params] = None,
-    pos0: Any = 0,  # int or traced scalar: absolute position of x[:, 0]
+    pos0: Any = 0,  # scalar or [B] vector: absolute position of x[:, 0] per slot
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     b, s, _ = x.shape
     h = rmsnorm(x, p["ln"], cfg.norm_eps)
@@ -253,7 +253,12 @@ def attention_layer(
     k = linear(p["wk"], h, "wk").reshape(b, s, cfg.n_kv_heads, cfg.d_head)
     v = linear(p["wv"], h, "wv").reshape(b, s, cfg.n_kv_heads, cfg.d_head)
     q, k = _qk_normalize(q, k, p, cfg)
-    positions = pos0 + jnp.arange(s, dtype=jnp.int32)
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    per_slot = pos0.ndim == 1  # ragged decode: each batch row at its own position
+    if per_slot:
+        positions = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # [B, S]
+    else:
+        positions = pos0 + jnp.arange(s, dtype=jnp.int32)  # [S]
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     plp = cfg.attn_probs_low_precision
@@ -269,6 +274,7 @@ def attention_layer(
         out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
     elif s > 1:
         # prefill: fill the cache (ring layout if sliding window)
+        assert not per_slot, "multi-token prefill requires a scalar pos0"
         c_len = cache["k"].shape[1]
         kq, ks = store(k)
         vq, vs = store(v)
@@ -304,31 +310,28 @@ def attention_layer(
         kv_pos = jnp.arange(s, dtype=jnp.int32)
         out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
     else:
-        # single-token decode against the cache (ring if windowed)
+        # single-token decode against the cache (ring if windowed); each batch
+        # row writes at its own position, so a continuous-batching engine can
+        # serve slots whose sequences are at different depths.
         c_len = cache["k"].shape[1]
-        slot = jnp.asarray(pos0, jnp.int32) % c_len
+        pv = positions[:, 0] if per_slot else jnp.broadcast_to(positions[0], (b,))
+        slot = pv % c_len  # [B]
+        bidx = jnp.arange(b)
         kq, ks = store(k)
         vq, vs = store(v)
-        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
-        cp = jax.lax.dynamic_update_slice(
-            cache["pos"],
-            jnp.broadcast_to(jnp.asarray(pos0, jnp.int32)[None, None], (b, 1)),
-            (0, slot),
-        )
+        ck = cache["k"].at[bidx, slot].set(kq[:, 0])
+        cv = cache["v"].at[bidx, slot].set(vq[:, 0])
+        cp = cache["pos"].at[bidx, slot].set(pv)
         new_cache = {"k": ck, "v": cv, "pos": cp}
         if cfg.kv_quant:
-            new_cache["k_scale"] = jax.lax.dynamic_update_slice(
-                cache["k_scale"], ks, (0, slot, 0)
-            )
-            new_cache["v_scale"] = jax.lax.dynamic_update_slice(
-                cache["v_scale"], vs, (0, slot, 0)
-            )
+            new_cache["k_scale"] = cache["k_scale"].at[bidx, slot].set(ks[:, 0])
+            new_cache["v_scale"] = cache["v_scale"].at[bidx, slot].set(vs[:, 0])
             kd = _kv_dequantize(ck, new_cache["k_scale"], x.dtype)
             vd = _kv_dequantize(cv, new_cache["v_scale"], x.dtype)
         else:
             kd, vd = ck, cv
-        out = mha(q, kd, vd, positions, cp, cfg.sliding_window, cfg.q_chunk, plp, xkv)
+        q_pos = pv[:, None]  # [B, 1]
+        out = mha(q, kd, vd, q_pos, cp, cfg.sliding_window, cfg.q_chunk, plp, xkv)
     out = out.reshape(b, s, cfg.d_q)
     return x + linear(p["wo"], out, "wo").astype(x.dtype), new_cache
 

@@ -4,7 +4,8 @@ Entry points:
   init_params(cfg, key)                 -> dense parameter pytree
   train_loss(params, cfg, batch)        -> (loss, aux)   [chunked xent]
   prefill(params, cfg, batch)           -> (last_logits, cache)
-  decode_step(params, cfg, cache, ...)  -> (logits, cache)
+  prefill_slot(params, cfg, cache, ...) -> (last_logits, cache)  [one slot]
+  decode_step(params, cfg, cache, ...)  -> (logits, cache)  [per-slot pos]
   init_cache(cfg, batch, max_len)       -> cache pytree
 
 All heavy dims flow through ``layers.linear`` so any weight leaf may be a
@@ -337,8 +338,11 @@ def decode_step(
     cfg: ModelConfig,
     cache: Params,
     token_or_embed: jnp.ndarray,  # tokens [B, 1] int32 or embeds [B, 1, D]
-    pos: jnp.ndarray,  # scalar int32: position of this token
+    pos: jnp.ndarray,  # int32 [B] per-slot positions (scalar broadcasts)
 ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step. ``pos`` gives the absolute position of each row's
+    token; a vector lets continuous-batching slots sit at different depths
+    (ragged decode), a scalar keeps the legacy lockstep behaviour."""
     if cfg.input_mode == "embeddings":
         x = token_or_embed.astype(_dtype(cfg))
     else:
@@ -346,3 +350,77 @@ def decode_step(
     h, cache, _ = forward_hidden(params, cfg, x, cache, pos, None)
     logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
     return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Slot-targeted prefill (continuous batching)
+# ---------------------------------------------------------------------------
+
+def supports_ragged_prefill(cfg: ModelConfig) -> bool:
+    """Whether a right-padded (bucketed) prefill is *exact* for this arch.
+
+    Attention masks pad keys out of every real query's window, but an SSM
+    recurrence integrates pad steps (``dt_bias`` keeps dt > 0 on zero input)
+    and MoE capacity lets pad tokens displace real ones from expert queues —
+    those archs must prefill at exact prompt length. Sliding-window ring
+    caches are excluded too: a padded prompt longer than the window evicts
+    in-window *real* keys during the ring roll, which masking can't undo.
+    """
+    return cfg.sliding_window == 0 and all(
+        sp.kind == "attn" and not sp.moe for sp in cfg.period
+    )
+
+
+def prefill_ragged(
+    params: Params, cfg: ModelConfig, batch: Params, max_len: int, true_len
+) -> Tuple[jnp.ndarray, Params]:
+    """Prefill a right-padded prompt whose true length is ``true_len``
+    (traced scalar <= the static padded length). Returns logits gathered at
+    the last *real* token; pad cache entries get ``pos = -1`` so subsequent
+    decode steps never attend to them. Exact only where
+    ``supports_ragged_prefill`` holds."""
+    assert supports_ragged_prefill(cfg), (
+        f"{cfg.name}: ragged prefill is inexact for ssm/moe periods"
+    )
+    x = embed_inputs(params, cfg, batch)
+    b = x.shape[0]
+    true_len = jnp.asarray(true_len, jnp.int32)
+    cache = init_cache(cfg, b, max_len)
+    h, cache, _ = forward_hidden(params, cfg, x, cache, 0, None)
+    h_last = h[:, true_len - 1][:, None, :]
+    logits = L.linear(_head_weights(params, cfg), h_last).astype(jnp.float32)
+    masked = {}
+    for lk, lv in cache.items():
+        if isinstance(lv, dict) and "pos" in lv:
+            lv = dict(lv)
+            lv["pos"] = jnp.where(lv["pos"] >= true_len, -1, lv["pos"])
+        masked[lk] = lv
+    return logits[:, 0], masked
+
+
+def prefill_slot(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    batch: Params,  # batch size 1
+    slot,  # traced int32: destination slot in the batched cache
+    max_len: int,
+    true_len=None,  # set for a right-padded prompt (ragged/bucketed prefill)
+) -> Tuple[jnp.ndarray, Params]:
+    """Prefill one request and write its cache into slot ``slot`` of an
+    existing batched cache (every leaf is [n_periods, B, ...]), leaving the
+    other slots untouched. The unit of work behind continuous batching:
+    freed slots are refilled mid-flight without touching neighbours."""
+    if true_len is None:
+        logits, small = prefill(params, cfg, batch, max_len)
+    else:
+        logits, small = prefill_ragged(params, cfg, batch, max_len, true_len)
+    slot = jnp.asarray(slot, jnp.int32)
+    cache = jax.tree.map(
+        lambda big, sm: jax.lax.dynamic_update_slice_in_dim(
+            big, sm.astype(big.dtype), slot, axis=1
+        ),
+        cache,
+        small,
+    )
+    return logits, cache

@@ -1,1 +1,5 @@
 from repro.serving.engine import ServeEngine, GenerationResult
+from repro.serving.continuous import ContinuousEngine, ContinuousResult
+from repro.serving.metrics import RequestTrace, ServingMetrics
+from repro.serving.request import Request, RequestQueue, synthetic_trace
+from repro.serving.scheduler import Scheduler

@@ -1,0 +1,222 @@
+"""Continuous-batching engine: slot-recycled decode over a shared KV cache.
+
+The static ``ServeEngine`` starts every request together and burns decode
+steps on finished slots until the whole batch drains. This engine keeps a
+fixed pool of ``n_slots`` cache slots and a ``Scheduler``: when a slot
+finishes (EOS or token budget) it is released and the next arrived request
+is prefilled *into that slot* (``transformer.prefill_slot``) while the other
+slots keep decoding — per-slot position vectors make the ragged decode
+exact. Decode is the memory-bound regime where the packed SLiM weight
+stream pays off, so slot occupancy is the lever on realized tokens/s.
+
+Device/host split: the decode step carries logits, per-slot positions, the
+active mask, emitted counts, and the output token buffer entirely on
+device; the host syncs two small vectors (active, emitted) once per
+``sync_every``-step burst to run the scheduler, and fetches token buffers
+only when a slot finishes. No per-token host round-trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.metrics import ServingMetrics
+from repro.serving.request import Request
+from repro.serving.sampling import sample_and_emit
+from repro.serving.scheduler import Scheduler
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class ContinuousResult:
+    requests: List[Request]  # outputs filled in, input order
+    metrics: Dict[str, float]  # ServingMetrics.summary()
+    slot_of: Dict[int, int]  # rid -> slot it ran in
+
+    @property
+    def outputs(self) -> Dict[int, List[int]]:
+        return {r.rid: r.output for r in self.requests}
+
+
+class ContinuousEngine:
+    def __init__(
+        self,
+        params: Params,
+        cfg: ModelConfig,
+        n_slots: int = 8,
+        max_len: int = 512,
+        eos_id: Optional[int] = None,
+        prefill_bucket: int = 0,
+        seed: int = 0,
+        clock: Optional[Callable[[], float]] = None,
+        sleep: Optional[Callable[[float], None]] = None,
+    ):
+        assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
+        if any(sp.moe for sp in cfg.period):
+            # MoE expert capacity couples batch rows at decode: garbage
+            # tokens in freed/never-filled slots compete for expert queue
+            # positions and can displace live requests' tokens, breaking the
+            # exactness contract. Capacity-masked dispatch is a follow-up
+            # (ROADMAP); until then MoE archs serve via the static engine.
+            raise ValueError(
+                f"{cfg.name}: continuous batching over MoE periods is not "
+                "exact (expert capacity couples slots); use ServeEngine"
+            )
+        if prefill_bucket > 0 and not T.supports_ragged_prefill(cfg):
+            raise ValueError(
+                f"{cfg.name}: prefill bucketing needs ragged prefill "
+                "(pure-attention periods); use prefill_bucket=0"
+            )
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.prefill_bucket = prefill_bucket
+        self.seed = seed
+        if clock is None:
+            self._clock, self._sleep = time.time, time.sleep
+        else:
+            # a custom clock must come with a sleep that advances it — a real
+            # time.sleep against a frozen clock would spin the idle wait
+            # forever when the queue holds only future arrivals
+            self._clock = clock
+            self._sleep = sleep if sleep is not None else getattr(clock, "sleep", None)
+            if self._sleep is None:
+                raise ValueError(
+                    "custom clock needs a sleep(dt) (attribute or `sleep=` "
+                    "argument) that advances it"
+                )
+        self._ragged = T.supports_ragged_prefill(cfg)
+
+        ragged = self._ragged
+
+        def _admit(
+            params, cache, logits, pos, active, emitted, maxnew, temps,
+            toks, true_len, slot, budget, temp,
+        ):
+            """Prefill one request into ``slot`` and splice its carry state
+            (logits row, position, budget, sampling) in the same jit call —
+            one dispatch per admission instead of one per state vector."""
+            row, cache = T.prefill_slot(
+                params, cfg, cache, {"tokens": toks}, slot, max_len,
+                true_len if ragged else None,
+            )
+            logits = logits.at[slot].set(row[0])
+            pos = pos.at[slot].set(true_len)
+            active = active.at[slot].set(True)
+            emitted = emitted.at[slot].set(0)
+            maxnew = maxnew.at[slot].set(budget)
+            temps = temps.at[slot].set(temp)
+            return cache, logits, pos, active, emitted, maxnew, temps
+
+        # one compile per prefill shape (bounded by bucketing); carry donated
+        self._admit = jax.jit(_admit, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
+
+        eos = -1 if eos_id is None else int(eos_id)  # -1 never matches a token
+
+        def _step(params, cache, logits, pos, active, emitted, maxnew, buf, key, temps):
+            nxt, buf, emitted, hit_eos, key = sample_and_emit(
+                logits, temps, key, buf, active, emitted, eos
+            )
+            finished = active & (hit_eos | (emitted >= maxnew))
+            still = active & ~finished
+            logits, cache = T.decode_step(params, self.cfg, cache, nxt[:, None], pos)
+            # freeze finished/inactive rows: their slot is garbage until the
+            # next prefill_slot replaces it wholesale
+            pos = pos + still.astype(jnp.int32)
+            return cache, logits, pos, still, emitted, buf, key
+
+        self._step = jax.jit(_step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+
+    def run(
+        self,
+        requests: Sequence[Request],
+        sync_every: int = 8,
+        max_new_cap: Optional[int] = None,  # pin the buffer width (jit shape)
+    ) -> ContinuousResult:
+        cfg, b = self.cfg, self.n_slots
+        sched = Scheduler(b, self.max_len, self.prefill_bucket)
+        metrics = ServingMetrics(b)
+        for r in requests:
+            sched.submit(r)
+            metrics.on_submit(r.rid, r.arrival)
+        cap = max_new_cap or max((r.max_new_tokens for r in requests), default=1)
+        over = [r.rid for r in requests if r.max_new_tokens > cap]
+        if over:
+            raise ValueError(
+                f"requests {over} exceed max_new_cap={cap}; outputs would be "
+                "silently truncated"
+            )
+
+        cache = T.init_cache(cfg, b, self.max_len)
+        logits = jnp.zeros((b, cfg.vocab_size), jnp.float32)
+        pos = jnp.zeros((b,), jnp.int32)
+        active = jnp.zeros((b,), bool)
+        emitted = jnp.zeros((b,), jnp.int32)
+        maxnew = jnp.ones((b,), jnp.int32)
+        buf = jnp.zeros((b, cap), jnp.int32)
+        temps = jnp.zeros((b,), jnp.float32)
+        key = jax.random.PRNGKey(self.seed)
+
+        running: Dict[int, Request] = {}  # slot -> request
+        t0 = self._clock()
+        now = lambda: self._clock() - t0
+
+        while sched.pending() or running:
+            admits = sched.admit(now())
+            if not admits and not running:
+                nxt_arrival = sched.next_arrival()
+                assert nxt_arrival is not None
+                self._sleep(max(nxt_arrival - now(), 0.0) + 1e-4)
+                continue
+
+            for slot, req in admits:
+                metrics.on_admit(req.rid, now())
+                plen = req.prompt_len
+                blen = sched.bucket_len(plen)
+                toks = jnp.asarray(
+                    req.prompt + [0] * (blen - plen), jnp.int32
+                )[None, :]
+                cache, logits, pos, active, emitted, maxnew, temps = self._admit(
+                    self.params, cache, logits, pos, active, emitted, maxnew,
+                    temps, toks, jnp.int32(plen), jnp.int32(slot),
+                    jnp.int32(req.max_new_tokens), jnp.float32(req.temperature),
+                )
+                jax.block_until_ready(logits)
+                metrics.on_first_token(req.rid, now())
+                running[slot] = req
+
+            metrics.on_decode_steps(sync_every)
+            for _ in range(sync_every):
+                cache, logits, pos, active, emitted, buf, key = self._step(
+                    self.params, cache, logits, pos, active, emitted,
+                    maxnew, buf, key, temps,
+                )
+            host_active, host_emitted = jax.device_get((active, emitted))
+
+            done_slots = [s for s in running if not host_active[s]]
+            if done_slots:
+                host_buf = jax.device_get(buf)
+                t_done = now()
+                for slot in done_slots:
+                    req = running.pop(slot)
+                    n = int(host_emitted[slot])
+                    req.output = [int(t) for t in host_buf[slot, :n]]
+                    metrics.on_finish(req.rid, t_done, n)
+                    sched.release(slot)
+
+        return ContinuousResult(
+            requests=list(requests),
+            metrics=metrics.summary(),
+            slot_of=dict(sched.assignments),
+        )

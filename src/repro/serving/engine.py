@@ -1,19 +1,25 @@
 """Batched serving engine for (compressed) models.
 
-Static-batch continuous decoding: a fixed slot count, per-slot positions and
-EOS tracking, greedy or temperature sampling, one jit'd decode_step shared
+Static-batch decoding: a fixed slot count, per-slot positions and EOS
+tracking, greedy or temperature sampling, one jit'd generation step shared
 across the run (cache donated — no per-token reallocation). Works with dense
 or SLiM-compressed parameter trees (the forward dispatches per leaf).
 
+The decode loop keeps everything on device: emitted tokens accumulate in a
+preallocated [B, max_new] buffer and the EOS/done mask is folded into the
+jitted step, so the host transfers results once at the end (plus one scalar
+all-done probe every ``sync_every`` steps when an EOS id is set) instead of
+a per-token device round-trip.
+
 This is the serving counterpart of the paper's deployment section: weights
 live in the packed SLiM format; decode is the memory-bound regime where the
-3-bit weight stream pays off (bench_speedup.py quantifies it).
+packed weight stream pays off (bench_speedup.py quantifies it). For
+staggered arrivals and slot recycling see ``serving.continuous``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.sampling import sample_and_emit
 
 Params = Dict[str, Any]
 
@@ -51,12 +58,18 @@ class ServeEngine:
         self.cfg = cfg
         self.max_len = max_len
         self.eos_id = eos_id
+        eos = -1 if eos_id is None else int(eos_id)  # -1 never matches
 
-        def _decode(params, cache, tok, pos):
-            return T.decode_step(params, cfg, cache, tok, pos)
+        def _gen_step(params, cache, logits, pos, key, buf, emitted, done, temp):
+            nxt, buf, emitted, hit_eos, key = sample_and_emit(
+                logits, temp, key, buf, ~done, emitted, eos
+            )
+            done = done | hit_eos
+            logits, cache = T.decode_step(params, cfg, cache, nxt[:, None], pos)
+            return cache, logits, pos + 1, key, buf, emitted, done
 
-        self._decode = jax.jit(
-            _decode, donate_argnums=(1,) if donate_cache else ()
+        self._gen_step = jax.jit(
+            _gen_step, donate_argnums=(1,) if donate_cache else ()
         )
         self._prefill = jax.jit(
             lambda params, batch: T.prefill(params, cfg, batch, max_len=max_len)
@@ -68,6 +81,7 @@ class ServeEngine:
         max_new_tokens: int = 32,
         temperature: float = 0.0,
         seed: int = 0,
+        sync_every: int = 16,  # all-done probe cadence when eos_id is set
     ) -> GenerationResult:
         tok_key = "tokens" if "tokens" in batch else "embeds"
         b, s = batch[tok_key].shape[:2]
@@ -79,33 +93,30 @@ class ServeEngine:
         prefill_s = time.time() - t0
 
         key = jax.random.PRNGKey(seed)
+        pos = jnp.full((b,), s, jnp.int32)  # per-slot positions (lockstep here)
+        buf = jnp.zeros((b, max_new_tokens), jnp.int32)
+        emitted = jnp.zeros((b,), jnp.int32)
         done = jnp.zeros((b,), bool)
-        out: List[List[int]] = [[] for _ in range(b)]
+        temp = jnp.float32(temperature)
 
         t0 = time.time()
         steps = 0
         for i in range(max_new_tokens):
-            if temperature > 0:
-                key, sk = jax.random.split(key)
-                nxt = jax.random.categorical(sk, logits / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            nxt = nxt.astype(jnp.int32)
-            host = jax.device_get(nxt)
-            for j in range(b):
-                if not bool(done[j]):
-                    out[j].append(int(host[j]))
-            if self.eos_id is not None:
-                done = done | (nxt == self.eos_id)
-                if bool(jnp.all(done)):
-                    steps = i + 1
-                    break
-            logits, cache = self._decode(
-                self.params, cache, nxt[:, None], jnp.int32(s + i)
+            cache, logits, pos, key, buf, emitted, done = self._gen_step(
+                self.params, cache, logits, pos, key, buf, emitted, done, temp
             )
             steps = i + 1
-        jax.block_until_ready(logits)
+            if (
+                self.eos_id is not None
+                and steps % sync_every == 0
+                and bool(jax.device_get(jnp.all(done)))
+            ):
+                break
+        host_buf, host_emitted = jax.device_get((buf, emitted))
         decode_s = time.time() - t0
+        out = [
+            [int(t) for t in host_buf[j, : host_emitted[j]]] for j in range(b)
+        ]
         return GenerationResult(
             tokens=out, steps=steps, prefill_s=prefill_s, decode_s=decode_s
         )

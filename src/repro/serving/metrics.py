@@ -1,0 +1,108 @@
+"""Serving metrics: per-request TTFT/latency and fleet-level throughput and
+slot occupancy.
+
+All times are seconds relative to the run start (the engine's clock).
+TTFT is measured at prefill completion — with greedy sampling the first
+token is fully determined by the prefill logits, and this definition is
+engine-agnostic so static and continuous engines compare directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    arrival: float
+    admitted: Optional[float] = None
+    first_token: Optional[float] = None
+    finished: Optional[float] = None
+    n_tokens: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished is None:
+            return None
+        return self.finished - self.arrival
+
+
+def _quantile(xs: List[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    idx = min(len(ys) - 1, max(0, math.ceil(q * len(ys)) - 1))
+    return ys[idx]
+
+
+class ServingMetrics:
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.requests: Dict[int, RequestTrace] = {}
+        self.occupancy_samples: List[float] = []  # active slots per sample
+        self.decode_steps: int = 0  # for token-exact occupancy
+        self.end_time: float = 0.0
+
+    # -- event hooks -------------------------------------------------------
+
+    def on_submit(self, rid: int, arrival: float) -> None:
+        self.requests[rid] = RequestTrace(arrival=arrival)
+
+    def on_admit(self, rid: int, t: float) -> None:
+        self.requests[rid].admitted = t
+
+    def on_first_token(self, rid: int, t: float) -> None:
+        self.requests[rid].first_token = t
+
+    def on_finish(self, rid: int, t: float, n_tokens: int) -> None:
+        tr = self.requests[rid]
+        tr.finished = t
+        tr.n_tokens = n_tokens
+        self.end_time = max(self.end_time, t)
+
+    def on_occupancy(self, active_slots: float) -> None:
+        self.occupancy_samples.append(active_slots)
+
+    def on_decode_steps(self, n: int) -> None:
+        """Count decode steps run across all slots. When recorded, occupancy
+        is computed token-exactly as emitted_tokens / (steps * slots) — every
+        step emits exactly one token per truly-live slot — instead of from
+        the coarser per-sample counts."""
+        self.decode_steps += n
+
+    # -- summary -----------------------------------------------------------
+
+    def total_tokens(self) -> int:
+        return sum(tr.n_tokens for tr in self.requests.values())
+
+    def summary(self) -> Dict[str, float]:
+        ttfts = [tr.ttft for tr in self.requests.values() if tr.ttft is not None]
+        lats = [tr.latency for tr in self.requests.values() if tr.latency is not None]
+        dur = max(self.end_time, 1e-9)
+        if self.decode_steps > 0:
+            occ = self.total_tokens() / (self.decode_steps * self.n_slots)
+        elif self.occupancy_samples:
+            occ = sum(self.occupancy_samples) / (
+                len(self.occupancy_samples) * self.n_slots
+            )
+        else:
+            occ = 0.0
+        return {
+            "n_requests": float(len(self.requests)),
+            "completed": float(len(lats)),
+            "total_tokens": float(self.total_tokens()),
+            "duration_s": dur,
+            "tokens_per_s": self.total_tokens() / dur,
+            "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+            "p95_ttft_s": _quantile(ttfts, 0.95),
+            "mean_latency_s": sum(lats) / len(lats) if lats else float("nan"),
+            "p95_latency_s": _quantile(lats, 0.95),
+            "mean_occupancy": occ,
+        }

@@ -1,0 +1,85 @@
+"""Requests, the arrival queue, and synthetic workload traces.
+
+A ``Request`` is one user generation: a token prompt, an arrival time
+(seconds, relative to trace start), a generation budget, and per-request
+sampling parameters. ``RequestQueue`` is the arrival-ordered admission
+queue the scheduler pops from. ``synthetic_trace`` builds deterministic
+Poisson-arrival workloads for benchmarks and the ``--workload`` serve mode.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    arrival: float = 0.0  # seconds since trace start
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # per-request sampling (0 = greedy)
+
+    # filled in by the engine
+    output: Optional[List[int]] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+class RequestQueue:
+    """Arrival-ordered FIFO: requests become poppable once ``now`` has
+    passed their arrival time (the trace replays real clock arrivals)."""
+
+    def __init__(self, requests: Sequence[Request] = ()):
+        self._q: List[Request] = sorted(requests, key=lambda r: r.arrival)
+
+    def push(self, req: Request) -> None:
+        bisect.insort(self._q, req, key=lambda r: r.arrival)
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        if self._q and self._q[0].arrival <= now:
+            return self._q.pop(0)
+        return None
+
+    def next_arrival(self) -> Optional[float]:
+        return self._q[0].arrival if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+def synthetic_trace(
+    n_requests: int,
+    rate: float,  # mean arrivals per second (Poisson)
+    vocab_size: int,
+    prompt_len: Tuple[int, int] = (16, 16),  # inclusive range
+    max_new_tokens: Tuple[int, int] = (16, 32),
+    temperature: float = 0.0,
+    seed: int = 0,
+) -> List[Request]:
+    """Deterministic Poisson-arrival trace. The first request arrives at
+    t=0 so runs start immediately; subsequent gaps are exponential."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), n_requests)
+    gaps[0] = 0.0
+    arrivals = np.cumsum(gaps)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
+        mnew = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
+        prompt = rng.integers(0, vocab_size, plen).tolist()
+        reqs.append(
+            Request(
+                rid=i,
+                prompt=[int(t) for t in prompt],
+                arrival=float(arrivals[i]),
+                max_new_tokens=mnew,
+                temperature=temperature,
+            )
+        )
+    return reqs

@@ -1,0 +1,37 @@
+"""Shared on-device sample/emit core for the serving engines.
+
+Both the static (``engine.ServeEngine``) and continuous
+(``continuous.ContinuousEngine``) decode steps need the same primitive:
+draw the next token per row (greedy or temperature), append it to each
+live row's output buffer, and flag EOS hits — all inside jit, with no
+host traffic. Kept in one place so the two engines can't drift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_and_emit(logits, temps, key, buf, live, emitted, eos):
+    """One sampling + emission step for all rows.
+
+    logits  [B, V] f32      carried logits to sample from
+    temps   scalar or [B]   per-row temperature (0 = greedy)
+    buf     [B, cap] i32    output token buffer
+    live    [B] bool        rows still emitting (others' writes are dropped)
+    emitted [B] i32         tokens emitted so far per row
+    eos     int             EOS token id (-1 = never matches)
+
+    Returns (nxt [B] i32, buf, emitted, hit_eos [B] bool, key).
+    """
+    b = logits.shape[0]
+    key, sk = jax.random.split(key)
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.broadcast_to(jnp.asarray(temps, jnp.float32), (b,))
+    sampled = jax.random.categorical(sk, logits / jnp.maximum(t, 1e-6)[:, None])
+    nxt = jnp.where(t > 0, sampled, greedy).astype(jnp.int32)
+    # dead rows target index buf.shape[1]; mode="drop" discards the write
+    idx = jnp.where(live, emitted, buf.shape[1])
+    buf = buf.at[jnp.arange(b), idx].set(nxt, mode="drop")
+    emitted = emitted + live.astype(jnp.int32)
+    return nxt, buf, emitted, nxt == eos, key

@@ -1,0 +1,89 @@
+"""Slot scheduler for continuous batching.
+
+Maps queued requests onto a fixed pool of decode slots: a slot freed by a
+finished request (EOS or budget) is refilled mid-flight by the next arrived
+request, so decode batches stay full under load instead of draining to the
+slowest member (the static-batch failure mode).
+
+Admission control is by construction: a request is only admitted when
+``prompt_len + max_new_tokens`` fits the engine's cache (checked at
+``submit``) and a slot is free. Optional prefill-length bucketing pads the
+prompt up to the next multiple of ``prefill_bucket``, bounding the number of
+distinct prefill shapes — and therefore jit recompiles — to
+``max_len / prefill_bucket`` (exactness of padded prefill is the model's
+``supports_ragged_prefill`` contract).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.request import Request, RequestQueue
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, max_len: int, prefill_bucket: int = 0):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+        self.queue = RequestQueue()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.assignments: Dict[int, int] = {}  # rid -> slot (history, last wins)
+
+    # -- admission --------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        need = req.prompt_len + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+budget {need} exceeds max_len "
+                f"{self.max_len}"
+            )
+        if req.prompt_len == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 "
+                "(the decode step always emits the first sampled token)"
+            )
+        self.queue.push(req)
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit(self, now: float) -> List[Tuple[int, Request]]:
+        """Pop arrived requests into free slots; returns (slot, request)
+        pairs to prefill. Called between decode bursts."""
+        admitted = []
+        for slot in self.free_slots():
+            req = self.queue.pop_ready(now)
+            if req is None:
+                break
+            self.slots[slot] = req
+            self.assignments[req.rid] = slot
+            admitted.append((slot, req))
+        return admitted
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+
+    # -- state ------------------------------------------------------------
+
+    def pending(self) -> bool:
+        return len(self.queue) > 0
+
+    def running(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def next_arrival(self) -> Optional[float]:
+        return self.queue.next_arrival()
+
+    # -- prefill shape bucketing ------------------------------------------
+
+    def bucket_len(self, prompt_len: int) -> int:
+        """Padded prefill length for a prompt: next multiple of
+        ``prefill_bucket`` (0 = exact length, one compile per distinct
+        prompt length)."""
+        if self.prefill_bucket <= 0:
+            return prompt_len
+        b = self.prefill_bucket
+        return min(-(-prompt_len // b) * b, self.max_len)

@@ -1,0 +1,67 @@
+"""Property-test shim: use hypothesis when installed, otherwise a minimal
+deterministic fallback so the tier-1 suite collects and runs on a clean
+environment (the real dependency is recorded in requirements-dev.txt).
+
+The fallback implements just the surface these tests use — ``@given`` with
+positional strategies, ``@settings(max_examples=..., deadline=...)``, and
+the ``integers`` / ``floats`` / ``sampled_from`` strategies — and runs each
+test body on a handful of examples drawn from a per-test seeded RNG. No
+shrinking, no search: thinner coverage than hypothesis, same invariants.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on clean environments
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+    import zlib
+
+    _FALLBACK_EXAMPLES = 5  # cap: fallback trades coverage for speed
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: elements[r.randrange(len(elements))])
+
+    def settings(max_examples=None, **_kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._hyp_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = min(getattr(fn, "_hyp_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(*args, *[s.draw(rng) for s in strategies], **kw)
+
+            # keep pytest from introspecting the wrapped signature and
+            # mistaking strategy-filled params for fixtures
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -68,6 +68,8 @@ def test_arch_prefill_decode(arch):
     assert logits.shape == (2, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits)))
     nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    logits2, cache = T.decode_step(params, cfg, cache, nxt, jnp.int32(16))
+    logits2, cache = T.decode_step(
+        params, cfg, cache, nxt, jnp.full((2,), 16, jnp.int32)
+    )
     assert logits2.shape == (2, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits2)))

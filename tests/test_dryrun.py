@@ -26,10 +26,10 @@ def test_ef_allreduce_int8_shardmap():
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from repro.distributed import ef_allreduce_int8
+from repro.distributed import ef_allreduce_int8, shard_map
 mesh = Mesh(np.array(jax.devices()[:4]), ('data',))
 x = jnp.arange(64, dtype=jnp.float32).reshape(4, 16) / 7.0
-f = jax.jit(jax.shard_map(
+f = jax.jit(shard_map(
     lambda a: ef_allreduce_int8(a, 'data'),
     mesh=mesh, in_specs=P('data'), out_specs=P('data')))
 out = f(x)

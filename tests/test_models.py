@@ -36,7 +36,9 @@ def _consistency(cfg, S=33, vision=False):
     pbatch = dict(batch)
     pbatch["tokens"] = toks[:, :S]
     _, cache = T.prefill(params, cfg, pbatch, max_len=S + 8)
-    dec, _ = T.decode_step(params, cfg, cache, toks[:, S : S + 1], jnp.int32(S))
+    dec, _ = T.decode_step(
+        params, cfg, cache, toks[:, S : S + 1], jnp.full((B,), S, jnp.int32)
+    )
     return float(jnp.max(jnp.abs(dec - full)))
 
 

@@ -1,7 +1,7 @@
 """Packing round-trip properties (hypothesis) — the deployed HBM layout."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.packing import (
     compress_24,

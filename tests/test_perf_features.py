@@ -65,7 +65,9 @@ class TestKVQuant:
         h, _, _ = T.forward_hidden(params, cfg, x)
         full = L.linear(T._head_weights(params, cfg), h[:, -1:, :])[:, 0]
         _, cache = T.prefill(params, cfgq, {"tokens": toks[:, :32]}, max_len=40)
-        dec, _ = T.decode_step(params, cfgq, cache, toks[:, 32:33], jnp.int32(32))
+        dec, _ = T.decode_step(
+            params, cfgq, cache, toks[:, 32:33], jnp.full((2,), 32, jnp.int32)
+        )
         # int8 KV costs a small, bounded error
         err = float(jnp.max(jnp.abs(dec - full)))
         assert err < 0.25, err
@@ -77,7 +79,7 @@ class TestKVQuant:
         toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, V)
         _, cache = T.prefill(params, cfgq, {"tokens": toks}, max_len=32)
         dec, cache = T.decode_step(
-            params, cfgq, cache, toks[:, :1], jnp.int32(24)
+            params, cfgq, cache, toks[:, :1], jnp.full((2,), 24, jnp.int32)
         )
         assert bool(jnp.all(jnp.isfinite(dec)))
         assert cache["layer_0"]["k_scale"].shape[-1] == cfgq.n_kv_heads

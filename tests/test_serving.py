@@ -1,0 +1,299 @@
+"""Continuous-batching serving subsystem tests.
+
+Covers the ISSUE acceptance surface: scheduler slot recycling (including a
+slot freed by EOS), per-slot position decode matching fresh static batches
+bit-for-bit, hand-computable metrics, and continuous == static greedy
+equivalence for dense and SLiM-compressed params.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.pipeline import CompressionConfig
+from repro.data import SyntheticLMConfig, calibration_batch
+from repro.models import transformer as T
+from repro.models.compress import compress_model
+from repro.serving import (
+    ContinuousEngine,
+    Request,
+    RequestQueue,
+    Scheduler,
+    ServeEngine,
+    ServingMetrics,
+    synthetic_trace,
+)
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("slim-tiny")
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=384, vocab_size=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n, s, seed=7):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n, s), 0, cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler / queue (host-only)
+# ---------------------------------------------------------------------------
+
+class TestScheduler:
+    def test_queue_arrival_gating(self):
+        q = RequestQueue([Request(0, [1], arrival=1.0), Request(1, [1], arrival=0.0)])
+        assert q.pop_ready(0.5).rid == 1
+        assert q.pop_ready(0.5) is None  # rid 0 not arrived yet
+        assert q.next_arrival() == 1.0
+        assert q.pop_ready(2.0).rid == 0
+
+    def test_admission_and_recycling(self):
+        s = Scheduler(n_slots=2, max_len=64)
+        for i in range(4):
+            s.submit(Request(i, [1] * 4, arrival=0.0, max_new_tokens=4))
+        first = s.admit(now=0.0)
+        assert [slot for slot, _ in first] == [0, 1]
+        assert s.admit(now=0.0) == []  # pool full
+        s.release(0)  # EOS frees slot 0
+        nxt = s.admit(now=0.0)
+        assert len(nxt) == 1 and nxt[0][0] == 0  # recycled into the freed slot
+        assert nxt[0][1].rid == 2
+        assert s.running() == 2 and s.pending()
+
+    def test_admission_control_rejects_oversized(self):
+        s = Scheduler(n_slots=1, max_len=16)
+        with pytest.raises(ValueError):
+            s.submit(Request(0, [1] * 10, max_new_tokens=10))
+        with pytest.raises(ValueError):
+            s.submit(Request(1, []))
+        with pytest.raises(ValueError):
+            s.submit(Request(2, [1], max_new_tokens=0))
+
+    def test_prefill_bucketing(self):
+        s = Scheduler(n_slots=1, max_len=64, prefill_bucket=16)
+        assert s.bucket_len(1) == 16
+        assert s.bucket_len(16) == 16
+        assert s.bucket_len(17) == 32
+        assert s.bucket_len(60) == 64  # clamped to max_len
+        assert Scheduler(1, 64).bucket_len(13) == 13  # bucketing off
+
+
+# ---------------------------------------------------------------------------
+# Per-slot positions / slot-targeted prefill
+# ---------------------------------------------------------------------------
+
+class TestPerSlotDecode:
+    def test_matches_fresh_static_batch(self, model):
+        """Slot-prefilled cache + per-slot position decode reproduces the
+        logits of an equivalent fresh static batch, slot by slot."""
+        cfg, params = model
+        p_long = _prompts(cfg, 1, 12, seed=1)
+        p_short = _prompts(cfg, 1, 7, seed=2)
+
+        # fresh static references (each prompt alone, scalar pos)
+        def solo(prompt, steps=3):
+            logits, cache = T.prefill(params, cfg, {"tokens": prompt}, max_len=MAX_LEN)
+            toks, ls = [], []
+            for i in range(steps):
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                toks.append(int(nxt[0]))
+                ls.append(logits)
+                logits, cache = T.decode_step(
+                    params, cfg, cache, nxt[:, None], jnp.int32(prompt.shape[1] + i)
+                )
+            return toks, ls
+
+        ref_long, logits_long = solo(p_long)
+        ref_short, logits_short = solo(p_short)
+
+        # batched: two slot-targeted prefills (one ragged) + vector-pos decode
+        cache = T.init_cache(cfg, 2, MAX_LEN)
+        l0, cache = T.prefill_slot(params, cfg, cache, {"tokens": p_long}, 0, MAX_LEN)
+        pad = jnp.zeros((1, 5), p_short.dtype)
+        l1, cache = T.prefill_slot(
+            params, cfg, cache, {"tokens": jnp.concatenate([p_short, pad], 1)},
+            1, MAX_LEN, true_len=7,
+        )
+        logits = jnp.stack([l0[0], l1[0]])
+        pos = jnp.array([12, 7], jnp.int32)
+        out = [[], []]
+        for i in range(3):
+            assert jnp.allclose(logits[0], logits_long[i][0], atol=1e-5)
+            assert jnp.allclose(logits[1], logits_short[i][0], atol=1e-5)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            out[0].append(int(nxt[0]))
+            out[1].append(int(nxt[1]))
+            logits, cache = T.decode_step(params, cfg, cache, nxt[:, None], pos)
+            pos = pos + 1
+        assert out[0] == ref_long
+        assert out[1] == ref_short
+
+    def test_ragged_prefill_exact(self, model):
+        cfg, params = model
+        p = _prompts(cfg, 1, 9, seed=3)
+        exact, _ = T.prefill(params, cfg, {"tokens": p}, max_len=MAX_LEN)
+        padded = jnp.concatenate([p, jnp.zeros((1, 7), p.dtype)], 1)
+        ragged, _ = T.prefill_ragged(params, cfg, {"tokens": padded}, MAX_LEN, 9)
+        assert jnp.allclose(exact, ragged, atol=1e-5)
+
+    def test_ragged_prefill_guard(self, model):
+        """Ragged prefill is refused where padding is inexact — SSM/MoE
+        periods and sliding-window ring caches (pad tokens evict real
+        in-window keys during the ring roll)."""
+        cfg, _ = model
+        assert T.supports_ragged_prefill(cfg)
+        assert not T.supports_ragged_prefill(
+            dataclasses.replace(cfg, sliding_window=8)
+        )
+
+    def test_scalar_pos_still_supported(self, model):
+        cfg, params = model
+        p = _prompts(cfg, 2, 8, seed=4)
+        _, cache = T.prefill(params, cfg, {"tokens": p}, max_len=MAX_LEN)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        d_scalar, _ = T.decode_step(params, cfg, cache, tok, jnp.int32(8))
+        _, cache2 = T.prefill(params, cfg, {"tokens": p}, max_len=MAX_LEN)
+        d_vec, _ = T.decode_step(params, cfg, cache2, tok, jnp.full((2,), 8, jnp.int32))
+        assert jnp.allclose(d_scalar, d_vec)
+
+
+# ---------------------------------------------------------------------------
+# Continuous engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _as_requests(prompts, max_new=6, temperature=0.0):
+    return [
+        Request(
+            rid=i, prompt=[int(t) for t in prompts[i]], arrival=0.0,
+            max_new_tokens=max_new, temperature=temperature,
+        )
+        for i in range(prompts.shape[0])
+    ]
+
+
+class TestContinuousEngine:
+    def test_matches_static_greedy_dense(self, model):
+        cfg, params = model
+        prompts = _prompts(cfg, 3, 10)
+        static = ServeEngine(params, cfg, max_len=MAX_LEN)
+        ref = static.generate({"tokens": prompts}, max_new_tokens=6)
+        eng = ContinuousEngine(params, cfg, n_slots=3, max_len=MAX_LEN)
+        res = eng.run(_as_requests(prompts), sync_every=2)
+        assert [res.outputs[i] for i in range(3)] == ref.tokens
+        m = res.metrics
+        assert m["completed"] == 3 and m["total_tokens"] == 18
+        assert m["tokens_per_s"] > 0 and 0 < m["mean_occupancy"] <= 1
+
+    def test_matches_static_greedy_compressed(self, model):
+        cfg, params = model
+        dcfg = SyntheticLMConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0
+        )
+        calib = calibration_batch(dcfg, n_samples=4)
+        cp, _ = compress_model(
+            params, cfg, calib,
+            CompressionConfig(adapter="slim", rank=16, quantize_adapters=True),
+        )
+        prompts = _prompts(cfg, 2, 8)
+        static = ServeEngine(cp, cfg, max_len=MAX_LEN)
+        ref = static.generate({"tokens": prompts}, max_new_tokens=5)
+        eng = ContinuousEngine(cp, cfg, n_slots=2, max_len=MAX_LEN)
+        res = eng.run(_as_requests(prompts, max_new=5), sync_every=3)
+        assert [res.outputs[i] for i in range(2)] == ref.tokens
+
+    def test_eos_frees_slot_for_queued_request(self, model):
+        """A queued request is admitted into the slot its predecessor freed
+        via EOS, and neither output is corrupted by the recycling."""
+        cfg, params = model
+        prompts = _prompts(cfg, 2, 10)
+        static = ServeEngine(params, cfg, max_len=MAX_LEN)
+        probe = static.generate({"tokens": prompts[:1]}, max_new_tokens=8)
+        eos = probe.tokens[0][2]  # a token the model emits at step 3
+
+        static_eos = ServeEngine(params, cfg, max_len=MAX_LEN, eos_id=eos)
+        ref0 = static_eos.generate({"tokens": prompts[:1]}, max_new_tokens=8, sync_every=2)
+        ref1 = static_eos.generate({"tokens": prompts[1:2]}, max_new_tokens=8, sync_every=2)
+
+        eng = ContinuousEngine(params, cfg, n_slots=1, max_len=MAX_LEN, eos_id=eos)
+        res = eng.run(_as_requests(prompts, max_new=8), sync_every=2)
+        # rid 0 stopped at EOS (shorter than budget) and freed the only slot
+        assert res.outputs[0] == ref0.tokens[0]
+        assert len(res.outputs[0]) < 8
+        assert res.outputs[1] == ref1.tokens[0]
+        assert res.slot_of == {0: 0, 1: 0}  # both ran in the recycled slot
+
+    def test_more_requests_than_slots_ragged(self, model):
+        """Staggered arrivals, ragged prompts and budgets, bucketing on:
+        every recycled output equals its solo static run."""
+        cfg, params = model
+        trace = synthetic_trace(
+            5, rate=100.0, vocab_size=cfg.vocab_size,
+            prompt_len=(5, 12), max_new_tokens=(3, 6), seed=11,
+        )
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, prefill_bucket=4
+        )
+        res = eng.run(trace, sync_every=2)
+        static = ServeEngine(params, cfg, max_len=MAX_LEN)
+        for r in res.requests:
+            solo = static.generate(
+                {"tokens": jnp.asarray([r.prompt], jnp.int32)},
+                max_new_tokens=r.max_new_tokens,
+            )
+            assert solo.tokens[0] == r.output, r.rid
+        assert res.metrics["completed"] == 5
+
+
+# ---------------------------------------------------------------------------
+# Metrics vs a hand-computed trace
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_hand_computed_trace(self):
+        m = ServingMetrics(n_slots=2)
+        # rid 0: arrives 0, first token 1, finishes 3 with 4 tokens
+        # rid 1: arrives 1, first token 1.5, finishes 5 with 8 tokens
+        # rid 2: arrives 2, admitted 3 (queued), first 3.5, finishes 6, 4 toks
+        for rid, arr in [(0, 0.0), (1, 1.0), (2, 2.0)]:
+            m.on_submit(rid, arr)
+        m.on_admit(0, 0.0); m.on_first_token(0, 1.0); m.on_finish(0, 3.0, 4)
+        m.on_admit(1, 1.0); m.on_first_token(1, 1.5); m.on_finish(1, 5.0, 8)
+        m.on_admit(2, 3.0); m.on_first_token(2, 3.5); m.on_finish(2, 6.0, 4)
+        for occ in [1, 2, 2, 2, 1]:
+            m.on_occupancy(occ)
+        s = m.summary()
+        # TTFTs: 1.0, 0.5, 1.5 -> mean 1.0, p95 = 1.5
+        assert s["mean_ttft_s"] == pytest.approx(1.0)
+        assert s["p95_ttft_s"] == pytest.approx(1.5)
+        # latencies: 3, 4, 4 -> mean 11/3
+        assert s["mean_latency_s"] == pytest.approx(11 / 3)
+        # 16 tokens over the 6s span
+        assert s["total_tokens"] == 16
+        assert s["tokens_per_s"] == pytest.approx(16 / 6.0)
+        # occupancy: (1+2+2+2+1) / (5 samples * 2 slots)
+        assert s["mean_occupancy"] == pytest.approx(0.8)
+
+    def test_token_exact_occupancy(self):
+        """When decode steps are recorded, occupancy is emitted tokens over
+        slot-steps — the accounting both engines share."""
+        m = ServingMetrics(n_slots=2)
+        m.on_submit(0, 0.0)
+        m.on_finish(0, 1.0, 12)
+        m.on_decode_steps(10)  # 10 steps x 2 slots = 20 slot-steps
+        assert m.summary()["mean_occupancy"] == pytest.approx(12 / 20)
+
+    def test_request_trace_properties(self):
+        m = ServingMetrics(n_slots=1)
+        m.on_submit(0, 1.0)
+        tr = m.requests[0]
+        assert tr.ttft is None and tr.latency is None
+        m.on_first_token(0, 2.5)
+        m.on_finish(0, 4.0, 3)
+        assert tr.ttft == pytest.approx(1.5)
+        assert tr.latency == pytest.approx(3.0)
