@@ -1,4 +1,5 @@
-"""Static-batch vs continuous-batching serving under staggered arrivals.
+"""Static-batch vs continuous-batching serving under staggered arrivals,
+plus contiguous-lane vs paged KV cache at equal cache memory.
 
 Replays the same synthetic Poisson-arrival trace (requests > slots, ragged
 generation budgets) through both engines, dense and SLiM-compressed:
@@ -12,6 +13,12 @@ generation budgets) through both engines, dense and SLiM-compressed:
 Reports total tokens/s, mean/p95 TTFT and mean occupancy for each
 engine x params cell. Continuous batching must strictly beat static on
 tokens/s and mean TTFT (the VERDICT lines; a miss raises).
+
+The paged cell holds cache memory fixed at the contiguous engine's
+``slots x max_len`` positions but allocates it in ``BLOCK_SIZE``-position
+blocks: requests only occupy blocks for ``prompt + budget``, so strictly
+more slots run concurrently in the same memory (the paged VERDICT asserts
+``peak_concurrency > slots``).
 
     PYTHONPATH=src python benchmarks/bench_serving.py
     PYTHONPATH=src python -m benchmarks.run serving
@@ -29,6 +36,7 @@ from benchmarks.common import Table, compress_with, trained_model
 from repro.core.pipeline import CompressionConfig
 from repro.serving import ContinuousEngine, ServeEngine, ServingMetrics
 from repro.serving import synthetic_trace
+from repro.serving.block_pool import RESERVED_BLOCKS
 
 # Heavy-traffic regime: arrivals fast enough that a backlog forms (the
 # decode-bound case continuous batching targets) but staggered enough that
@@ -40,6 +48,12 @@ RATE = float(os.environ.get("BENCH_SERVE_RATE", "25.0"))
 PROMPT_LEN = 32
 MAX_NEW = (4, 48)  # wide budget spread: static waves drain, continuous refills
 MAX_LEN = PROMPT_LEN + MAX_NEW[1] + 8
+BLOCK_SIZE = int(os.environ.get("BENCH_SERVE_BLOCK", "8"))
+MAX_LEN = -(-MAX_LEN // BLOCK_SIZE) * BLOCK_SIZE  # paged cache needs a multiple
+# paged cell: same cache memory as N_SLOTS contiguous max_len lanes, but
+# block-granular — so slot count can exceed the lane count
+PAGED_SLOTS = int(os.environ.get("BENCH_SERVE_PAGED_SLOTS", str(2 * N_SLOTS)))
+PAGED_BLOCKS = N_SLOTS * (MAX_LEN // BLOCK_SIZE) + RESERVED_BLOCKS
 
 
 def fresh_trace(vocab, seed=0):
@@ -91,10 +105,11 @@ def run_static(params, cfg, requests):
     return metrics.summary()
 
 
-def run_continuous(params, cfg, requests, vocab):
+def run_continuous(params, cfg, requests, vocab, n_slots=N_SLOTS, block_size=0):
+    n_blocks = PAGED_BLOCKS if block_size > 0 else None
     engine = ContinuousEngine(
-        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
-        prefill_bucket=PROMPT_LEN,
+        params, cfg, n_slots=n_slots, max_len=MAX_LEN,
+        prefill_bucket=PROMPT_LEN, block_size=block_size, n_blocks=n_blocks,
     )
     # warm the prefill/decode jit caches with a minimal same-shape trace
     warm = synthetic_trace(
@@ -118,7 +133,11 @@ def run(table: Table):
     for plabel, params in [("dense", dense), ("slim", slim)]:
         s = run_static(params, cfg, fresh_trace(vocab, seed=1))
         c = run_continuous(params, cfg, fresh_trace(vocab, seed=1), vocab)
-        for elabel, m in [("static", s), ("continuous", c)]:
+        p = run_continuous(
+            params, cfg, fresh_trace(vocab, seed=1), vocab,
+            n_slots=PAGED_SLOTS, block_size=BLOCK_SIZE,
+        )
+        for elabel, m in [("static", s), ("continuous", c), ("paged", p)]:
             table.add(
                 f"{plabel}/{elabel}",
                 tokens_per_s=round(m["tokens_per_s"], 2),
@@ -126,6 +145,7 @@ def run(table: Table):
                 p95_ttft_s=round(m["p95_ttft_s"], 4),
                 mean_occupancy=round(m["mean_occupancy"], 3),
                 total_tokens=int(m["total_tokens"]),
+                peak_slots=int(m.get("peak_concurrency", N_SLOTS)),
             )
         wins = (
             c["tokens_per_s"] > s["tokens_per_s"]
@@ -138,8 +158,27 @@ def run(table: Table):
             f"(tok/s {c['tokens_per_s']:.1f} vs {s['tokens_per_s']:.1f}, "
             f"ttft {c['mean_ttft_s']:.3f}s vs {s['mean_ttft_s']:.3f}s)"
         )
+        # paged vs contiguous lanes at EQUAL cache memory (N_SLOTS lanes
+        # = PAGED_BLOCKS blocks): block granularity must sustain strictly
+        # more concurrent slots, and complete the whole trace
+        paged_wins = (
+            p["peak_concurrency"] > N_SLOTS
+            and p["completed"] == c["completed"]
+        )
+        verdicts.append(paged_wins)
+        print(
+            f"VERDICT[{plabel}]: paged cache "
+            f"{'LIFTS' if paged_wins else 'DOES NOT LIFT'} concurrency at "
+            f"equal memory ({int(p['peak_concurrency'])} slots vs "
+            f"{N_SLOTS} max_len lanes in {PAGED_BLOCKS} x {BLOCK_SIZE}-pos "
+            f"blocks; tok/s {p['tokens_per_s']:.1f}, "
+            f"ttft {p['mean_ttft_s']:.3f}s)"
+        )
     if not all(verdicts):
-        raise RuntimeError("continuous batching failed to beat static")
+        raise RuntimeError(
+            "continuous batching failed to beat static, or the paged cache "
+            "failed to lift concurrency at equal memory"
+        )
 
 
 if __name__ == "__main__":

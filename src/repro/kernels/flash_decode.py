@@ -27,6 +27,39 @@ from repro.kernels.common import pick_block
 _NEG = -1e30
 
 
+def online_softmax_update(scores, v, valid, m_ref, l_ref, acc_ref):
+    """One FlashDecoding online-softmax accumulation step (runs inside a
+    kernel body; shared by ``flash_decode`` and ``paged_decode``).
+
+    scores [H, bs] f32   raw (scaled) q.k scores for this K/V block
+    v      [bs, H, dh]   value block
+    valid  [1, bs] bool  positions that exist for this batch row
+    m/l/acc              VMEM scratch: running max, denom, numerator
+
+    Masked positions contribute exactly zero: ``p`` is zeroed under
+    ``valid`` directly, so a fully-masked block (or row — kv_len == 0)
+    leaves (m, l, acc) untouched instead of averaging uninitialized V
+    through ``exp(_NEG - _NEG) == 1``.
+    """
+    scores = jnp.where(valid, scores, _NEG)
+    m_prev = m_ref[...]  # [H, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)  # rescale of old stats
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)  # [H, bs]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("hs,shd->hd", p, v)
+    m_ref[...] = m_new
+
+
+def online_softmax_finish(o_ref, m_ref, l_ref, acc_ref):
+    """Normalize the running numerator into the output block; rows that
+    never saw a valid position (l == 0) emit zeros, not garbage."""
+    l = l_ref[...]
+    o_ref[0] = jnp.where(l > 0, acc_ref[...] / jnp.maximum(l, 1e-20), 0.0).astype(
+        o_ref.dtype
+    )
+
+
 def _kernel(
     q_ref,  # [1, H, dh]
     k_ref,  # [1, bs, H, dh]
@@ -56,21 +89,11 @@ def _kernel(
 
     pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
     valid = pos < len_ref[0, 0]  # [1, bs]
-    scores = jnp.where(valid, scores, _NEG)
-
-    m_prev = m_ref[...]  # [H, 1]
-    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)  # rescale of old stats
-    p = jnp.exp(scores - m_new)  # [H, bs]
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("hs,shd->hd", p, v)
-    m_ref[...] = m_new
+    online_softmax_update(scores, v, valid, m_ref, l_ref, acc_ref)
 
     @pl.when(s_idx == ns - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)).astype(
-            o_ref.dtype
-        )
+        online_softmax_finish(o_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "interpret"))

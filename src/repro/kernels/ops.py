@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.compressed import SlimLinear
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.group_quant import group_dequantize, group_quantize
+from repro.kernels.paged_decode import paged_decode
 from repro.kernels.int4_matmul import int4_matmul
 from repro.kernels.sparse24_matmul import sparse24_matmul
 from repro.kernels.slim_linear import slim_linear
@@ -65,4 +66,5 @@ __all__ = [
     "group_quantize",
     "group_dequantize",
     "flash_decode",
+    "paged_decode",
 ]

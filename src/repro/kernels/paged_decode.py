@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: paged flash-decoding single-token attention.
+
+Same math as ``flash_decode`` — online-softmax attention of one query per
+batch row against that row's KV history — but K/V live in a *shared block
+pool* (``[n_blocks, bs, H, dh]``) instead of per-row contiguous lanes, and
+each row's history is the sequence of pool blocks named by its block table
+(``[B, max_blocks]`` int32). Like ``flash_decode`` it is the TPU form of
+the serving hot path, validated standalone against the XLA oracle: the
+engine's paged decode (``layers.attention_layer``) reaches the same math
+by materializing ``cache[table]`` gathers, which is exact everywhere but
+bandwidth-wasteful; this kernel is the swap-in that avoids it on TPU.
+
+The block table rides in as a scalar-prefetch operand
+(``PrefetchScalarGridSpec``): block index maps read ``tbl[i, j]`` to DMA
+the j-th logical block of row i straight from its physical pool slot — the
+gather happens in the DMA engine; nothing of size ``max_blocks * bs`` is
+materialized. Grid ``(B, max_blocks)``, sequence innermost; the running
+(max, denom, numerator) triple persists in VMEM scratch across one row's
+blocks exactly as in ``flash_decode`` (the online-softmax core is shared).
+
+Unallocated table entries point at physical block 0 (the engine's null
+block); they sit beyond ``kv_len`` and are masked the same way ragged fill
+levels already are. A row with ``kv_len == 0`` emits zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_decode import online_softmax_finish, online_softmax_update
+
+
+def _kernel(
+    tbl_ref,  # scalar-prefetch [B, M] int32 block table
+    q_ref,  # [1, H, dh]
+    k_ref,  # [1, bs, H, dh]  physical block tbl[i, j]
+    v_ref,  # [1, bs, H, dh]
+    len_ref,  # [1, 1] int32: valid kv length for this batch row
+    o_ref,  # [1, H, dh]
+    m_ref,  # scratch [H, 1] running max
+    l_ref,  # scratch [H, 1] running denom
+    acc_ref,  # scratch [H, dh] running numerator
+    *,
+    bs: int,
+    nm: int,
+    scale: float,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [H, dh]
+    k = k_ref[0].astype(jnp.float32)  # [bs, H, dh]
+    v = v_ref[0].astype(jnp.float32)
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale  # [H, bs]
+
+    # logical position of each entry in this block = j*bs + offset; the
+    # paged layout keeps each row's logical positions dense in [0, kv_len)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0, 0]  # [1, bs]
+    online_softmax_update(scores, v, valid, m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nm - 1)
+    def _finish():
+        online_softmax_finish(o_ref, m_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode(
+    q: jnp.ndarray,  # [B, H, dh]
+    k_pool: jnp.ndarray,  # [n_blocks, bs, H, dh]  (KV heads pre-expanded to H)
+    v_pool: jnp.ndarray,  # [n_blocks, bs, H, dh]
+    block_tables: jnp.ndarray,  # [B, max_blocks] int32 physical block ids
+    kv_len: jnp.ndarray,  # [B] int32 valid lengths
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, dh = q.shape
+    bs = k_pool.shape[1]
+    nm = block_tables.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    lens = kv_len.reshape(b, 1).astype(jnp.int32)
+    tbl = block_tables.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nm),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i, j, tbl: (i, 0, 0)),
+            pl.BlockSpec((1, bs, h, dh), lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, h, dh), lambda i, j, tbl: (tbl[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, tbl: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i, j, tbl: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=bs, nm=nm, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(tbl, q, k_pool, v_pool, lens)

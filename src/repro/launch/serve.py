@@ -54,7 +54,23 @@ def main(argv=None):
     p.add_argument("--rate", type=float, default=8.0, help="arrivals per second")
     p.add_argument("--prefill-bucket", type=int, default=16)
     p.add_argument("--sync-every", type=int, default=8)
+    p.add_argument(
+        "--block-size", type=int, default=0,
+        help="paged KV cache block size in positions (0 = contiguous "
+        "max_len lane per slot)",
+    )
+    p.add_argument(
+        "--n-blocks", type=int, default=None,
+        help="paged pool size in blocks (default: equal memory to the "
+        "contiguous per-slot lanes)",
+    )
     args = p.parse_args(argv)
+
+    if args.block_size > 0 and args.workload != "poisson":
+        p.error("--block-size requires --workload poisson (the static "
+                "ServeEngine has no paged cache)")
+    if args.n_blocks is not None and args.block_size <= 0:
+        p.error("--n-blocks sizes the paged pool; it needs --block-size")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -79,6 +95,8 @@ def main(argv=None):
 
     if args.workload == "poisson":
         max_len = args.prompt_len + args.new_tokens + 8
+        if args.block_size > 0 and max_len % args.block_size != 0:
+            max_len = -(-max_len // args.block_size) * args.block_size
         bucket = args.prefill_bucket if T.supports_ragged_prefill(cfg) else 0
         trace = synthetic_trace(
             args.requests,
@@ -92,12 +110,19 @@ def main(argv=None):
         engine = ContinuousEngine(
             params, cfg, n_slots=args.slots, max_len=max_len,
             prefill_bucket=bucket, seed=args.seed,
+            block_size=args.block_size, n_blocks=args.n_blocks,
         )
         res = engine.run(trace, sync_every=args.sync_every)
         m = res.metrics
+        cache_kind = (
+            f"paged(bs={args.block_size}, blocks={engine.n_blocks})"
+            if args.block_size > 0
+            else "contiguous"
+        )
         print(
             f"[serve/continuous] requests={args.requests} slots={args.slots} "
-            f"rate={args.rate}/s: {m['total_tokens']:.0f} tokens in "
+            f"cache={cache_kind} rate={args.rate}/s: "
+            f"{m['total_tokens']:.0f} tokens in "
             f"{m['duration_s']:.2f}s ({m['tokens_per_s']:.1f} tok/s)"
         )
         print(

@@ -246,6 +246,7 @@ def attention_layer(
     cfg: ModelConfig,
     cache: Optional[Params] = None,
     pos0: Any = 0,  # scalar or [B] vector: absolute position of x[:, 0] per slot
+    block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged cache
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     b, s, _ = x.shape
     h = rmsnorm(x, p["ln"], cfg.norm_eps)
@@ -275,6 +276,10 @@ def attention_layer(
     elif s > 1:
         # prefill: fill the cache (ring layout if sliding window)
         assert not per_slot, "multi-token prefill requires a scalar pos0"
+        assert block_table is None, (
+            "paged caches are prefilled per-slot (transformer.prefill_slot "
+            "splices a contiguous prefill into pool blocks)"
+        )
         c_len = cache["k"].shape[1]
         kq, ks = store(k)
         vq, vs = store(v)
@@ -309,6 +314,40 @@ def attention_layer(
                 new_cache["v_scale"] = ring(vs)
         kv_pos = jnp.arange(s, dtype=jnp.int32)
         out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
+    elif block_table is not None:
+        # single-token decode against the *paged* cache: leaves are a shared
+        # block pool ([n_blocks, bs, KV, dh] — no batch dim); each row writes
+        # its K/V at (table[row, pos // bs], pos % bs) and attends over the
+        # gather of its whole table row. Unallocated table entries point at
+        # the null block, whose pos stays -1, so the mask drops them; rows
+        # whose table is all trash (inactive slots) produce garbage that the
+        # engine discards, and their writes land in the trash block no live
+        # table references.
+        bs_blk = cache["k"].shape[1]
+        nkv, dh = cfg.n_kv_heads, cfg.d_head
+        pv = positions[:, 0] if per_slot else jnp.broadcast_to(positions[0], (b,))
+        phys = block_table[jnp.arange(b), pv // bs_blk]  # [B]
+        off = pv % bs_blk
+        kq, ks = store(k)
+        vq, vs = store(v)
+        ck = cache["k"].at[phys, off].set(kq[:, 0])
+        cv = cache["v"].at[phys, off].set(vq[:, 0])
+        cp = cache["pos"].at[phys, off].set(pv)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        l_full = block_table.shape[1] * bs_blk
+        gk = ck[block_table].reshape(b, l_full, nkv, dh)
+        gv = cv[block_table].reshape(b, l_full, nkv, dh)
+        gp = cp[block_table].reshape(b, l_full)
+        if cfg.kv_quant:
+            cks = cache["k_scale"].at[phys, off].set(ks[:, 0])
+            cvs = cache["v_scale"].at[phys, off].set(vs[:, 0])
+            new_cache["k_scale"] = cks
+            new_cache["v_scale"] = cvs
+            kd = _kv_dequantize(gk, cks[block_table].reshape(b, l_full, nkv), x.dtype)
+            vd = _kv_dequantize(gv, cvs[block_table].reshape(b, l_full, nkv), x.dtype)
+        else:
+            kd, vd = gk, gv
+        out = mha(q, kd, vd, pv[:, None], gp, cfg.sliding_window, cfg.q_chunk, plp, xkv)
     else:
         # single-token decode against the cache (ring if windowed); each batch
         # row writes at its own position, so a continuous-batching engine can
@@ -349,6 +388,28 @@ def init_attn_cache(cfg: ModelConfig, b: int, max_len: int, dtype) -> Params:
     if cfg.kv_quant:
         cache["k_scale"] = jnp.zeros((b, c_len, cfg.n_kv_heads), jnp.float32)
         cache["v_scale"] = jnp.zeros((b, c_len, cfg.n_kv_heads), jnp.float32)
+    return cache
+
+
+def init_paged_attn_cache(
+    cfg: ModelConfig, n_blocks: int, block_size: int, dtype
+) -> Params:
+    """Shared block pool replacing per-slot lanes: ``n_blocks`` blocks of
+    ``block_size`` positions each, owned block-by-block via the engine's
+    block tables (there is no batch axis — that's the point)."""
+    kv_dt = jnp.int8 if cfg.kv_quant else dtype
+    cache = {
+        "k": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.d_head), kv_dt),
+        "v": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.d_head), kv_dt),
+        "pos": -jnp.ones((n_blocks, block_size), jnp.int32),  # -1 = invalid
+    }
+    if cfg.kv_quant:
+        cache["k_scale"] = jnp.zeros(
+            (n_blocks, block_size, cfg.n_kv_heads), jnp.float32
+        )
+        cache["v_scale"] = jnp.zeros(
+            (n_blocks, block_size, cfg.n_kv_heads), jnp.float32
+        )
     return cache
 
 

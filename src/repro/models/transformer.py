@@ -147,6 +147,7 @@ def _apply_period(
     cache: Optional[Params],
     pos0,
     vision: Optional[jnp.ndarray],
+    block_table: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
     new_cache: Params = {}
     aux = jnp.zeros((), jnp.float32)
@@ -155,7 +156,7 @@ def _apply_period(
         c = None if cache is None else cache.get(f"layer_{i}")
         with L.scope(f"layer_{i}"):
             if spec.kind == "attn":
-                x, nc = L.attention_layer(p, x, cfg, c, pos0)
+                x, nc = L.attention_layer(p, x, cfg, c, pos0, block_table)
             elif spec.kind == "ssm":
                 x, nc = L.ssm_layer(p, x, cfg, c, pos0)
             elif spec.kind == "cross_attn":
@@ -183,6 +184,7 @@ def forward_hidden(
     pos0=0,
     vision: Optional[jnp.ndarray] = None,
     remat: bool = False,
+    block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged decode
 ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
     def body(carry, xs):
         h, aux = carry
@@ -195,7 +197,7 @@ def forward_hidden(
         return (h, aux + a), nc
 
     def period_fn(pp, h, c):
-        return _apply_period(cfg, pp, h, c, pos0, vision)
+        return _apply_period(cfg, pp, h, c, pos0, vision, block_table)
 
     if remat:
         period_fn = jax.checkpoint(period_fn)
@@ -304,12 +306,35 @@ def train_loss(
 # Serving: cache init, prefill, decode
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, b: int, max_len: int) -> Params:
+def init_cache(
+    cfg: ModelConfig,
+    b: int,
+    max_len: int,
+    block_size: int = 0,
+    n_blocks: int = 0,
+) -> Params:
+    """Decode cache pytree. ``block_size == 0`` (default) reserves one
+    contiguous ``max_len`` lane per batch row. ``block_size > 0`` builds a
+    *paged* cache instead: attention leaves become a shared pool of
+    ``n_blocks`` blocks addressed through per-slot block tables (decode
+    passes ``block_table``), while SSM/cross-attn leaves — O(1) per slot —
+    stay per-row."""
     dt = _dtype(cfg)
+    if block_size > 0:
+        assert n_blocks > 0, "paged cache needs an explicit pool size"
+        assert supports_paged_cache(cfg), (
+            f"{cfg.name}: paged KV cache needs sliding_window == 0 (the "
+            "ring layout aliases block offsets)"
+        )
     c: Params = {}
     for i, spec in enumerate(cfg.period):
         if spec.kind == "attn":
-            c[f"layer_{i}"] = L.init_attn_cache(cfg, b, max_len, dt)
+            if block_size > 0:
+                c[f"layer_{i}"] = L.init_paged_attn_cache(
+                    cfg, n_blocks, block_size, dt
+                )
+            else:
+                c[f"layer_{i}"] = L.init_attn_cache(cfg, b, max_len, dt)
         elif spec.kind == "ssm":
             c[f"layer_{i}"] = L.init_ssm_cache(cfg, b, dt)
         elif spec.kind == "cross_attn":
@@ -339,15 +364,19 @@ def decode_step(
     cache: Params,
     token_or_embed: jnp.ndarray,  # tokens [B, 1] int32 or embeds [B, 1, D]
     pos: jnp.ndarray,  # int32 [B] per-slot positions (scalar broadcasts)
+    block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged cache
 ) -> Tuple[jnp.ndarray, Params]:
     """One decode step. ``pos`` gives the absolute position of each row's
     token; a vector lets continuous-batching slots sit at different depths
-    (ragged decode), a scalar keeps the legacy lockstep behaviour."""
+    (ragged decode), a scalar keeps the legacy lockstep behaviour. With a
+    paged cache, ``block_table`` names each row's pool blocks."""
     if cfg.input_mode == "embeddings":
         x = token_or_embed.astype(_dtype(cfg))
     else:
         x = jnp.take(params["embed"], token_or_embed, axis=0).astype(_dtype(cfg))
-    h, cache, _ = forward_hidden(params, cfg, x, cache, pos, None)
+    h, cache, _ = forward_hidden(
+        params, cfg, x, cache, pos, None, block_table=block_table
+    )
     logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
     return logits[:, 0], cache
 
@@ -369,6 +398,15 @@ def supports_ragged_prefill(cfg: ModelConfig) -> bool:
     return cfg.sliding_window == 0 and all(
         sp.kind == "attn" and not sp.moe for sp in cfg.period
     )
+
+
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Whether the block-pool cache layout is exact for this arch. The one
+    exclusion is sliding-window attention: its ring cache overwrites by
+    ``pos % window``, which aliases block offsets across logical blocks.
+    SSM and cross-attn layers are fine — their per-slot state is O(1) and
+    stays in per-row lanes alongside the paged attention pool."""
+    return cfg.sliding_window == 0
 
 
 def prefill_ragged(
@@ -406,21 +444,63 @@ def prefill_slot(
     slot,  # traced int32: destination slot in the batched cache
     max_len: int,
     true_len=None,  # set for a right-padded prompt (ragged/bucketed prefill)
+    block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged cache
 ) -> Tuple[jnp.ndarray, Params]:
     """Prefill one request and write its cache into slot ``slot`` of an
     existing batched cache (every leaf is [n_periods, B, ...]), leaving the
     other slots untouched. The unit of work behind continuous batching:
-    freed slots are refilled mid-flight without touching neighbours."""
+    freed slots are refilled mid-flight without touching neighbours.
+
+    With a paged cache (``block_table`` given) the attention leaves are a
+    shared block pool: the contiguous single-row prefill cache is cut into
+    ``block_size`` chunks and scattered to the physical blocks named by the
+    slot's table row. Unallocated tail entries of the row point at the null
+    block, which absorbs the pad-chunk writes; those chunks carry only
+    ``pos == -1`` entries, so the null block's invariant (never a valid
+    position) is preserved — and every *allocated* block gets overwritten
+    wholesale, so no stale positions from a prior owner survive admission."""
     if true_len is None:
         logits, small = prefill(params, cfg, batch, max_len)
     else:
         logits, small = prefill_ragged(params, cfg, batch, max_len, true_len)
     slot = jnp.asarray(slot, jnp.int32)
-    cache = jax.tree.map(
-        lambda big, sm: jax.lax.dynamic_update_slice_in_dim(
+    if block_table is None:
+        cache = jax.tree.map(
+            lambda big, sm: jax.lax.dynamic_update_slice_in_dim(
+                big, sm.astype(big.dtype), slot, axis=1
+            ),
+            cache,
+            small,
+        )
+        return logits, cache
+
+    row = block_table[slot]  # [max_blocks] physical block ids
+
+    def scatter_blocks(big, sm):
+        # big [n_periods, n_blocks, bs, ...]; sm [n_periods, 1, c_len, ...]
+        bs = big.shape[2]
+        npd, _, c_len = sm.shape[:3]
+        nblk = c_len // bs
+        chunks = sm.astype(big.dtype).reshape(
+            (npd, nblk, bs) + sm.shape[3:]
+        )
+        return big.at[:, row[:nblk]].set(chunks)
+
+    def splice_row(big, sm):
+        return jax.lax.dynamic_update_slice_in_dim(
             big, sm.astype(big.dtype), slot, axis=1
-        ),
-        cache,
-        small,
-    )
-    return logits, cache
+        )
+
+    new_cache: Params = {}
+    for i, spec in enumerate(cfg.period):
+        key = f"layer_{i}"
+        if key not in cache:
+            continue
+        if spec.kind == "attn":
+            new_cache[key] = {
+                leaf: scatter_blocks(cache[key][leaf], small[key][leaf])
+                for leaf in cache[key]
+            }
+        else:  # ssm / cross_attn state stays per-slot
+            new_cache[key] = jax.tree.map(splice_row, cache[key], small[key])
+    return logits, new_cache

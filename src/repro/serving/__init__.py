@@ -1,4 +1,5 @@
 from repro.serving.engine import ServeEngine, GenerationResult
+from repro.serving.block_pool import BlockAllocator, blocks_needed
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
 from repro.serving.metrics import RequestTrace, ServingMetrics
 from repro.serving.request import Request, RequestQueue, synthetic_trace

@@ -1,0 +1,92 @@
+"""Block-granular KV cache accounting for the paged continuous engine.
+
+The paged cache is a shared pool of ``n_blocks`` fixed-size blocks (each
+``block_size`` cache positions x layer x KV-head); a request occupies
+``ceil(positions / block_size)`` of them instead of a whole ``max_len``
+lane. ``BlockAllocator`` is the host-side free list the scheduler consults
+at admission (admit iff the request's worst-case block need is free) and
+returns blocks to at release. Allocation is exact bookkeeping, no device
+traffic — the device sees only the per-slot block *tables* the engine
+builds from these ids.
+
+Two physical blocks are reserved and never allocated:
+
+* block 0 — the **null** block: every unallocated block-table entry points
+  here. Its ``pos`` entries are only ever written with ``-1`` (prefill pad
+  tails), so gathers through unallocated table entries are always masked.
+* block 1 — the **trash** block: released/never-filled slots have their
+  whole table row pointed here, so the decode step's unconditional K/V
+  write for inactive rows lands in a block no live table references,
+  instead of corrupting blocks that may have been reallocated.
+
+Invariants (``check`` in tests):
+  - a physical block is owned by at most one slot at a time;
+  - null/trash are never handed out;
+  - ``len(free) + sum(owned) == n_blocks - RESERVED_BLOCKS`` always.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, List
+
+NULL_BLOCK = 0  # read target of unallocated table entries; pos stays -1
+TRASH_BLOCK = 1  # write target of inactive slots; never read by live rows
+RESERVED_BLOCKS = 2
+
+
+def blocks_needed(n_positions: int, block_size: int) -> int:
+    return -(-n_positions // block_size)
+
+
+class BlockAllocator:
+    def __init__(self, n_blocks: int, block_size: int):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if n_blocks <= RESERVED_BLOCKS:
+            raise ValueError(
+                f"pool of {n_blocks} blocks leaves nothing to allocate "
+                f"({RESERVED_BLOCKS} reserved)"
+            )
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: Deque[int] = deque(range(RESERVED_BLOCKS, n_blocks))
+        self._owned: Dict[int, List[int]] = {}  # slot -> blocks
+
+    @property
+    def capacity(self) -> int:
+        """Total allocatable blocks (pool minus reserved)."""
+        return self.n_blocks - RESERVED_BLOCKS
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def allocate(self, slot: int, n: int) -> List[int]:
+        """Hand ``n`` blocks to ``slot``. The scheduler releases a slot
+        before reusing it, so a double-allocate is a bug, not a policy."""
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already owns blocks")
+        if not self.can_allocate(n):
+            raise RuntimeError(
+                f"allocating {n} blocks with only {len(self._free)} free"
+            )
+        blocks = [self._free.popleft() for _ in range(n)]
+        self._owned[slot] = blocks
+        return list(blocks)
+
+    def blocks_of(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, ()))
+
+    def release(self, slot: int) -> None:
+        for blk in self._owned.pop(slot, ()):
+            self._free.append(blk)
+
+    def check(self) -> None:
+        """Assert the ownership invariants (test hook)."""
+        owned = [b for bs in self._owned.values() for b in bs]
+        assert len(set(owned)) == len(owned), "block owned by two slots"
+        assert not set(owned) & set(self._free), "owned block on free list"
+        assert NULL_BLOCK not in owned and TRASH_BLOCK not in owned
+        assert len(owned) + len(self._free) == self.capacity

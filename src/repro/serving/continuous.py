@@ -9,11 +9,24 @@ slots keep decoding — per-slot position vectors make the ragged decode
 exact. Decode is the memory-bound regime where the packed SLiM weight
 stream pays off, so slot occupancy is the lever on realized tokens/s.
 
+Cache layout is selected by ``block_size``. The default (0) reserves one
+contiguous ``max_len`` lane per slot — slot count x context length is a
+hard HBM tradeoff. ``block_size > 0`` switches to the *paged* cache: a
+shared pool of ``n_blocks`` fixed-size blocks, a per-slot block table, and
+a host-side ``BlockAllocator`` the scheduler consults at admission — a
+request occupies ``ceil((prompt + max_new) / block_size)`` blocks instead
+of a ``max_len`` lane, so concurrency is bounded by *actual* cache use and
+more slots fit the same memory (``benchmarks/bench_serving.py`` measures
+it). Both layouts are token-exact under greedy decoding; the contiguous
+path is the ``block_size == 0`` degenerate case.
+
 Device/host split: the decode step carries logits, per-slot positions, the
 active mask, emitted counts, and the output token buffer entirely on
 device; the host syncs two small vectors (active, emitted) once per
 ``sync_every``-step burst to run the scheduler, and fetches token buffers
-only when a slot finishes. No per-token host round-trips.
+only when a slot finishes. No per-token host round-trips. In paged mode
+the block tables live host-side with the allocator and are pushed (a tiny
+[n_slots, max_blocks] int32) only when admissions/releases change them.
 """
 from __future__ import annotations
 
@@ -23,9 +36,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+from repro.serving.block_pool import (
+    NULL_BLOCK,
+    RESERVED_BLOCKS,
+    TRASH_BLOCK,
+    BlockAllocator,
+)
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request
 from repro.serving.sampling import sample_and_emit
@@ -57,8 +77,22 @@ class ContinuousEngine:
         seed: int = 0,
         clock: Optional[Callable[[], float]] = None,
         sleep: Optional[Callable[[float], None]] = None,
+        block_size: int = 0,  # 0 = contiguous max_len lane per slot
+        n_blocks: Optional[int] = None,  # paged pool size (default: equal
+        # memory to n_slots contiguous lanes, plus the 2 reserved blocks)
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
+        if block_size > 0:
+            if not T.supports_paged_cache(cfg):
+                raise ValueError(
+                    f"{cfg.name}: paged KV cache is inexact for sliding-"
+                    "window ring caches; use block_size=0"
+                )
+            if max_len % block_size != 0:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of block_size "
+                    f"{block_size} (prefill splices whole blocks)"
+                )
         if any(sp.moe for sp in cfg.period):
             # MoE expert capacity couples batch rows at decode: garbage
             # tokens in freed/never-filled slots compete for expert queue
@@ -81,6 +115,16 @@ class ContinuousEngine:
         self.eos_id = eos_id
         self.prefill_bucket = prefill_bucket
         self.seed = seed
+        self.block_size = block_size
+        self.max_blocks = max_len // block_size if block_size > 0 else 0
+        if block_size > 0:
+            self.n_blocks = (
+                n_slots * self.max_blocks + RESERVED_BLOCKS
+                if n_blocks is None
+                else n_blocks
+            )
+        else:
+            self.n_blocks = 0
         if clock is None:
             self._clock, self._sleep = time.time, time.sleep
         else:
@@ -100,14 +144,14 @@ class ContinuousEngine:
 
         def _admit(
             params, cache, logits, pos, active, emitted, maxnew, temps,
-            toks, true_len, slot, budget, temp,
+            toks, true_len, slot, budget, temp, table,
         ):
             """Prefill one request into ``slot`` and splice its carry state
             (logits row, position, budget, sampling) in the same jit call —
             one dispatch per admission instead of one per state vector."""
             row, cache = T.prefill_slot(
                 params, cfg, cache, {"tokens": toks}, slot, max_len,
-                true_len if ragged else None,
+                true_len if ragged else None, block_table=table,
             )
             logits = logits.at[slot].set(row[0])
             pos = pos.at[slot].set(true_len)
@@ -122,15 +166,21 @@ class ContinuousEngine:
 
         eos = -1 if eos_id is None else int(eos_id)  # -1 never matches a token
 
-        def _step(params, cache, logits, pos, active, emitted, maxnew, buf, key, temps):
+        def _step(
+            params, cache, logits, pos, active, emitted, maxnew, buf, key,
+            temps, table,
+        ):
             nxt, buf, emitted, hit_eos, key = sample_and_emit(
                 logits, temps, key, buf, active, emitted, eos
             )
             finished = active & (hit_eos | (emitted >= maxnew))
             still = active & ~finished
-            logits, cache = T.decode_step(params, self.cfg, cache, nxt[:, None], pos)
+            logits, cache = T.decode_step(
+                params, self.cfg, cache, nxt[:, None], pos, block_table=table
+            )
             # freeze finished/inactive rows: their slot is garbage until the
-            # next prefill_slot replaces it wholesale
+            # next prefill_slot replaces it wholesale (paged: their writes
+            # land in the trash block once the host retires the table row)
             pos = pos + still.astype(jnp.int32)
             return cache, logits, pos, still, emitted, buf, key
 
@@ -145,7 +195,11 @@ class ContinuousEngine:
         max_new_cap: Optional[int] = None,  # pin the buffer width (jit shape)
     ) -> ContinuousResult:
         cfg, b = self.cfg, self.n_slots
-        sched = Scheduler(b, self.max_len, self.prefill_bucket)
+        paged = self.block_size > 0
+        allocator = (
+            BlockAllocator(self.n_blocks, self.block_size) if paged else None
+        )
+        sched = Scheduler(b, self.max_len, self.prefill_bucket, allocator)
         metrics = ServingMetrics(b)
         for r in requests:
             sched.submit(r)
@@ -158,7 +212,18 @@ class ContinuousEngine:
                 "silently truncated"
             )
 
-        cache = T.init_cache(cfg, b, self.max_len)
+        cache = T.init_cache(
+            cfg, b, self.max_len, self.block_size, self.n_blocks
+        )
+        # block tables are host-owned (the allocator's view); inactive rows
+        # point wholesale at the trash block so their decode writes can
+        # never land in a block that has been reallocated
+        table_np = (
+            np.full((b, self.max_blocks), TRASH_BLOCK, np.int32)
+            if paged
+            else None
+        )
+        table_dev = jnp.asarray(table_np) if paged else None
         logits = jnp.zeros((b, cfg.vocab_size), jnp.float32)
         pos = jnp.zeros((b,), jnp.int32)
         active = jnp.zeros((b,), bool)
@@ -169,6 +234,7 @@ class ContinuousEngine:
         key = jax.random.PRNGKey(self.seed)
 
         running: Dict[int, Request] = {}  # slot -> request
+        peak_running = 0
         t0 = self._clock()
         now = lambda: self._clock() - t0
 
@@ -179,6 +245,15 @@ class ContinuousEngine:
                 assert nxt_arrival is not None
                 self._sleep(max(nxt_arrival - now(), 0.0) + 1e-4)
                 continue
+
+            if paged and admits:
+                # bind the freshly allocated blocks before any prefill or
+                # decode sees the table (unallocated tail -> null block)
+                for slot, _ in admits:
+                    blocks = allocator.blocks_of(slot)
+                    table_np[slot] = NULL_BLOCK
+                    table_np[slot, : len(blocks)] = blocks
+                table_dev = jnp.asarray(table_np)
 
             for slot, req in admits:
                 metrics.on_admit(req.rid, now())
@@ -191,16 +266,18 @@ class ContinuousEngine:
                     self.params, cache, logits, pos, active, emitted, maxnew,
                     temps, toks, jnp.int32(plen), jnp.int32(slot),
                     jnp.int32(req.max_new_tokens), jnp.float32(req.temperature),
+                    table_dev,
                 )
                 jax.block_until_ready(logits)
                 metrics.on_first_token(req.rid, now())
                 running[slot] = req
+            peak_running = max(peak_running, len(running))
 
             metrics.on_decode_steps(sync_every)
             for _ in range(sync_every):
                 cache, logits, pos, active, emitted, buf, key = self._step(
                     self.params, cache, logits, pos, active, emitted,
-                    maxnew, buf, key, temps,
+                    maxnew, buf, key, temps, table_dev,
                 )
             host_active, host_emitted = jax.device_get((active, emitted))
 
@@ -213,10 +290,18 @@ class ContinuousEngine:
                     n = int(host_emitted[slot])
                     req.output = [int(t) for t in host_buf[slot, :n]]
                     metrics.on_finish(req.rid, t_done, n)
-                    sched.release(slot)
+                    sched.release(slot)  # paged: blocks return to the pool
+                    if paged:
+                        # retire the row before the next decode burst: the
+                        # freed blocks may be reallocated this very loop
+                        table_np[slot] = TRASH_BLOCK
+                if paged:
+                    table_dev = jnp.asarray(table_np)
 
+        summary = metrics.summary()
+        summary["peak_concurrency"] = float(peak_running)
         return ContinuousResult(
             requests=list(requests),
-            metrics=metrics.summary(),
+            metrics=summary,
             slot_of=dict(sched.assignments),
         )

@@ -73,8 +73,10 @@ class ServingMetrics:
     def on_decode_steps(self, n: int) -> None:
         """Count decode steps run across all slots. When recorded, occupancy
         is computed token-exactly as emitted_tokens / (steps * slots) — every
-        step emits exactly one token per truly-live slot — instead of from
-        the coarser per-sample counts."""
+        step emits one token per truly-live slot, except a request's final
+        EOS-consuming step, which occupies the slot but emits nothing (the
+        stop token is excluded from outputs), so occupancy reads slightly
+        conservative under EOS-terminated traffic."""
         self.decode_steps += n
 
     # -- summary -----------------------------------------------------------

@@ -8,8 +8,8 @@ Poisson-arrival workloads for benchmarks and the ``--workload`` serve mode.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
+import heapq
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -33,21 +33,36 @@ class Request:
 
 class RequestQueue:
     """Arrival-ordered FIFO: requests become poppable once ``now`` has
-    passed their arrival time (the trace replays real clock arrivals)."""
+    passed their arrival time (the trace replays real clock arrivals).
+
+    Backed by a heap keyed on ``(arrival, seq)`` where ``seq`` is the
+    submission order — push/pop are O(log n) and equal-arrival requests
+    pop in deterministic FIFO order."""
 
     def __init__(self, requests: Sequence[Request] = ()):
-        self._q: List[Request] = sorted(requests, key=lambda r: r.arrival)
+        self._seq = 0
+        self._q: List[Tuple[float, int, Request]] = []
+        for r in requests:
+            self.push(r)
 
     def push(self, req: Request) -> None:
-        bisect.insort(self._q, req, key=lambda r: r.arrival)
+        heapq.heappush(self._q, (req.arrival, self._seq, req))
+        self._seq += 1
+
+    def peek_ready(self, now: float) -> Optional[Request]:
+        """The request ``pop_ready`` would return, without removing it —
+        lets the scheduler check block availability before committing."""
+        if self._q and self._q[0][0] <= now:
+            return self._q[0][2]
+        return None
 
     def pop_ready(self, now: float) -> Optional[Request]:
-        if self._q and self._q[0].arrival <= now:
-            return self._q.pop(0)
+        if self._q and self._q[0][0] <= now:
+            return heapq.heappop(self._q)[2]
         return None
 
     def next_arrival(self) -> Optional[float]:
-        return self._q[0].arrival if self._q else None
+        return self._q[0][0] if self._q else None
 
     def __len__(self) -> int:
         return len(self._q)

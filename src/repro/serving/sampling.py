@@ -23,15 +23,24 @@ def sample_and_emit(logits, temps, key, buf, live, emitted, eos):
     eos     int             EOS token id (-1 = never matches)
 
     Returns (nxt [B] i32, buf, emitted, hit_eos [B] bool, key).
+
+    The EOS token is a stop *signal*, not output: it is neither written to
+    ``buf`` nor counted in ``emitted``, so callers never see the stop token
+    and token budgets/throughput count real tokens only.
     """
     b = logits.shape[0]
     key, sk = jax.random.split(key)
     greedy = jnp.argmax(logits, axis=-1)
     t = jnp.broadcast_to(jnp.asarray(temps, jnp.float32), (b,))
-    sampled = jax.random.categorical(sk, logits / jnp.maximum(t, 1e-6)[:, None])
+    # greedy rows (t == 0) discard `sampled`; divide by 1 instead of ~0 so
+    # the dead branch doesn't feed +-inf logits into categorical
+    safe_t = jnp.where(t > 0, t, 1.0)
+    sampled = jax.random.categorical(sk, logits / safe_t[:, None])
     nxt = jnp.where(t > 0, sampled, greedy).astype(jnp.int32)
-    # dead rows target index buf.shape[1]; mode="drop" discards the write
-    idx = jnp.where(live, emitted, buf.shape[1])
+    hit_eos = nxt == eos
+    emit = live & ~hit_eos
+    # non-emitting rows target index buf.shape[1]; mode="drop" discards
+    idx = jnp.where(emit, emitted, buf.shape[1])
     buf = buf.at[jnp.arange(b), idx].set(nxt, mode="drop")
-    emitted = emitted + live.astype(jnp.int32)
-    return nxt, buf, emitted, nxt == eos, key
+    emitted = emitted + emit.astype(jnp.int32)
+    return nxt, buf, emitted, hit_eos, key

@@ -12,19 +12,34 @@ prompt up to the next multiple of ``prefill_bucket``, bounding the number of
 distinct prefill shapes — and therefore jit recompiles — to
 ``max_len / prefill_bucket`` (exactness of padded prefill is the model's
 ``supports_ragged_prefill`` contract).
+
+With a paged KV cache the scheduler additionally consults a
+``BlockAllocator``: a request is admitted when a slot is free *and* its
+worst-case block need — ``ceil(max(prompt + max_new, padded_prefill) /
+block_size)`` — is available, and its blocks return to the pool at
+``release``. Deferral is FIFO (the head of the queue blocks younger
+requests) so admission order stays deterministic under memory pressure.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro.serving.block_pool import BlockAllocator, blocks_needed
 from repro.serving.request import Request, RequestQueue
 
 
 class Scheduler:
-    def __init__(self, n_slots: int, max_len: int, prefill_bucket: int = 0):
+    def __init__(
+        self,
+        n_slots: int,
+        max_len: int,
+        prefill_bucket: int = 0,
+        allocator: Optional[BlockAllocator] = None,
+    ):
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
+        self.allocator = allocator
         self.queue = RequestQueue()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.assignments: Dict[int, int] = {}  # rid -> slot (history, last wins)
@@ -45,19 +60,45 @@ class Scheduler:
                 f"request {req.rid}: max_new_tokens must be >= 1 "
                 "(the decode step always emits the first sampled token)"
             )
+        if self.allocator is not None:
+            nb = self.block_need(req)
+            if nb > self.allocator.capacity:
+                raise ValueError(
+                    f"request {req.rid}: needs {nb} cache blocks but the "
+                    f"pool only holds {self.allocator.capacity} — it could "
+                    "never be admitted"
+                )
         self.queue.push(req)
+
+    def block_need(self, req: Request) -> int:
+        """Worst-case block count for a request: covers the generation
+        budget and the (possibly longer) bucketed prefill write."""
+        assert self.allocator is not None
+        need_pos = max(
+            req.prompt_len + req.max_new_tokens, self.bucket_len(req.prompt_len)
+        )
+        return blocks_needed(need_pos, self.allocator.block_size)
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def admit(self, now: float) -> List[Tuple[int, Request]]:
         """Pop arrived requests into free slots; returns (slot, request)
-        pairs to prefill. Called between decode bursts."""
+        pairs to prefill. Called between decode bursts. With an allocator,
+        a request is only popped once its blocks are guaranteed — if the
+        queue head doesn't fit, admission defers (FIFO) until a release
+        returns enough blocks."""
         admitted = []
         for slot in self.free_slots():
-            req = self.queue.pop_ready(now)
+            req = self.queue.peek_ready(now)
             if req is None:
                 break
+            if self.allocator is not None:
+                nb = self.block_need(req)
+                if not self.allocator.can_allocate(nb):
+                    break
+                self.allocator.allocate(slot, nb)
+            self.queue.pop_ready(now)
             self.slots[slot] = req
             self.assignments[req.rid] = slot
             admitted.append((slot, req))
@@ -65,6 +106,8 @@ class Scheduler:
 
     def release(self, slot: int) -> None:
         self.slots[slot] = None
+        if self.allocator is not None:
+            self.allocator.release(slot)
 
     # -- state ------------------------------------------------------------
 

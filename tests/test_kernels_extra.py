@@ -1,5 +1,6 @@
 """Sweeps for the serving-stack kernels: group (de)quant (the paper's §3.4
-Triton kernels, Pallas analogue) and flash-decoding attention."""
+Triton kernels, Pallas analogue) and flash-decoding attention — contiguous
+and paged (block-pool K/V gathered through a block table)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +9,7 @@ import pytest
 from repro.kernels import ref as R
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.group_quant import group_dequantize, group_quantize
+from repro.kernels.paged_decode import paged_decode
 
 
 @pytest.mark.parametrize("shape,g", [((128, 32), 32), ((256, 64), 64), ((512, 128), 128)])
@@ -73,3 +75,79 @@ def test_flash_decode_ragged_lengths():
     # row 0 must equal attention over just the first 10 positions
     want0 = R.flash_decode_ref(q[:1], k[:1, :10], v[:1, :10], jnp.asarray([10]))
     np.testing.assert_allclose(np.asarray(out[:1]), np.asarray(want0), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_empty_row():
+    """Regression: kv_len == 0 once averaged uninitialized V through
+    exp(_NEG - _NEG) == 1 for every masked position. Empty rows must emit
+    exact zeros and leave other rows untouched."""
+    B, S, H, dh = 2, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    # NaN-poisoned V beyond any valid position: a leak shows up immediately
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    lens = jnp.asarray([0, S], jnp.int32)
+    out = flash_decode(q, k, v.at[0].set(jnp.nan), lens, bs=16)
+    assert bool(jnp.all(out[0] == 0.0))
+    assert bool(jnp.all(jnp.isfinite(out)))
+    want1 = R.flash_decode_ref(q[1:], k[1:], v[1:], jnp.asarray([S]))
+    np.testing.assert_allclose(np.asarray(out[1:]), np.asarray(want1), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paged flash-decode: K/V in a shared block pool, gathered via block tables
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_matches_gathered_ref(dtype):
+    B, H, dh, bs, n_blocks, M = 2, 4, 32, 16, 12, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, dh), dtype)
+    kp = jax.random.normal(ks[1], (n_blocks, bs, H, dh), dtype)
+    vp = jax.random.normal(ks[2], (n_blocks, bs, H, dh), dtype)
+    # scattered, non-monotone physical blocks; 0 = null for unallocated
+    tbl = jnp.asarray([[3, 7, 2, 0], [9, 4, 0, 0]], jnp.int32)
+    lens = jnp.asarray([41, 20], jnp.int32)
+    got = paged_decode(q, kp, vp, tbl, lens)
+    gk = kp[tbl].reshape(B, M * bs, H, dh)
+    gv = vp[tbl].reshape(B, M * bs, H, dh)
+    want = R.flash_decode_ref(q, gk, gv, lens)
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+def test_paged_decode_matches_contiguous():
+    """A paged pool whose table is the identity permutation must reproduce
+    the contiguous flash_decode bit-for-bit semantics."""
+    B, S, H, dh, bs = 2, 128, 4, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    lens = jnp.asarray([100, 128], jnp.int32)
+    M = S // bs
+    # row 0's lanes become blocks 0..3, row 1's blocks 4..7
+    kp = k.reshape(B * M, bs, H, dh)
+    vp = v.reshape(B * M, bs, H, dh)
+    tbl = jnp.arange(B * M, dtype=jnp.int32).reshape(B, M)
+    got = paged_decode(q, kp, vp, tbl, lens)
+    want = flash_decode(q, k, v, lens, bs=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6, atol=2e-6)
+
+
+def test_paged_decode_empty_row():
+    B, H, dh, bs = 2, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, dh))
+    kp = jax.random.normal(ks[1], (6, bs, H, dh))
+    vp = jax.random.normal(ks[2], (6, bs, H, dh))
+    tbl = jnp.asarray([[2, 3], [4, 5]], jnp.int32)
+    out = paged_decode(q, kp, vp, tbl, jnp.asarray([0, 12], jnp.int32))
+    assert bool(jnp.all(out[0] == 0.0))
+    want1 = R.flash_decode_ref(
+        q[1:], kp[tbl[1]].reshape(1, 2 * bs, H, dh),
+        vp[tbl[1]].reshape(1, 2 * bs, H, dh), jnp.asarray([12]),
+    )
+    np.testing.assert_allclose(np.asarray(out[1:]), np.asarray(want1), rtol=2e-5, atol=2e-5)

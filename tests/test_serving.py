@@ -48,10 +48,22 @@ def _prompts(cfg, n, s, seed=7):
 class TestScheduler:
     def test_queue_arrival_gating(self):
         q = RequestQueue([Request(0, [1], arrival=1.0), Request(1, [1], arrival=0.0)])
+        assert q.peek_ready(0.5).rid == 1
         assert q.pop_ready(0.5).rid == 1
         assert q.pop_ready(0.5) is None  # rid 0 not arrived yet
+        assert q.peek_ready(0.5) is None
         assert q.next_arrival() == 1.0
         assert q.pop_ready(2.0).rid == 0
+
+    def test_queue_fifo_on_equal_arrivals(self):
+        """Heap ties break on submission order, deterministically."""
+        q = RequestQueue()
+        for rid in [3, 1, 4, 1, 5]:
+            q.push(Request(rid, [1], arrival=0.0))
+        q.push(Request(9, [1], arrival=-1.0))  # earlier arrival jumps ahead
+        popped = [q.pop_ready(0.0).rid for _ in range(6)]
+        assert popped == [9, 3, 1, 4, 1, 5]
+        assert q.pop_ready(0.0) is None
 
     def test_admission_and_recycling(self):
         s = Scheduler(n_slots=2, max_len=64)
@@ -82,6 +94,42 @@ class TestScheduler:
         assert s.bucket_len(17) == 32
         assert s.bucket_len(60) == 64  # clamped to max_len
         assert Scheduler(1, 64).bucket_len(13) == 13  # bucketing off
+
+
+# ---------------------------------------------------------------------------
+# Shared sample/emit core
+# ---------------------------------------------------------------------------
+
+class TestSampleAndEmit:
+    def test_eos_not_written_not_counted(self):
+        from repro.serving.sampling import sample_and_emit
+
+        logits = jnp.asarray([[0.0, 0.0, 10.0], [10.0, 0.0, 0.0]], jnp.float32)
+        buf = jnp.full((2, 4), -7, jnp.int32)
+        live = jnp.asarray([True, True])
+        emitted = jnp.zeros((2,), jnp.int32)
+        nxt, buf, emitted, hit_eos, _ = sample_and_emit(
+            logits, 0.0, jax.random.PRNGKey(0), buf, live, emitted, eos=2
+        )
+        assert list(nxt) == [2, 0] and list(hit_eos) == [True, False]
+        assert list(emitted) == [0, 1]  # EOS row emitted nothing
+        assert list(buf[0]) == [-7, -7, -7, -7]  # EOS never hits the buffer
+        assert list(buf[1]) == [0, -7, -7, -7]
+
+    def test_greedy_rows_skip_temperature_divide(self):
+        """t == 0 rows must not feed logits / ~0 (== +-inf) into the
+        discarded categorical draw; extreme logits stay finite and the
+        greedy argmax is returned."""
+        from repro.serving.sampling import sample_and_emit
+
+        with jax.debug_nans(True):
+            logits = jnp.asarray([[3e38, -3e38, 0.0]], jnp.float32)
+            nxt, *_ = sample_and_emit(
+                logits, 0.0, jax.random.PRNGKey(0),
+                jnp.zeros((1, 2), jnp.int32), jnp.asarray([True]),
+                jnp.zeros((1,), jnp.int32), eos=-1,
+            )
+            assert int(nxt[0]) == 0
 
 
 # ---------------------------------------------------------------------------
@@ -227,6 +275,11 @@ class TestContinuousEngine:
         assert len(res.outputs[0]) < 8
         assert res.outputs[1] == ref1.tokens[0]
         assert res.slot_of == {0: 0, 1: 0}  # both ran in the recycled slot
+        # the stop token is a signal, not output: callers never see it and
+        # it doesn't count toward total_tokens / tokens_per_s
+        assert all(eos not in out for out in res.outputs.values())
+        n_real = sum(len(out) for out in res.outputs.values())
+        assert res.metrics["total_tokens"] == n_real
 
     def test_more_requests_than_slots_ragged(self, model):
         """Staggered arrivals, ragged prompts and budgets, bucketing on:
