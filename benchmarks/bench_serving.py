@@ -20,9 +20,20 @@ blocks: requests only occupy blocks for ``prompt + budget``, so strictly
 more slots run concurrently in the same memory (the paged VERDICT asserts
 ``peak_concurrency > slots``).
 
+The *shared-prefix* workload models system-prompt traffic: every request
+repeats the same ``PREFIX_LEN``-token prompt prefix with a short unique
+tail. It replays through the paged engine with the prefix cache off (PR 2
+cold-prefill baseline) and on, at equal pool size: the prefix VERDICT
+requires strictly lower mean TTFT *and* higher tokens/s with the cache
+on, token-exact greedy outputs, and a nonzero hit rate.
+
+All cells land in ``BENCH_serving.json`` (tok/s, TTFT p50/p95, hit rate,
+peak blocks in use) so the perf trajectory is tracked across PRs.
+
     PYTHONPATH=src python benchmarks/bench_serving.py
     PYTHONPATH=src python -m benchmarks.run serving
 """
+import json
 import os
 import sys
 import time
@@ -54,6 +65,19 @@ MAX_LEN = -(-MAX_LEN // BLOCK_SIZE) * BLOCK_SIZE  # paged cache needs a multiple
 # block-granular — so slot count can exceed the lane count
 PAGED_SLOTS = int(os.environ.get("BENCH_SERVE_PAGED_SLOTS", str(2 * N_SLOTS)))
 PAGED_BLOCKS = N_SLOTS * (MAX_LEN // BLOCK_SIZE) + RESERVED_BLOCKS
+
+# shared-prefix workload: a long common system prompt + short unique tail,
+# so most prefill work repeats across requests
+PREFIX_LEN = int(os.environ.get("BENCH_SERVE_PREFIX", "64"))
+PREFIX_TAIL = 16  # unique tokens after the shared prefix
+PREFIX_MAX_NEW = (4, 16)
+PREFIX_MAX_LEN = PREFIX_LEN + PREFIX_TAIL + PREFIX_MAX_NEW[1] + 8
+PREFIX_MAX_LEN = -(-PREFIX_MAX_LEN // BLOCK_SIZE) * BLOCK_SIZE
+PREFIX_BLOCKS = N_SLOTS * (PREFIX_MAX_LEN // BLOCK_SIZE) + RESERVED_BLOCKS
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_serving.json"
+)
 
 
 def fresh_trace(vocab, seed=0):
@@ -121,6 +145,33 @@ def run_continuous(params, cfg, requests, vocab, n_slots=N_SLOTS, block_size=0):
     return res.metrics
 
 
+def prefix_trace(vocab, seed=5):
+    return synthetic_trace(
+        N_REQUESTS, rate=RATE, vocab_size=vocab,
+        prompt_len=(PREFIX_LEN + 4, PREFIX_LEN + PREFIX_TAIL),
+        max_new_tokens=PREFIX_MAX_NEW, seed=seed,
+        shared_prefix_len=PREFIX_LEN,
+    )
+
+
+def run_shared_prefix(params, cfg, vocab, prefix_cache):
+    """Replay the shared-prefix trace through the paged engine, cache on or
+    off, at equal pool size. Returns (metrics, outputs) — outputs feed the
+    token-exactness check between the two cells."""
+    engine = ContinuousEngine(
+        params, cfg, n_slots=N_SLOTS, max_len=PREFIX_MAX_LEN,
+        prefill_bucket=PREFIX_TAIL, block_size=BLOCK_SIZE,
+        n_blocks=PREFIX_BLOCKS, prefix_cache=prefix_cache,
+    )
+    # warm every jit shape this trace will hit (cold prompt buckets and,
+    # with the cache on, the suffix buckets) outside the timed replay
+    engine.run(prefix_trace(vocab, seed=98), sync_every=4,
+               max_new_cap=PREFIX_MAX_NEW[1])
+    res = engine.run(prefix_trace(vocab), sync_every=4,
+                     max_new_cap=PREFIX_MAX_NEW[1])
+    return res.metrics, res.outputs
+
+
 def run(table: Table):
     cfg, dcfg, dense = trained_model()
     vocab = cfg.vocab_size
@@ -130,6 +181,24 @@ def run(table: Table):
     )
 
     verdicts = []
+    cells = {}
+    verdict_log = {}
+
+    def record(label, m):
+        row = {
+            "tokens_per_s": round(m["tokens_per_s"], 2),
+            "mean_ttft_s": round(m["mean_ttft_s"], 4),
+            "p50_ttft_s": round(m.get("p50_ttft_s", float("nan")), 4),
+            "p95_ttft_s": round(m["p95_ttft_s"], 4),
+            "mean_occupancy": round(m["mean_occupancy"], 3),
+            "total_tokens": int(m["total_tokens"]),
+            "peak_slots": int(m.get("peak_concurrency", N_SLOTS)),
+            "prefix_cache_hit_rate": round(m.get("prefix_cache_hit_rate", 0.0), 3),
+            "peak_blocks_in_use": int(m.get("peak_blocks_in_use", 0)),
+        }
+        cells[label] = row
+        table.add(label, **row)
+
     for plabel, params in [("dense", dense), ("slim", slim)]:
         s = run_static(params, cfg, fresh_trace(vocab, seed=1))
         c = run_continuous(params, cfg, fresh_trace(vocab, seed=1), vocab)
@@ -138,20 +207,13 @@ def run(table: Table):
             n_slots=PAGED_SLOTS, block_size=BLOCK_SIZE,
         )
         for elabel, m in [("static", s), ("continuous", c), ("paged", p)]:
-            table.add(
-                f"{plabel}/{elabel}",
-                tokens_per_s=round(m["tokens_per_s"], 2),
-                mean_ttft_s=round(m["mean_ttft_s"], 4),
-                p95_ttft_s=round(m["p95_ttft_s"], 4),
-                mean_occupancy=round(m["mean_occupancy"], 3),
-                total_tokens=int(m["total_tokens"]),
-                peak_slots=int(m.get("peak_concurrency", N_SLOTS)),
-            )
+            record(f"{plabel}/{elabel}", m)
         wins = (
             c["tokens_per_s"] > s["tokens_per_s"]
             and c["mean_ttft_s"] < s["mean_ttft_s"]
         )
         verdicts.append(wins)
+        verdict_log[f"{plabel}/continuous_beats_static"] = wins
         print(
             f"VERDICT[{plabel}]: continuous "
             f"{'BEATS' if wins else 'DOES NOT BEAT'} static "
@@ -166,6 +228,7 @@ def run(table: Table):
             and p["completed"] == c["completed"]
         )
         verdicts.append(paged_wins)
+        verdict_log[f"{plabel}/paged_lifts_concurrency"] = paged_wins
         print(
             f"VERDICT[{plabel}]: paged cache "
             f"{'LIFTS' if paged_wins else 'DOES NOT LIFT'} concurrency at "
@@ -174,10 +237,63 @@ def run(table: Table):
             f"blocks; tok/s {p['tokens_per_s']:.1f}, "
             f"ttft {p['mean_ttft_s']:.3f}s)"
         )
+
+        # shared-prefix workload: prefix cache on vs off (PR 2 cold
+        # baseline) at equal pool size, token-exact greedy outputs
+        cold, cold_out = run_shared_prefix(params, cfg, vocab, prefix_cache=False)
+        warm, warm_out = run_shared_prefix(params, cfg, vocab, prefix_cache=True)
+        record(f"{plabel}/prefix_off", cold)
+        record(f"{plabel}/prefix_on", warm)
+        exact = warm_out == cold_out
+        prefix_wins = (
+            warm["mean_ttft_s"] < cold["mean_ttft_s"]
+            and warm["tokens_per_s"] > cold["tokens_per_s"]
+            and warm["prefix_cache_hit_rate"] > 0.0
+            and exact
+        )
+        verdicts.append(prefix_wins)
+        verdict_log[f"{plabel}/prefix_cache_wins"] = prefix_wins
+        print(
+            f"VERDICT[{plabel}]: prefix cache "
+            f"{'BEATS' if prefix_wins else 'DOES NOT BEAT'} cold prefill "
+            f"on the shared-prefix workload at equal pool size "
+            f"(ttft {warm['mean_ttft_s']:.3f}s vs {cold['mean_ttft_s']:.3f}s, "
+            f"tok/s {warm['tokens_per_s']:.1f} vs {cold['tokens_per_s']:.1f}, "
+            f"hit rate {warm['prefix_cache_hit_rate']:.2f}, "
+            f"outputs {'EXACT' if exact else 'DIVERGED'})"
+        )
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(
+            {
+                "generated_unix": time.time(),
+                "config": {
+                    "n_requests": N_REQUESTS,
+                    "n_slots": N_SLOTS,
+                    "rate": RATE,
+                    "block_size": BLOCK_SIZE,
+                    "paged_slots": PAGED_SLOTS,
+                    "paged_blocks": PAGED_BLOCKS,
+                    "prefix_len": PREFIX_LEN,
+                    "prefix_max_len": PREFIX_MAX_LEN,
+                    "prefix_blocks": PREFIX_BLOCKS,
+                },
+                "cells": cells,
+                "verdicts": verdict_log,
+            },
+            f,
+            indent=2,
+            sort_keys=True,
+        )
+        f.write("\n")
+    print(f"# wrote {os.path.normpath(BENCH_JSON)}")
+
     if not all(verdicts):
         raise RuntimeError(
-            "continuous batching failed to beat static, or the paged cache "
-            "failed to lift concurrency at equal memory"
+            "continuous batching failed to beat static, the paged cache "
+            "failed to lift concurrency at equal memory, or the prefix "
+            "cache failed to beat cold prefill on the shared-prefix "
+            "workload"
         )
 
 

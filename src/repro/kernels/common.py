@@ -64,6 +64,18 @@ def dequant_sparse24(
     return dense.astype(jnp.float32) * (scale / half)
 
 
+def default_interpret() -> bool:
+    """Default ``interpret`` for every Pallas entry point: compile on TPU,
+    interpret (bit-exact, Python-speed) everywhere else. Callers can still
+    force either mode explicitly; passing ``None`` selects this default, so
+    TPU hosts get compiled kernels without threading the flag by hand."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
 def pick_block(dim: int, preferred: int) -> int:
     """Largest power-of-two block <= preferred that divides dim (>=8)."""
     b = min(preferred, dim)

@@ -16,13 +16,14 @@ masked, supporting ragged cache fill levels across the batch.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import pick_block
+from repro.kernels.common import pick_block, resolve_interpret
 
 _NEG = -1e30
 
@@ -103,7 +104,7 @@ def flash_decode(
     v: jnp.ndarray,  # [B, S, H, dh]
     kv_len: jnp.ndarray,  # [B] int32 valid lengths
     bs: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compile on TPU, else interpret
 ) -> jnp.ndarray:
     b, h, dh = q.shape
     s = k.shape[1]
@@ -112,6 +113,7 @@ def flash_decode(
     scale = 1.0 / (dh ** 0.5)
     lens = kv_len.reshape(b, 1).astype(jnp.int32)
 
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         functools.partial(_kernel, bs=bs, ns=ns, scale=scale),
         grid=(b, ns),

@@ -16,13 +16,13 @@ Layout (matches core.packing / core.compressed):
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import pick_block, unpack_int4_block
+from repro.kernels.common import pick_block, resolve_interpret, unpack_int4_block
 
 
 def _quant_kernel(x_ref, codes_ref, scale_ref, *, g: int, bits: int):
@@ -58,7 +58,7 @@ def group_quantize(
     bits: int = 4,
     bk: int = 512,
     bn: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compile on TPU, else interpret
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (codes uint8 [K/2, N], scales f32 [K/g, 1, N])."""
     k, n = x.shape
@@ -67,6 +67,7 @@ def group_quantize(
     assert bk % g == 0
     bn = pick_block(n, bn)
     grid = (k // bk, n // bn)
+    interpret = resolve_interpret(interpret)
     codes, scales = pl.pallas_call(
         functools.partial(_quant_kernel, g=g, bits=bits),
         grid=grid,
@@ -95,13 +96,14 @@ def group_dequantize(
     bk: int = 512,
     bn: int = 128,
     out_dtype=jnp.float32,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compile on TPU, else interpret
 ) -> jnp.ndarray:
     k = codes.shape[0] * 2
     n = codes.shape[1]
     bk = max(g, pick_block(k, bk))
     bn = pick_block(n, bn)
     grid = (k // bk, n // bn)
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         functools.partial(_dequant_kernel, g=g, bits=bits),
         grid=grid,

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import dequant_dense_int4, pick_block
+from repro.kernels.common import dequant_dense_int4, pick_block, resolve_interpret
 
 
 def _kernel_pertensor(x_ref, w_ref, scale_ref, o_ref, *, bits: int, nk: int):
@@ -72,7 +72,7 @@ def int4_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compile on TPU, else interpret
 ) -> jnp.ndarray:
     m, k = x.shape
     n = w_packed.shape[-1]
@@ -100,6 +100,7 @@ def int4_matmul(
             (bk // group_size, 1, bn), lambda i, j, kk: (kk, 0, j)
         )
 
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         kern,
         grid=grid,

@@ -2,8 +2,9 @@
 
 ``slim_linear_op`` consumes a ``repro.core.compressed.SlimLinear`` directly,
 so model code can swap the XLA path (``slim_linear_apply``) for the kernel
-path with one flag. On a CPU host the kernels run in interpret mode
-(bit-exact semantics, Python-speed); on TPU set ``interpret=False``.
+path with one flag. The default ``interpret=None`` resolves per backend
+(``common.default_interpret``): compiled on TPU, interpret mode (bit-exact
+semantics, Python-speed) on CPU hosts — no caller has to thread the flag.
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ from repro.kernels.slim_linear import slim_linear
 
 
 def slim_linear_op(
-    p: SlimLinear, x: jnp.ndarray, interpret: bool = True
+    p: SlimLinear, x: jnp.ndarray, interpret: Optional[bool] = None
 ) -> jnp.ndarray:
     """Kernel-path equivalent of ``core.compressed.slim_linear_apply``."""
     assert p.packed_vals.ndim == 2, "kernel path takes unstacked layers"

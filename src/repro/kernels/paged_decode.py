@@ -25,12 +25,14 @@ levels already are. A row with ``kv_len == 0`` emits zeros.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.flash_decode import online_softmax_finish, online_softmax_update
 
 
@@ -80,7 +82,7 @@ def paged_decode(
     v_pool: jnp.ndarray,  # [n_blocks, bs, H, dh]
     block_tables: jnp.ndarray,  # [B, max_blocks] int32 physical block ids
     kv_len: jnp.ndarray,  # [B] int32 valid lengths
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compile on TPU, else interpret
 ) -> jnp.ndarray:
     b, h, dh = q.shape
     bs = k_pool.shape[1]
@@ -105,6 +107,7 @@ def paged_decode(
             pltpu.VMEM((h, dh), jnp.float32),
         ],
     )
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         functools.partial(_kernel, bs=bs, nm=nm, scale=scale),
         grid_spec=grid_spec,

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import dequant_sparse24, pick_block
+from repro.kernels.common import dequant_sparse24, pick_block, resolve_interpret
 
 
 def _kernel(
@@ -92,7 +92,7 @@ def slim_linear(
     bm: int = 128,
     bn: int = 128,
     bk: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compile on TPU, else interpret
 ) -> jnp.ndarray:
     m, k = x.shape
     n = packed_vals.shape[-1]
@@ -109,6 +109,7 @@ def slim_linear(
         else jnp.asarray(inv_act_scale, jnp.float32).reshape(1, k)
     )
 
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         functools.partial(_kernel, bits=bits, nk=nk),
         grid=grid,

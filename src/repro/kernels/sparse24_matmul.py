@@ -13,12 +13,13 @@ Grid: ``(M/bm, N/bn, K/bk)``, fp32 accumulation in the resident out block.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import dequant_sparse24, pick_block
+from repro.kernels.common import dequant_sparse24, pick_block, resolve_interpret
 
 
 def _kernel(x_ref, vals_ref, idx_ref, scale_ref, o_ref, *, bits: int):
@@ -46,7 +47,7 @@ def sparse24_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,  # None = compile on TPU, else interpret
 ) -> jnp.ndarray:
     m, k = x.shape
     n = packed_vals.shape[-1]
@@ -59,6 +60,7 @@ def sparse24_matmul(
     grid = (m // bm, n // bn, k // bk)
     scale_arr = jnp.asarray(scale, jnp.float32).reshape(1, 1)
 
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         functools.partial(_kernel, bits=bits),
         grid=grid,

@@ -64,6 +64,16 @@ def main(argv=None):
         help="paged pool size in blocks (default: equal memory to the "
         "contiguous per-slot lanes)",
     )
+    p.add_argument(
+        "--prefix-cache", action="store_true",
+        help="share identical prompt-prefix blocks between requests "
+        "(refcounted copy-on-write over the paged pool; needs --block-size)",
+    )
+    p.add_argument(
+        "--shared-prefix", type=int, default=0,
+        help="length of a common prompt prefix shared by every request in "
+        "the synthetic trace (models system-prompt traffic)",
+    )
     args = p.parse_args(argv)
 
     if args.block_size > 0 and args.workload != "poisson":
@@ -71,6 +81,11 @@ def main(argv=None):
                 "ServeEngine has no paged cache)")
     if args.n_blocks is not None and args.block_size <= 0:
         p.error("--n-blocks sizes the paged pool; it needs --block-size")
+    if args.prefix_cache and args.block_size <= 0:
+        p.error("--prefix-cache shares pool blocks; it needs --block-size")
+    if args.shared_prefix > 0 and args.workload != "poisson":
+        p.error("--shared-prefix shapes the synthetic arrival trace; it "
+                "needs --workload poisson")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -106,16 +121,20 @@ def main(argv=None):
             max_new_tokens=(max(1, args.new_tokens // 2), args.new_tokens),
             temperature=args.temperature,
             seed=args.seed,
+            shared_prefix_len=args.shared_prefix,
         )
         engine = ContinuousEngine(
             params, cfg, n_slots=args.slots, max_len=max_len,
             prefill_bucket=bucket, seed=args.seed,
             block_size=args.block_size, n_blocks=args.n_blocks,
+            prefix_cache=args.prefix_cache,
         )
         res = engine.run(trace, sync_every=args.sync_every)
         m = res.metrics
         cache_kind = (
-            f"paged(bs={args.block_size}, blocks={engine.n_blocks})"
+            f"paged(bs={args.block_size}, blocks={engine.n_blocks}"
+            + (", prefix-cache" if args.prefix_cache else "")
+            + ")"
             if args.block_size > 0
             else "contiguous"
         )
@@ -130,6 +149,14 @@ def main(argv=None):
             f"p95 {m['p95_ttft_s']:.3f}s | latency mean "
             f"{m['mean_latency_s']:.3f}s | occupancy {m['mean_occupancy']:.2f}"
         )
+        if args.prefix_cache:
+            print(
+                f"[serve/continuous] prefix cache: hit rate "
+                f"{m['prefix_cache_hit_rate']:.2f} "
+                f"({m['cached_prompt_tokens']:.0f} cached prompt tokens, "
+                f"{m['prefix_hits']:.0f}/{args.requests} requests hit, "
+                f"peak {m['peak_blocks_in_use']:.0f} blocks in use)"
+            )
         first = res.requests[0]
         print("[serve/continuous] first request:", first.output[:16])
         return

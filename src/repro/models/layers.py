@@ -228,6 +228,12 @@ def _qk_normalize(q, k, p, cfg):
     return q, k
 
 
+# physical block 0 of a paged pool is the engine's null block (see
+# serving/block_pool.py — not imported here to keep models free of serving):
+# its pos entries only ever receive -1, so it absorbs pad writes safely
+NULL_BLOCK_ID = 0
+
+
 def _kv_quantize(t: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """[B, S, KV, dh] -> (int8 codes, f32 scale [B, S, KV])."""
     s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
@@ -247,6 +253,8 @@ def attention_layer(
     cache: Optional[Params] = None,
     pos0: Any = 0,  # scalar or [B] vector: absolute position of x[:, 0] per slot
     block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged cache
+    true_len: Optional[jnp.ndarray] = None,  # real (unpadded) length of a
+    # paged offset prefill; entries beyond it are never written to the pool
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     b, s, _ = x.shape
     h = rmsnorm(x, p["ln"], cfg.norm_eps)
@@ -273,13 +281,57 @@ def attention_layer(
         # training: self-contained sequence
         kv_pos = jnp.arange(s, dtype=jnp.int32)
         out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
+    elif s > 1 and block_table is not None:
+        # paged *offset* prefill (prefix-cache suffix): the slot's table
+        # already names shared blocks holding positions [0, pos0); this
+        # pass computes K/V only for the suffix tokens at absolute
+        # positions pos0 + i, writes them straight into the slot's own
+        # pool blocks, and attends over the gather of the whole table row
+        # — so suffix queries see the shared prefix they did not write.
+        # Pad entries (i >= true_len) are routed to the null block with
+        # pos = -1, preserving its never-valid invariant; the engine has
+        # already wiped the slot's fresh blocks' pos, so no stale entries
+        # from a prior owner survive into the mask.
+        assert not per_slot, "multi-token prefill requires a scalar pos0"
+        bs_blk = cache["k"].shape[1]
+        nkv, dh = cfg.n_kv_heads, cfg.d_head
+        max_blocks = block_table.shape[1]
+        idx = jnp.arange(s, dtype=jnp.int32)
+        wvalid = (
+            jnp.ones((s,), bool)
+            if true_len is None
+            else idx < jnp.asarray(true_len, jnp.int32)
+        )
+        pvec = positions  # [S] absolute suffix positions
+        blk = jnp.clip(pvec // bs_blk, 0, max_blocks - 1)
+        phys = jnp.where(wvalid, block_table[:, blk], NULL_BLOCK_ID)  # [B, S]
+        off = jnp.broadcast_to((pvec % bs_blk)[None, :], phys.shape)
+        pos_w = jnp.broadcast_to(
+            jnp.where(wvalid, pvec, -1)[None, :], phys.shape
+        )
+        kq, ks = store(k)
+        vq, vs = store(v)
+        ck = cache["k"].at[phys, off].set(kq)
+        cv = cache["v"].at[phys, off].set(vq)
+        cp = cache["pos"].at[phys, off].set(pos_w)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+        l_full = max_blocks * bs_blk
+        gk = ck[block_table].reshape(b, l_full, nkv, dh)
+        gv = cv[block_table].reshape(b, l_full, nkv, dh)
+        gp = cp[block_table].reshape(b, l_full)
+        if cfg.kv_quant:
+            cks = cache["k_scale"].at[phys, off].set(ks)
+            cvs = cache["v_scale"].at[phys, off].set(vs)
+            new_cache["k_scale"] = cks
+            new_cache["v_scale"] = cvs
+            kd = _kv_dequantize(gk, cks[block_table].reshape(b, l_full, nkv), x.dtype)
+            vd = _kv_dequantize(gv, cvs[block_table].reshape(b, l_full, nkv), x.dtype)
+        else:
+            kd, vd = gk, gv
+        out = mha(q, kd, vd, positions, gp, cfg.sliding_window, cfg.q_chunk, plp, xkv)
     elif s > 1:
         # prefill: fill the cache (ring layout if sliding window)
         assert not per_slot, "multi-token prefill requires a scalar pos0"
-        assert block_table is None, (
-            "paged caches are prefilled per-slot (transformer.prefill_slot "
-            "splices a contiguous prefill into pool blocks)"
-        )
         c_len = cache["k"].shape[1]
         kq, ks = store(k)
         vq, vs = store(v)

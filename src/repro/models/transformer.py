@@ -148,6 +148,7 @@ def _apply_period(
     pos0,
     vision: Optional[jnp.ndarray],
     block_table: Optional[jnp.ndarray] = None,
+    true_len=None,  # paged offset prefill: real suffix length (pads masked)
 ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
     new_cache: Params = {}
     aux = jnp.zeros((), jnp.float32)
@@ -156,7 +157,9 @@ def _apply_period(
         c = None if cache is None else cache.get(f"layer_{i}")
         with L.scope(f"layer_{i}"):
             if spec.kind == "attn":
-                x, nc = L.attention_layer(p, x, cfg, c, pos0, block_table)
+                x, nc = L.attention_layer(
+                    p, x, cfg, c, pos0, block_table, true_len
+                )
             elif spec.kind == "ssm":
                 x, nc = L.ssm_layer(p, x, cfg, c, pos0)
             elif spec.kind == "cross_attn":
@@ -185,6 +188,7 @@ def forward_hidden(
     vision: Optional[jnp.ndarray] = None,
     remat: bool = False,
     block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged decode
+    true_len=None,  # paged offset prefill: real suffix length
 ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
     def body(carry, xs):
         h, aux = carry
@@ -197,7 +201,7 @@ def forward_hidden(
         return (h, aux + a), nc
 
     def period_fn(pp, h, c):
-        return _apply_period(cfg, pp, h, c, pos0, vision, block_table)
+        return _apply_period(cfg, pp, h, c, pos0, vision, block_table, true_len)
 
     if remat:
         period_fn = jax.checkpoint(period_fn)
@@ -409,6 +413,18 @@ def supports_paged_cache(cfg: ModelConfig) -> bool:
     return cfg.sliding_window == 0
 
 
+def supports_prefix_cache(cfg: ModelConfig) -> bool:
+    """Whether shared-prefix block reuse is exact for this arch: pure
+    attention only. A cached prefix carries *KV blocks*, not recurrent
+    state — an SSM layer's state at ``cached_len`` depends on the whole
+    prefix and is not reconstructible from shared blocks, and MoE capacity
+    couples suffix tokens across slots. (Sliding windows are already
+    excluded by the paged layout itself.)"""
+    return supports_paged_cache(cfg) and all(
+        sp.kind == "attn" and not sp.moe for sp in cfg.period
+    )
+
+
 def prefill_ragged(
     params: Params, cfg: ModelConfig, batch: Params, max_len: int, true_len
 ) -> Tuple[jnp.ndarray, Params]:
@@ -445,6 +461,8 @@ def prefill_slot(
     max_len: int,
     true_len=None,  # set for a right-padded prompt (ragged/bucketed prefill)
     block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged cache
+    cached_len=None,  # prefix cache: tokens already present in the slot's
+    # shared blocks; ``batch`` then holds only the uncached suffix
 ) -> Tuple[jnp.ndarray, Params]:
     """Prefill one request and write its cache into slot ``slot`` of an
     existing batched cache (every leaf is [n_periods, B, ...]), leaving the
@@ -458,7 +476,52 @@ def prefill_slot(
     block, which absorbs the pad-chunk writes; those chunks carry only
     ``pos == -1`` entries, so the null block's invariant (never a valid
     position) is preserved — and every *allocated* block gets overwritten
-    wholesale, so no stale positions from a prior owner survive admission."""
+    wholesale, so no stale positions from a prior owner survive admission.
+
+    With ``cached_len`` (prefix cache hit) the slot's table already names
+    shared blocks holding positions ``[0, cached_len)``; this runs the
+    *offset* prefill instead: suffix tokens RoPE-rotate and write at
+    absolute positions ``cached_len + i`` directly into the pool, and
+    their attention spans the gathered table row — shared prefix included.
+    Exact only where ``supports_prefix_cache`` holds (pure attention).
+    Because the offset path writes positions one-by-one rather than
+    overwriting whole blocks, the slot's fresh (non-shared) blocks have
+    their ``pos`` wiped to -1 first, so no stale positions from a prior
+    owner leak into the attention mask."""
+    if cached_len is not None:
+        assert block_table is not None, "prefix-cached prefill is paged-only"
+        assert supports_prefix_cache(cfg), (
+            f"{cfg.name}: prefix-cached prefill is exact only for pure-"
+            "attention periods"
+        )
+        slot = jnp.asarray(slot, jnp.int32)
+        cached_len = jnp.asarray(cached_len, jnp.int32)
+        row = jax.lax.dynamic_slice_in_dim(
+            block_table, slot, 1, axis=0
+        )  # [1, max_blocks]
+        bs_blk = cache["layer_0"]["k"].shape[2]  # pure-attn: layer_0 is attn
+        # wipe stale pos in the slot's fresh blocks (table entries past the
+        # cached prefix; null rows absorb their own wipe harmlessly)
+        keep = (cached_len + bs_blk - 1) // bs_blk  # incl. a CoW'd last block
+        wipe_rows = jnp.where(
+            jnp.arange(row.shape[1]) >= keep, row[0], 0  # 0 = null block
+        )
+        wiped: Params = {}
+        for lk, lv in cache.items():
+            lv = dict(lv)
+            lv["pos"] = lv["pos"].at[:, wipe_rows].set(-1)
+            wiped[lk] = lv
+        x = embed_inputs(params, cfg, batch)
+        s = x.shape[1]
+        tl = jnp.asarray(s if true_len is None else true_len, jnp.int32)
+        h, new_cache, _ = forward_hidden(
+            params, cfg, x, wiped, cached_len, None,
+            block_table=row, true_len=tl,
+        )
+        h_last = h[:, tl - 1][:, None, :]
+        logits = L.linear(_head_weights(params, cfg), h_last).astype(jnp.float32)
+        return logits[:, 0], new_cache
+
     if true_len is None:
         logits, small = prefill(params, cfg, batch, max_len)
     else:

@@ -1,5 +1,10 @@
 from repro.serving.engine import ServeEngine, GenerationResult
-from repro.serving.block_pool import BlockAllocator, blocks_needed
+from repro.serving.block_pool import (
+    BlockAllocator,
+    PrefixAdmit,
+    blocks_needed,
+    chain_hashes,
+)
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
 from repro.serving.metrics import RequestTrace, ServingMetrics
 from repro.serving.request import Request, RequestQueue, synthetic_trace

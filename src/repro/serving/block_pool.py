@@ -19,15 +19,37 @@ Two physical blocks are reserved and never allocated:
   write for inactive rows lands in a block no live table references,
   instead of corrupting blocks that may have been reallocated.
 
+Prefix caching (``prefix_cache=True``) layers three mechanisms on top of
+the free list:
+
+* **refcounts** — a physical block may appear in several slots' tables at
+  once; ``release`` decrements instead of freeing, and a block only leaves
+  circulation when its count hits zero.
+* **content-hash index** — every *full* prompt block is registered under
+  the chained hash of its token prefix (``h_j = hash((h_{j-1}, tokens of
+  block j))``), so an admission can find the longest block-aligned cached
+  prefix of its prompt and point its table at those blocks (refcount++).
+  A refcount-0 hashed block is *evictable*, not free: it keeps its content
+  and can be revived by a later match.
+* **copy-on-write** — no slot ever writes a block whose refcount exceeds
+  one. The single write-into-shared case is a fully cached prompt (the
+  engine must recompute the last prompt token for its logits): the last
+  matched block is copied to a fresh block owned by the slot before the
+  write. Eviction is clock-hand: when an admission would otherwise defer,
+  the hand sweeps the pool and drops refcount-0 cached blocks.
+
 Invariants (``check`` in tests):
-  - a physical block is owned by at most one slot at a time;
+  - a block's refcount equals the number of slot tables holding it;
   - null/trash are never handed out;
-  - ``len(free) + sum(owned) == n_blocks - RESERVED_BLOCKS`` always.
+  - free, evictable (hashed, refcount 0) and referenced blocks partition
+    the ``n_blocks - RESERVED_BLOCKS`` allocatable blocks;
+  - the hash index is a bijection onto the hashed blocks.
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import Deque, Dict, List
+import dataclasses
+from collections import Counter, deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 NULL_BLOCK = 0  # read target of unallocated table entries; pos stays -1
 TRASH_BLOCK = 1  # write target of inactive slots; never read by live rows
@@ -38,8 +60,39 @@ def blocks_needed(n_positions: int, block_size: int) -> int:
     return -(-n_positions // block_size)
 
 
+def chain_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Chained content hashes of the *full* blocks of ``tokens``: entry j
+    identifies the whole prefix ``tokens[: (j+1) * block_size]``, so equal
+    hashes mean equal prefixes, not just equal blocks."""
+    hashes: List[int] = []
+    h = 0
+    for j in range(len(tokens) // block_size):
+        h = hash((h, tuple(tokens[j * block_size : (j + 1) * block_size])))
+        hashes.append(h)
+    return hashes
+
+
+@dataclasses.dataclass
+class PrefixAdmit:
+    """What the engine needs to prefill an admission with a cached prefix.
+
+    ``cached_len`` counts prompt tokens already present in the slot's
+    blocks (0 = cold); the engine prefills only ``prompt[cached_len:]``.
+    ``cow_src/cow_dst`` name the device block copy for the fully-cached
+    case (both ``NULL_BLOCK`` when no copy is needed)."""
+
+    cached_len: int = 0
+    cached_blocks: int = 0  # table entries holding valid prefix data
+    cow_src: int = NULL_BLOCK
+    cow_dst: int = NULL_BLOCK
+
+    @property
+    def hit(self) -> bool:
+        return self.cached_len > 0
+
+
 class BlockAllocator:
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int, prefix_cache: bool = False):
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if n_blocks <= RESERVED_BLOCKS:
@@ -49,44 +102,210 @@ class BlockAllocator:
             )
         self.n_blocks = n_blocks
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
         self._free: Deque[int] = deque(range(RESERVED_BLOCKS, n_blocks))
-        self._owned: Dict[int, List[int]] = {}  # slot -> blocks
+        self._owned: Dict[int, List[int]] = {}  # slot -> table blocks (in order)
+        self._ref: Dict[int, int] = {}  # block -> refcount (allocated only)
+        # prefix-cache state: hashed blocks keep their content while
+        # refcount 0 (evictable) until the clock hand reclaims them
+        self._hash_of: Dict[int, int] = {}  # block -> chain hash
+        self._block_of: Dict[int, int] = {}  # chain hash -> block
+        self._hand: int = RESERVED_BLOCKS  # clock-hand eviction cursor
+        self._n_evict: int = 0  # hashed blocks with refcount 0 (O(1) count)
+        self._info: Dict[int, PrefixAdmit] = {}  # slot -> last admit info
 
     @property
     def capacity(self) -> int:
         """Total allocatable blocks (pool minus reserved)."""
         return self.n_blocks - RESERVED_BLOCKS
 
+    def n_evictable(self) -> int:
+        return self._n_evict
+
     def available(self) -> int:
-        return len(self._free)
+        """Blocks an admission could obtain: free plus evictable cached."""
+        return len(self._free) + self.n_evictable()
+
+    def in_use(self) -> int:
+        """Blocks pinned by live slots (excludes evictable cached blocks)."""
+        return self.capacity - self.available()
 
     def can_allocate(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self.available()
+
+    # -- free-list internals ------------------------------------------------
+
+    def _evict_one(self) -> None:
+        """Clock-hand sweep: reclaim the next refcount-0 cached block."""
+        for _ in range(self.capacity):
+            blk = self._hand
+            self._hand += 1
+            if self._hand >= self.n_blocks:
+                self._hand = RESERVED_BLOCKS
+            if blk in self._hash_of and self._ref.get(blk, 0) == 0:
+                h = self._hash_of.pop(blk)
+                del self._block_of[h]
+                self._n_evict -= 1
+                self._free.append(blk)
+                return
+        raise RuntimeError("eviction requested but no refcount-0 cached block")
+
+    def _take_free(self, n: int) -> List[int]:
+        while len(self._free) < n:
+            self._evict_one()
+        return [self._free.popleft() for _ in range(n)]
+
+    # -- plain allocation (no prefix sharing) -------------------------------
 
     def allocate(self, slot: int, n: int) -> List[int]:
-        """Hand ``n`` blocks to ``slot``. The scheduler releases a slot
-        before reusing it, so a double-allocate is a bug, not a policy."""
+        """Hand ``n`` fresh blocks to ``slot``. The scheduler releases a
+        slot before reusing it, so a double-allocate is a bug, not a
+        policy. Evicts refcount-0 cached blocks if the free list is short."""
         if slot in self._owned:
             raise RuntimeError(f"slot {slot} already owns blocks")
         if not self.can_allocate(n):
             raise RuntimeError(
-                f"allocating {n} blocks with only {len(self._free)} free"
+                f"allocating {n} blocks with only {self.available()} available"
             )
-        blocks = [self._free.popleft() for _ in range(n)]
+        blocks = self._take_free(n)
+        for b in blocks:
+            self._ref[b] = 1
         self._owned[slot] = blocks
         return list(blocks)
+
+    # -- prefix-cached admission --------------------------------------------
+
+    def _match_chain(self, hashes: Sequence[int]) -> List[int]:
+        """Longest run of indexed blocks along a hash chain."""
+        matched: List[int] = []
+        for h in hashes:
+            blk = self._block_of.get(h)
+            if blk is None:
+                break
+            matched.append(blk)
+        return matched
+
+    def match_prefix(self, tokens: Sequence[int]) -> List[int]:
+        """Longest chain of cached blocks covering a block-aligned prefix
+        of ``tokens`` (pure lookup: nothing is pinned)."""
+        return self._match_chain(chain_hashes(tokens, self.block_size))
+
+    def admit_request(
+        self,
+        slot: int,
+        tokens: Sequence[int],
+        n_pos: int,
+        n_pos_cold: Optional[int] = None,
+    ) -> Optional[PrefixAdmit]:
+        """Atomically admit a request: match its longest cached prefix, pin
+        the matched blocks (refcount++), allocate the uncached remainder
+        (evicting refcount-0 cached blocks as needed), and register the
+        fresh full prompt blocks in the hash index. Returns ``None`` —
+        with no state mutated — when even after eviction the remainder
+        would not fit (the scheduler defers FIFO).
+
+        ``n_pos`` is the request's total position need (prompt + budget);
+        ``n_pos_cold`` optionally inflates it for the cold path (bucketed
+        prefill writes whole blocks). A fully cached prompt keeps all its
+        matched blocks but copies the last one to a fresh block
+        (``cow_src/cow_dst``) so the last-token recompute never writes a
+        block with refcount > 1."""
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already owns blocks")
+        bs = self.block_size
+        hashes = chain_hashes(tokens, bs)
+        matched = self._match_chain(hashes)
+        n_tok = len(tokens)
+        cow = bool(matched) and len(matched) * bs == n_tok
+        total = blocks_needed(
+            max(n_pos, n_pos_cold or 0) if not matched else n_pos, bs
+        )
+        n_fresh = total - len(matched) + (1 if cow else 0)
+        # matched evictable blocks are being revived — they are not
+        # reclaimable capacity for this same admission
+        matched_evictable = sum(
+            1 for b in set(matched) if self._ref.get(b, 0) == 0
+        )
+        if n_fresh > len(self._free) + self.n_evictable() - matched_evictable:
+            return None
+        for b in matched:
+            if self._ref.get(b, 0) == 0:
+                self._n_evict -= 1  # revived from the evictable pool
+            self._ref[b] = self._ref.get(b, 0) + 1  # pin before any eviction
+        fresh = self._take_free(n_fresh)
+        for b in fresh:
+            self._ref[b] = 1
+        if cow:
+            # table order: matched[:-1] + [copy of matched[-1]] + rest
+            src = matched[-1]
+            dst = fresh[0]
+            self._ref[src] -= 1
+            if self._ref[src] == 0:  # revived-then-copied evictable block
+                del self._ref[src]
+                self._n_evict += 1
+            table = matched[:-1] + [dst] + fresh[1:]
+            info = PrefixAdmit(
+                cached_len=n_tok - 1,
+                cached_blocks=len(matched),
+                cow_src=src,
+                cow_dst=dst,
+            )
+        else:
+            table = matched + fresh
+            info = PrefixAdmit(
+                cached_len=len(matched) * bs, cached_blocks=len(matched)
+            )
+        # register this prompt's fresh full blocks so later admissions can
+        # share them (their content is written by the prefill the engine
+        # dispatches before any subsequent admission's reads)
+        for j in range(len(matched), len(hashes)):
+            h = hashes[j]
+            if h not in self._block_of:
+                blk = table[j]
+                self._block_of[h] = blk
+                self._hash_of[blk] = h
+        self._owned[slot] = table
+        self._info[slot] = info
+        return info
+
+    def admit_info(self, slot: int) -> PrefixAdmit:
+        return self._info.get(slot, PrefixAdmit())
+
+    # -- shared state -------------------------------------------------------
 
     def blocks_of(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, ()))
 
     def release(self, slot: int) -> None:
+        self._info.pop(slot, None)
         for blk in self._owned.pop(slot, ()):
-            self._free.append(blk)
+            self._ref[blk] -= 1
+            if self._ref[blk] == 0:
+                del self._ref[blk]
+                if blk in self._hash_of:  # hashed blocks become evictable
+                    self._n_evict += 1
+                else:
+                    self._free.append(blk)
 
     def check(self) -> None:
-        """Assert the ownership invariants (test hook)."""
-        owned = [b for bs in self._owned.values() for b in bs]
-        assert len(set(owned)) == len(owned), "block owned by two slots"
-        assert not set(owned) & set(self._free), "owned block on free list"
-        assert NULL_BLOCK not in owned and TRASH_BLOCK not in owned
-        assert len(owned) + len(self._free) == self.capacity
+        """Assert the ownership/refcount/index invariants (test hook)."""
+        counts = Counter(b for bs_ in self._owned.values() for b in bs_)
+        for slot, bs_ in self._owned.items():
+            assert len(set(bs_)) == len(bs_), f"slot {slot} table repeats a block"
+        assert dict(counts) == self._ref, "refcounts disagree with slot tables"
+        referenced = set(self._ref)
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list repeats a block"
+        assert not referenced & free, "referenced block on free list"
+        hashed = set(self._hash_of)
+        assert not hashed & free, "hashed block on free list"
+        evictable = hashed - referenced
+        assert self._n_evict == len(evictable), "evictable counter drifted"
+        assert len(free) + len(evictable) + len(referenced) == self.capacity
+        for reserved in (NULL_BLOCK, TRASH_BLOCK):
+            assert reserved not in referenced
+            assert reserved not in free
+            assert reserved not in hashed
+        assert len(self._block_of) == len(self._hash_of)
+        for blk, h in self._hash_of.items():
+            assert self._block_of[h] == blk, "hash index is not a bijection"

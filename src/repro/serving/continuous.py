@@ -20,13 +20,23 @@ more slots fit the same memory (``benchmarks/bench_serving.py`` measures
 it). Both layouts are token-exact under greedy decoding; the contiguous
 path is the ``block_size == 0`` degenerate case.
 
+``prefix_cache=True`` (paged, pure-attention archs only) shares identical
+prompt-prefix blocks between requests: admission matches the longest
+cached block-aligned prefix in the allocator's content-hash index, points
+the new slot's table at those shared blocks (refcount++), and prefills
+*only the uncached suffix* at an offset — RoPE positions and the slot's
+pos start at ``cached_len``, and suffix attention spans the shared blocks
+it did not write. A fully cached prompt copies its last block before the
+last-token recompute (copy-on-write), so no slot ever writes a block with
+refcount > 1.
+
 Device/host split: the decode step carries logits, per-slot positions, the
 active mask, emitted counts, and the output token buffer entirely on
 device; the host syncs two small vectors (active, emitted) once per
 ``sync_every``-step burst to run the scheduler, and fetches token buffers
 only when a slot finishes. No per-token host round-trips. In paged mode
-the block tables live host-side with the allocator and are pushed (a tiny
-[n_slots, max_blocks] int32) only when admissions/releases change them.
+the block tables live host-side with the allocator; only the dirty slot
+rows are updated on device when admissions/releases change them.
 """
 from __future__ import annotations
 
@@ -80,8 +90,20 @@ class ContinuousEngine:
         block_size: int = 0,  # 0 = contiguous max_len lane per slot
         n_blocks: Optional[int] = None,  # paged pool size (default: equal
         # memory to n_slots contiguous lanes, plus the 2 reserved blocks)
+        prefix_cache: bool = False,  # share identical prompt-prefix blocks
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
+        if prefix_cache:
+            if block_size <= 0:
+                raise ValueError(
+                    "prefix_cache shares pool blocks; it needs block_size > 0"
+                )
+            if not T.supports_prefix_cache(cfg):
+                raise ValueError(
+                    f"{cfg.name}: prefix caching is exact only for pure-"
+                    "attention periods (shared blocks carry KV, not "
+                    "SSM/MoE state)"
+                )
         if block_size > 0:
             if not T.supports_paged_cache(cfg):
                 raise ValueError(
@@ -116,6 +138,7 @@ class ContinuousEngine:
         self.prefill_bucket = prefill_bucket
         self.seed = seed
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
         self.max_blocks = max_len // block_size if block_size > 0 else 0
         if block_size > 0:
             self.n_blocks = (
@@ -164,6 +187,36 @@ class ContinuousEngine:
         # one compile per prefill shape (bounded by bucketing); carry donated
         self._admit = jax.jit(_admit, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
 
+        def _admit_prefix(
+            params, cache, logits, pos, active, emitted, maxnew, temps,
+            toks, true_suffix, cached_len, slot, budget, temp, table,
+            cow_src, cow_dst,
+        ):
+            """Prefix-cache admission: the slot's table row already names
+            shared blocks for positions [0, cached_len); copy-on-write the
+            fully-cached last block if needed (``cow_src == cow_dst ==
+            null`` makes it a no-op self-copy), then prefill only the
+            uncached suffix at an offset. One dispatch per admission."""
+            cache = jax.tree.map(
+                lambda a: a.at[:, cow_dst].set(a[:, cow_src]), cache
+            )
+            row, cache = T.prefill_slot(
+                params, cfg, cache, {"tokens": toks}, slot, max_len,
+                true_suffix, block_table=table, cached_len=cached_len,
+            )
+            logits = logits.at[slot].set(row[0])
+            pos = pos.at[slot].set(cached_len + true_suffix)
+            active = active.at[slot].set(True)
+            emitted = emitted.at[slot].set(0)
+            maxnew = maxnew.at[slot].set(budget)
+            temps = temps.at[slot].set(temp)
+            return cache, logits, pos, active, emitted, maxnew, temps
+
+        # compiles per suffix shape (bounded by bucketing, like _admit)
+        self._admit_prefix = jax.jit(
+            _admit_prefix, donate_argnums=(1, 2, 3, 4, 5, 6, 7)
+        )
+
         eos = -1 if eos_id is None else int(eos_id)  # -1 never matches a token
 
         def _step(
@@ -197,7 +250,11 @@ class ContinuousEngine:
         cfg, b = self.cfg, self.n_slots
         paged = self.block_size > 0
         allocator = (
-            BlockAllocator(self.n_blocks, self.block_size) if paged else None
+            BlockAllocator(
+                self.n_blocks, self.block_size, prefix_cache=self.prefix_cache
+            )
+            if paged
+            else None
         )
         sched = Scheduler(b, self.max_len, self.prefill_bucket, allocator)
         metrics = ServingMetrics(b)
@@ -248,30 +305,60 @@ class ContinuousEngine:
 
             if paged and admits:
                 # bind the freshly allocated blocks before any prefill or
-                # decode sees the table (unallocated tail -> null block)
+                # decode sees the table (unallocated tail -> null block);
+                # only the dirty slot rows are pushed, in one dispatch
                 for slot, _ in admits:
                     blocks = allocator.blocks_of(slot)
                     table_np[slot] = NULL_BLOCK
                     table_np[slot, : len(blocks)] = blocks
-                table_dev = jnp.asarray(table_np)
+                dirty = np.asarray([slot for slot, _ in admits])
+                table_dev = table_dev.at[dirty].set(jnp.asarray(table_np[dirty]))
 
             for slot, req in admits:
                 metrics.on_admit(req.rid, now())
                 plen = req.prompt_len
-                blen = sched.bucket_len(plen)
-                toks = jnp.asarray(
-                    req.prompt + [0] * (blen - plen), jnp.int32
-                )[None, :]
-                cache, logits, pos, active, emitted, maxnew, temps = self._admit(
-                    self.params, cache, logits, pos, active, emitted, maxnew,
-                    temps, toks, jnp.int32(plen), jnp.int32(slot),
-                    jnp.int32(req.max_new_tokens), jnp.float32(req.temperature),
-                    table_dev,
-                )
+                info = allocator.admit_info(slot) if self.prefix_cache else None
+                if info is not None and info.hit:
+                    # shared-prefix admission: prefill only the uncached
+                    # suffix; the CoW block copy rides the same dispatch
+                    suffix = req.prompt[info.cached_len :]
+                    blen = sched.bucket_len(len(suffix))
+                    toks = jnp.asarray(
+                        suffix + [0] * (blen - len(suffix)), jnp.int32
+                    )[None, :]
+                    (
+                        cache, logits, pos, active, emitted, maxnew, temps,
+                    ) = self._admit_prefix(
+                        self.params, cache, logits, pos, active, emitted,
+                        maxnew, temps, toks, jnp.int32(len(suffix)),
+                        jnp.int32(info.cached_len), jnp.int32(slot),
+                        jnp.int32(req.max_new_tokens),
+                        jnp.float32(req.temperature), table_dev,
+                        jnp.int32(info.cow_src), jnp.int32(info.cow_dst),
+                    )
+                else:
+                    blen = sched.bucket_len(plen)
+                    toks = jnp.asarray(
+                        req.prompt + [0] * (blen - plen), jnp.int32
+                    )[None, :]
+                    (
+                        cache, logits, pos, active, emitted, maxnew, temps,
+                    ) = self._admit(
+                        self.params, cache, logits, pos, active, emitted,
+                        maxnew, temps, toks, jnp.int32(plen), jnp.int32(slot),
+                        jnp.int32(req.max_new_tokens),
+                        jnp.float32(req.temperature), table_dev,
+                    )
                 jax.block_until_ready(logits)
                 metrics.on_first_token(req.rid, now())
+                if self.prefix_cache:
+                    metrics.on_prefix_lookup(
+                        req.rid, info.cached_len if info else 0, plen
+                    )
                 running[slot] = req
             peak_running = max(peak_running, len(running))
+            if allocator is not None:
+                metrics.on_blocks_in_use(allocator.in_use())
 
             metrics.on_decode_steps(sync_every)
             for _ in range(sync_every):
@@ -296,7 +383,12 @@ class ContinuousEngine:
                         # freed blocks may be reallocated this very loop
                         table_np[slot] = TRASH_BLOCK
                 if paged:
-                    table_dev = jnp.asarray(table_np)
+                    # dirty-row update, one dispatch; the rest of the table
+                    # stands untouched on device
+                    dirty = np.asarray(done_slots)
+                    table_dev = table_dev.at[dirty].set(
+                        jnp.asarray(table_np[dirty])
+                    )
 
         summary = metrics.summary()
         summary["peak_concurrency"] = float(peak_running)

@@ -49,6 +49,12 @@ class ServingMetrics:
         self.occupancy_samples: List[float] = []  # active slots per sample
         self.decode_steps: int = 0  # for token-exact occupancy
         self.end_time: float = 0.0
+        # prefix-cache counters (stay zero when the cache is off)
+        self.cached_prompt_tokens: int = 0
+        self.total_prompt_tokens: int = 0
+        self.prefix_hits: int = 0
+        self.prefix_lookups: int = 0
+        self.peak_blocks_in_use: int = 0
 
     # -- event hooks -------------------------------------------------------
 
@@ -69,6 +75,18 @@ class ServingMetrics:
 
     def on_occupancy(self, active_slots: float) -> None:
         self.occupancy_samples.append(active_slots)
+
+    def on_prefix_lookup(self, rid: int, cached_tokens: int, prompt_tokens: int) -> None:
+        """Record a prefix-cache lookup at admission: ``cached_tokens`` of
+        the ``prompt_tokens``-token prompt rode shared blocks (0 = miss)."""
+        self.prefix_lookups += 1
+        self.cached_prompt_tokens += cached_tokens
+        self.total_prompt_tokens += prompt_tokens
+        if cached_tokens > 0:
+            self.prefix_hits += 1
+
+    def on_blocks_in_use(self, n: int) -> None:
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use, int(n))
 
     def on_decode_steps(self, n: int) -> None:
         """Count decode steps run across all slots. When recorded, occupancy
@@ -103,8 +121,18 @@ class ServingMetrics:
             "duration_s": dur,
             "tokens_per_s": self.total_tokens() / dur,
             "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+            "p50_ttft_s": _quantile(ttfts, 0.50),
             "p95_ttft_s": _quantile(ttfts, 0.95),
             "mean_latency_s": sum(lats) / len(lats) if lats else float("nan"),
             "p95_latency_s": _quantile(lats, 0.95),
             "mean_occupancy": occ,
+            # prefix-cache: token-weighted hit rate (cached / prompt tokens)
+            "prefix_cache_hit_rate": (
+                self.cached_prompt_tokens / self.total_prompt_tokens
+                if self.total_prompt_tokens
+                else 0.0
+            ),
+            "cached_prompt_tokens": float(self.cached_prompt_tokens),
+            "prefix_hits": float(self.prefix_hits),
+            "peak_blocks_in_use": float(self.peak_blocks_in_use),
         }

@@ -76,18 +76,27 @@ def synthetic_trace(
     max_new_tokens: Tuple[int, int] = (16, 32),
     temperature: float = 0.0,
     seed: int = 0,
+    shared_prefix_len: int = 0,
 ) -> List[Request]:
     """Deterministic Poisson-arrival trace. The first request arrives at
-    t=0 so runs start immediately; subsequent gaps are exponential."""
+    t=0 so runs start immediately; subsequent gaps are exponential.
+
+    ``shared_prefix_len > 0`` models system-prompt / few-shot traffic:
+    every request's prompt starts with the same ``shared_prefix_len``
+    tokens (truncated for prompts shorter than the prefix), followed by a
+    per-request random tail — the workload the prefix cache serves."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / max(rate, 1e-9), n_requests)
     gaps[0] = 0.0
     arrivals = np.cumsum(gaps)
+    shared = rng.integers(0, vocab_size, shared_prefix_len).tolist()
     reqs = []
     for i in range(n_requests):
         plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
         mnew = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
-        prompt = rng.integers(0, vocab_size, plen).tolist()
+        head = shared[: min(plen, shared_prefix_len)]
+        tail = rng.integers(0, vocab_size, plen - len(head)).tolist()
+        prompt = head + tail
         reqs.append(
             Request(
                 rid=i,

@@ -19,6 +19,12 @@ worst-case block need — ``ceil(max(prompt + max_new, padded_prefill) /
 block_size)`` — is available, and its blocks return to the pool at
 ``release``. Deferral is FIFO (the head of the queue blocks younger
 requests) so admission order stays deterministic under memory pressure.
+
+With prefix caching on the allocator, admission routes through
+``BlockAllocator.admit_request``: the request is charged only
+``blocks_needed(total) - cached_blocks`` fresh blocks (its longest cached
+block-aligned prompt prefix rides shared, refcounted blocks), and the
+allocator may evict refcount-0 cached blocks rather than defer.
 """
 from __future__ import annotations
 
@@ -93,7 +99,21 @@ class Scheduler:
             req = self.queue.peek_ready(now)
             if req is None:
                 break
-            if self.allocator is not None:
+            if self.allocator is not None and self.allocator.prefix_cache:
+                # one atomic call: match cached prefix, pin it, allocate
+                # (evicting if needed) only the uncached remainder
+                info = self.allocator.admit_request(
+                    slot,
+                    req.prompt,
+                    req.prompt_len + req.max_new_tokens,
+                    n_pos_cold=max(
+                        req.prompt_len + req.max_new_tokens,
+                        self.bucket_len(req.prompt_len),
+                    ),
+                )
+                if info is None:
+                    break
+            elif self.allocator is not None:
                 nb = self.block_need(req)
                 if not self.allocator.can_allocate(nb):
                     break

@@ -1,0 +1,310 @@
+"""Prefix-cache serving: refcounted copy-on-write block sharing.
+
+Covers the three layers of the feature:
+
+* ``BlockAllocator`` with ``prefix_cache=True`` — chained content hashes,
+  refcount bookkeeping, evictable (refcount-0 cached) blocks, clock-hand
+  eviction, CoW accounting for fully cached prompts, and the extended
+  ``check`` invariants after every mutation.
+* ``ContinuousEngine(prefix_cache=True)`` — shared-prefix outputs are
+  token-exact against the cold-prefill paged engine (dense, SLiM-compressed
+  and kv_quant, greedy), including the fully-cached CoW admission.
+* Capacity: at equal pool memory, sharing admits strictly more concurrent
+  requests than the cold paged engine.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.pipeline import CompressionConfig
+from repro.data import SyntheticLMConfig, calibration_batch
+from repro.models import transformer as T
+from repro.models.compress import compress_model
+from repro.serving import (
+    BlockAllocator,
+    ContinuousEngine,
+    Request,
+    Scheduler,
+    chain_hashes,
+    synthetic_trace,
+)
+from repro.serving.block_pool import NULL_BLOCK, RESERVED_BLOCKS, TRASH_BLOCK
+
+MAX_LEN = 48
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("slim-tiny")
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=384, vocab_size=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _shared_trace(cfg, n=5, prefix=16, seed=3):
+    return synthetic_trace(
+        n, rate=100.0, vocab_size=cfg.vocab_size,
+        prompt_len=(prefix + 2, prefix + 8), max_new_tokens=(3, 6), seed=seed,
+        shared_prefix_len=prefix,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Allocator: refcounts, hash index, CoW, eviction
+# ---------------------------------------------------------------------------
+
+class TestPrefixAllocator:
+    def test_chain_hashes_identify_prefixes_not_blocks(self):
+        # same tokens in block 1 but different block 0 -> different chains
+        a = chain_hashes([1] * 8 + [2] * 8, 8)
+        b = chain_hashes([3] * 8 + [2] * 8, 8)
+        assert len(a) == len(b) == 2
+        assert a[1] != b[1]
+        # partial tail block contributes no hash
+        assert len(chain_hashes([1] * 11, 8)) == 1
+
+    def test_share_increments_refcount_and_release_decrements(self):
+        a = BlockAllocator(n_blocks=12, block_size=BS, prefix_cache=True)
+        prompt = list(range(20))  # 2 full blocks + partial
+        i0 = a.admit_request(0, prompt, n_pos=24)
+        assert i0.cached_len == 0
+        a.check()
+        i1 = a.admit_request(1, prompt, n_pos=24)
+        assert i1.cached_len == 16 and i1.cached_blocks == 2
+        shared = a.blocks_of(0)[:2]
+        assert a.blocks_of(1)[:2] == shared  # same physical blocks
+        assert a._ref[shared[0]] == 2
+        a.check()
+        a.release(0)
+        assert a._ref[shared[0]] == 1  # decrement, not free
+        a.check()
+        a.release(1)
+        # hashed blocks become evictable (content kept), not free
+        assert a.n_evictable() == 2
+        a.check()
+
+    def test_evictable_blocks_revive_on_match(self):
+        a = BlockAllocator(n_blocks=12, block_size=BS, prefix_cache=True)
+        prompt = list(range(12))  # 1 full block + a partial (never shared)
+        a.admit_request(0, prompt, n_pos=20)
+        first = a.blocks_of(0)
+        a.release(0)
+        info = a.admit_request(1, prompt, n_pos=20)
+        # the full block revives from the evictable pool, same physical id
+        assert a.blocks_of(1)[0] == first[0]
+        assert info.cached_len == 8
+        a.check()
+
+    def test_cow_fully_cached_prompt(self):
+        a = BlockAllocator(n_blocks=12, block_size=BS, prefix_cache=True)
+        prompt = list(range(16))  # exactly 2 blocks
+        a.admit_request(0, prompt, n_pos=20)
+        blocks0 = a.blocks_of(0)
+        info = a.admit_request(1, prompt, n_pos=20)
+        assert info.cached_len == 15  # last token recomputed
+        assert info.cow_src == blocks0[1]
+        assert info.cow_dst == a.blocks_of(1)[1]
+        assert info.cow_dst != info.cow_src  # fresh copy, refcount 1
+        assert a.blocks_of(1)[0] == blocks0[0]  # head still shared
+        assert a._ref[info.cow_dst] == 1
+        a.check()
+
+    def test_clock_hand_eviction_when_admission_would_defer(self):
+        # 6 usable blocks; request A caches 2 full blocks then releases;
+        # an unrelated request needing 6 must evict them rather than defer
+        a = BlockAllocator(n_blocks=8, block_size=BS, prefix_cache=True)
+        a.admit_request(0, list(range(16)), n_pos=16)
+        a.release(0)
+        assert a.n_evictable() == 2 and len(a._free) == 4
+        info = a.admit_request(1, [99] * 8, n_pos=48)  # needs all 6
+        assert info is not None and info.cached_len == 0
+        assert a.n_evictable() == 0  # cached blocks were dropped
+        a.check()
+        a.release(1)
+        # and the dropped prefix no longer matches
+        assert a.match_prefix(list(range(16))) == []
+
+    def test_defers_when_eviction_cannot_cover(self):
+        a = BlockAllocator(n_blocks=8, block_size=BS, prefix_cache=True)
+        a.admit_request(0, list(range(16)), n_pos=40)  # pins 5 of 6
+        assert a.admit_request(1, [7] * 8, n_pos=16) is None  # 2 > 1 free
+        a.check()  # failed admission mutates nothing
+        assert a.blocks_of(1) == []
+
+    def test_matched_evictable_blocks_not_double_counted(self):
+        # slot 1 revives the 2 evictable blocks as its prefix; they must
+        # not also be counted as reclaimable capacity for its fresh need
+        a = BlockAllocator(n_blocks=8, block_size=BS, prefix_cache=True)
+        a.admit_request(0, list(range(16)), n_pos=16)
+        a.release(0)  # 4 free + 2 evictable
+        info = a.admit_request(1, list(range(16)) + [9] * 8, n_pos=48)
+        # needs 6 total, 2 cached -> 4 fresh = exactly the free list
+        assert info is not None and info.cached_blocks == 2
+        a.check()
+        assert a.admit_request(2, [5] * 8, n_pos=8) is None  # pool truly full
+
+    def test_scheduler_charges_only_uncached_remainder(self):
+        alloc = BlockAllocator(n_blocks=10, block_size=BS, prefix_cache=True)
+        s = Scheduler(n_slots=4, max_len=48, allocator=alloc)
+        prompt = list(range(16))
+        # each request needs 3 blocks cold (16 + 8); after the first, the
+        # 2-block prefix rides shared so each extra costs 1+1 (CoW) blocks
+        for i in range(3):
+            s.submit(Request(i, list(prompt), arrival=0.0, max_new_tokens=8))
+        admitted = s.admit(now=0.0)
+        assert len(admitted) == 3  # cold would need 9 > 8 usable blocks
+        alloc.check()
+
+    def test_non_prefix_mode_unchanged(self):
+        a = BlockAllocator(n_blocks=8, block_size=BS)
+        assert not a.prefix_cache
+        got = a.allocate(0, 6)
+        assert NULL_BLOCK not in got and TRASH_BLOCK not in got
+        a.check()
+        a.release(0)
+        assert a.available() == 6
+        a.check()
+
+
+# ---------------------------------------------------------------------------
+# Engine: token-exactness vs cold prefill
+# ---------------------------------------------------------------------------
+
+def _run_pair(params, cfg, trace_fn, **kw):
+    cold = ContinuousEngine(
+        params, cfg, block_size=BS, max_len=MAX_LEN, **kw
+    ).run(trace_fn(), sync_every=2)
+    warm = ContinuousEngine(
+        params, cfg, block_size=BS, max_len=MAX_LEN, prefix_cache=True, **kw
+    ).run(trace_fn(), sync_every=2)
+    return cold, warm
+
+
+class TestPrefixEngine:
+    def test_shared_prefix_token_exact_dense(self, model):
+        cfg, params = model
+        cold, warm = _run_pair(params, cfg, lambda: _shared_trace(cfg), n_slots=2)
+        assert warm.outputs == cold.outputs
+        assert warm.metrics["prefix_cache_hit_rate"] > 0.0
+        assert warm.metrics["cached_prompt_tokens"] > 0
+        assert cold.metrics["prefix_cache_hit_rate"] == 0.0
+
+    def test_shared_prefix_token_exact_slim(self, model):
+        cfg, params = model
+        dcfg = SyntheticLMConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0
+        )
+        calib = calibration_batch(dcfg, n_samples=4)
+        cp, _ = compress_model(
+            params, cfg, calib,
+            CompressionConfig(adapter="slim", rank=16, quantize_adapters=True),
+        )
+        cold, warm = _run_pair(cp, cfg, lambda: _shared_trace(cfg, n=4), n_slots=2)
+        assert warm.outputs == cold.outputs
+        assert warm.metrics["prefix_cache_hit_rate"] > 0.0
+
+    def test_shared_prefix_token_exact_kv_quant(self, model):
+        cfg, params = model
+        qcfg = dataclasses.replace(cfg, kv_quant=True)
+        cold, warm = _run_pair(
+            params, qcfg, lambda: _shared_trace(qcfg, n=4), n_slots=2
+        )
+        assert warm.outputs == cold.outputs
+        assert warm.metrics["prefix_cache_hit_rate"] > 0.0
+
+    def test_fully_cached_prompt_cow_exact(self, model):
+        """Identical block-aligned prompts: the second admission shares
+        every block, CoW-copies the last, and recomputes only the final
+        token — outputs must match running each prompt cold."""
+        cfg, params = model
+        p = [int(t) for t in
+             jax.random.randint(jax.random.PRNGKey(9), (16,), 0, cfg.vocab_size)]
+        mk = lambda: [
+            Request(rid=i, prompt=list(p), arrival=0.0, max_new_tokens=4)
+            for i in range(2)
+        ]
+        cold, warm = _run_pair(params, cfg, mk, n_slots=1)
+        assert warm.outputs == cold.outputs
+        # plen - 1 tokens rode the cache (the last is recomputed for logits)
+        assert warm.metrics["cached_prompt_tokens"] == len(p) - 1
+        # bucketing pads the 1-token recompute to 4: the offset prefill then
+        # starts mid-block (position plen-1 inside the CoW'd block)
+        warm_b = ContinuousEngine(
+            params, cfg, n_slots=1, max_len=MAX_LEN, block_size=BS,
+            prefill_bucket=4, prefix_cache=True,
+        ).run(mk(), sync_every=2)
+        assert warm_b.outputs == cold.outputs
+
+    def test_bucketed_suffix_prefill_exact(self, model):
+        """Prefill bucketing pads the *suffix* on a hit; pad writes are
+        masked to the null block, so outputs stay exact."""
+        cfg, params = model
+        cold = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=BS,
+            prefill_bucket=4,
+        ).run(_shared_trace(cfg), sync_every=2)
+        warm = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=BS,
+            prefill_bucket=4, prefix_cache=True,
+        ).run(_shared_trace(cfg), sync_every=2)
+        assert warm.outputs == cold.outputs
+        assert warm.metrics["prefix_cache_hit_rate"] > 0.0
+
+    def test_sharing_lifts_admission_at_equal_memory(self, model):
+        """The capacity win: 4 requests sharing a 16-token prefix fit a
+        pool that can only run 2 cold — peak concurrency is strictly
+        higher with sharing at identical pool size."""
+        cfg, params = model
+        prefix = [int(t) for t in
+                  jax.random.randint(jax.random.PRNGKey(3), (16,), 0, cfg.vocab_size)]
+        def mk():
+            rng = jax.random.split(jax.random.PRNGKey(7), 4)
+            return [
+                Request(
+                    rid=i,
+                    prompt=list(prefix) + [
+                        int(t) for t in jax.random.randint(rng[i], (4,), 0, cfg.vocab_size)
+                    ],
+                    arrival=0.0,
+                    max_new_tokens=4,
+                )
+                for i in range(4)
+            ]
+        # each request cold: ceil(24/8) = 3 blocks; pool of 8 usable runs 2
+        # concurrently. Shared: 2 prefix blocks + 4 x 1 unique = 6 blocks.
+        kw = dict(n_slots=4, max_len=MAX_LEN, block_size=BS,
+                  n_blocks=8 + RESERVED_BLOCKS)
+        cold = ContinuousEngine(params, cfg, **kw).run(mk(), sync_every=1)
+        warm = ContinuousEngine(params, cfg, prefix_cache=True, **kw).run(
+            mk(), sync_every=1
+        )
+        assert warm.outputs == cold.outputs
+        assert (
+            warm.metrics["peak_concurrency"] > cold.metrics["peak_concurrency"]
+        )
+        assert warm.metrics["peak_concurrency"] == 4
+        assert warm.metrics["peak_blocks_in_use"] <= 8
+
+    def test_rejects_non_attention_arch(self):
+        base = get_config("jamba-v0.1-52b", reduced=True)
+        from repro.models.config import LayerSpec
+        cfg = dataclasses.replace(
+            base, name="hybrid-prefix-test", n_layers=2,
+            period=(LayerSpec("ssm"), LayerSpec("attn")),
+        )
+        assert not T.supports_prefix_cache(cfg)
+        with pytest.raises(ValueError):
+            ContinuousEngine(
+                {}, cfg, n_slots=1, max_len=32, block_size=8, prefix_cache=True
+            )
+
+    def test_rejects_contiguous_cache(self, model):
+        cfg, _ = model
+        with pytest.raises(ValueError):
+            ContinuousEngine(
+                {}, cfg, n_slots=1, max_len=MAX_LEN, prefix_cache=True
+            )
