@@ -7,7 +7,6 @@ held-out stream of a trained LM. Reproduces the ordering claims:
 from repro.core.pipeline import CompressionConfig
 
 from benchmarks.common import Table, compress_with, eval_ppl, trained_model
-from repro.models import transformer as T
 
 
 GRID = [

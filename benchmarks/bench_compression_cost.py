@@ -3,7 +3,6 @@ plus our beyond-paper randomized-SVD variant (EXPERIMENTS §Perf, compression
 cost iteration)."""
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,6 +1,5 @@
 """Paper Table 2/9: lightweight PEFT on the frozen compressed model recovers
 accuracy; SLiM-LoRA gains more than Naive-LoRA (saliency-aware init)."""
-import dataclasses
 
 import jax
 

@@ -7,8 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Table, timed
-from repro.core.compressed import SlimLinear, slim_linear_apply, build_slim_linear
-from repro.core.packing import pack_dense_24, pack_int4
+from repro.core.compressed import slim_linear_apply, build_slim_linear
 from repro.core.pruning import nm_mask
 
 

@@ -1,7 +1,6 @@
 """Paper Table 8/14 (quantization-only) + Alg. 1 validation: per-tensor
 reconstruction + layer output error for each quantizer, with/without one-shot
 adapters; plus SLiM-Quant multigrid vs exhaustive-grid optimality gap."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -13,7 +12,6 @@ from repro.core import (
     slim_quantize,
 )
 from repro.core.slim_quant import estimate_error_curve, slim_quantize_activation_aware
-from repro.core.quantizers import output_error, reconstruction_error
 
 
 def run(table: Table):

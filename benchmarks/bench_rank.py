@@ -1,5 +1,4 @@
 """Paper Figure 5a: adapter-rank sensitivity — eval quality vs rank ratio."""
-import dataclasses
 
 from benchmarks.common import Table, compress_with, eval_ppl, trained_model
 from repro.core.pipeline import CompressionConfig

@@ -1,6 +1,5 @@
 """Paper Table 16/17: at ~8x compression, 4-bit + 50% sparsity beats 2-bit
 dense — sparsity and quantization compose better than quantization alone."""
-import dataclasses
 
 from benchmarks.common import Table, compress_with, eval_ppl, trained_model
 from repro.core.pipeline import CompressionConfig

@@ -7,15 +7,13 @@ method *orderings* (the claims) are what the benchmarks reproduce.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import math
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config

@@ -12,7 +12,6 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.compressed import SlimLinear

@@ -94,7 +94,7 @@ def main(argv=None):
     print(f"[5] paged cache ({half_pool} x {bs}-pos blocks, half the lane "
           f"memory): same tokens, {pm['tokens_per_s']:.1f} tok/s, peak "
           f"concurrency {pm['peak_concurrency']:.0f} — allocation follows "
-          f"actual length, not max_len")
+          "actual length, not max_len")
 
 
 if __name__ == "__main__":

@@ -28,12 +28,7 @@ from repro.core.packing import (
     pack_dense_24,
     unpack_dense_24,
 )
-from repro.core.quantizers import (
-    QuantizedTensor,
-    dequantize_codes,
-    fit_group_size,
-    quantize_symmetric,
-)
+from repro.core.quantizers import fit_group_size, quantize_symmetric
 from repro.core.ste import ste_quantize
 
 

@@ -18,7 +18,6 @@ randomized-SVD tolerance and ~10x faster at r = 0.1 d.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

@@ -13,8 +13,7 @@ consumes.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

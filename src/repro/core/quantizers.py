@@ -17,8 +17,6 @@ Pallas kernels' reference oracles.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ Calibration batches reuse the same stream at a reserved step offset.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

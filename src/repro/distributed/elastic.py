@@ -8,7 +8,6 @@ mesh — so losing a host mid-run costs one restart, not a re-run.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Sequence, Tuple
 
 import jax

@@ -16,7 +16,6 @@ touched with the offending step so an external supervisor can reschedule.
 """
 from __future__ import annotations
 
-import os
 import threading
 import time
 from typing import Optional

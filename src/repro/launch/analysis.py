@@ -25,9 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-import jax
 
-from repro.launch import hw
 from repro.launch.roofline import (
     CollectiveStats,
     Roofline,

@@ -35,8 +35,6 @@ import sys
 import time
 from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
 
 from repro.configs import ASSIGNED, get_config
 from repro.launch import hw

@@ -19,7 +19,7 @@ narrative log in EXPERIMENTS.md §Perf).
 import argparse
 import json
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from repro.launch.dryrun import run_cell
 

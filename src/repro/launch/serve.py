@@ -22,7 +22,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.pipeline import CompressionConfig
@@ -30,6 +29,7 @@ from repro.data import SyntheticLMConfig, calibration_batch, synthetic_batches
 from repro.models import transformer as T
 from repro.models.compress import compress_model, summarize_reports
 from repro.serving import ContinuousEngine, ServeEngine, synthetic_trace
+from repro.serving.block_pool import RESERVED_BLOCKS
 
 
 def main(argv=None):
@@ -74,6 +74,17 @@ def main(argv=None):
         help="length of a common prompt prefix shared by every request in "
         "the synthetic trace (models system-prompt traffic)",
     )
+    p.add_argument(
+        "--preemption", action="store_true",
+        help="admit optimistically (charge only the prompt's blocks), grow "
+        "block tables on demand, and evict the youngest running request "
+        "when the pool runs dry (token-exact resume; needs --block-size)",
+    )
+    p.add_argument(
+        "--decode-reserve", type=int, default=2,
+        help="watermark blocks held unallocated at admission for running "
+        "slots to grow into (preemption mode only)",
+    )
     args = p.parse_args(argv)
 
     if args.block_size > 0 and args.workload != "poisson":
@@ -86,6 +97,8 @@ def main(argv=None):
     if args.shared_prefix > 0 and args.workload != "poisson":
         p.error("--shared-prefix shapes the synthetic arrival trace; it "
                 "needs --workload poisson")
+    if args.preemption and args.block_size <= 0:
+        p.error("--preemption evicts pool blocks; it needs --block-size")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -128,12 +141,14 @@ def main(argv=None):
             prefill_bucket=bucket, seed=args.seed,
             block_size=args.block_size, n_blocks=args.n_blocks,
             prefix_cache=args.prefix_cache,
+            preemption=args.preemption, decode_reserve=args.decode_reserve,
         )
         res = engine.run(trace, sync_every=args.sync_every)
         m = res.metrics
         cache_kind = (
             f"paged(bs={args.block_size}, blocks={engine.n_blocks}"
             + (", prefix-cache" if args.prefix_cache else "")
+            + (", preemption" if args.preemption else "")
             + ")"
             if args.block_size > 0
             else "contiguous"
@@ -151,11 +166,20 @@ def main(argv=None):
         )
         if args.prefix_cache:
             print(
-                f"[serve/continuous] prefix cache: hit rate "
+                "[serve/continuous] prefix cache: hit rate "
                 f"{m['prefix_cache_hit_rate']:.2f} "
                 f"({m['cached_prompt_tokens']:.0f} cached prompt tokens, "
                 f"{m['prefix_hits']:.0f}/{args.requests} requests hit, "
                 f"peak {m['peak_blocks_in_use']:.0f} blocks in use)"
+            )
+        if args.preemption:
+            print(
+                "[serve/continuous] preemption: "
+                f"preemptions={m['preemptions']:.0f} "
+                f"({m['preempted_requests']:.0f} requests evicted, "
+                f"reserve {args.decode_reserve} blocks, "
+                f"peak {m['peak_blocks_in_use']:.0f}/"
+                f"{engine.n_blocks - RESERVED_BLOCKS} blocks in use)"
             )
         first = res.requests[0]
         print("[serve/continuous] first request:", first.output[:16])

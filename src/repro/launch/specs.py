@@ -9,11 +9,11 @@ benchmarks share.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core.compressed import SlimLinear
 from repro.core.pipeline import CompressionConfig

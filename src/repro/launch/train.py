@@ -13,11 +13,8 @@ freeze base -> AdaFactor on adapters, paper §3.4).
 from __future__ import annotations
 
 import argparse
-import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config

@@ -14,8 +14,7 @@ stay dense (paper §T: only block matmuls are compressed).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

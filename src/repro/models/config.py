@@ -11,7 +11,7 @@ stacked parameters, keeping the lowered HLO small at 100-layer scale.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

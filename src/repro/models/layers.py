@@ -23,7 +23,7 @@ from repro.core.compressed import (
     dequantize_base,
     slim_linear_apply,
 )
-from repro.models.config import LayerSpec, ModelConfig
+from repro.models.config import ModelConfig
 
 Params = Dict[str, Any]
 
@@ -336,9 +336,8 @@ def attention_layer(
         kq, ks = store(k)
         vq, vs = store(v)
         if c_len >= s:
-            upd = lambda buf, val, nd: jax.lax.dynamic_update_slice(
-                buf, val, (0,) * nd
-            )
+            def upd(buf, val, nd):
+                return jax.lax.dynamic_update_slice(buf, val, (0,) * nd)
             ck = upd(cache["k"], kq, 4)
             cv = upd(cache["v"], vq, 4)
             cp = jax.lax.dynamic_update_slice(
@@ -352,7 +351,8 @@ def attention_layer(
             # sliding-window ring: keep the last c_len positions; roll so
             # slot i holds pos (s - c_len + i) — decode writes at pos % c_len
             shift = (s - c_len) % c_len
-            ring = lambda t: jnp.roll(t[:, s - c_len :], shift, axis=1)
+            def ring(t):
+                return jnp.roll(t[:, s - c_len :], shift, axis=1)
             new_cache = {
                 "k": ring(kq),
                 "v": ring(vq),
@@ -365,7 +365,16 @@ def attention_layer(
                 new_cache["k_scale"] = ring(ks)
                 new_cache["v_scale"] = ring(vs)
         kv_pos = jnp.arange(s, dtype=jnp.int32)
-        out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
+        if cfg.kv_quant:
+            # attend through the quantization lens: decode steps will only
+            # ever see the dequantized cache, so prefill must too — this is
+            # what makes a preemption resume (re-prefill of tokens that were
+            # originally decoded) bit-identical to the uninterrupted run
+            kd = _kv_dequantize(kq, ks, x.dtype)
+            vd = _kv_dequantize(vq, vs, x.dtype)
+        else:
+            kd, vd = k, v
+        out = mha(q, kd, vd, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
     elif block_table is not None:
         # single-token decode against the *paged* cache: leaves are a shared
         # block pool ([n_blocks, bs, KV, dh] — no batch dim); each row writes

@@ -19,13 +19,12 @@ shard L on d_in(data), R on d_out(model).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.config import ModelConfig, ShapeCell
+from repro.models.config import ModelConfig
 
 Pytree = Any
 

@@ -18,7 +18,6 @@ compiles. Training applies ``jax.checkpoint`` per period (full remat).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

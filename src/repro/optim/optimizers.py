@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 Pytree = Any
 
-_EMPTY = lambda: jnp.zeros((0,), jnp.float32)
+def _EMPTY():
+    return jnp.zeros((0,), jnp.float32)
 
 
 def _frozen(leaf) -> bool:
@@ -142,7 +143,8 @@ def adamw(
 
     def init(params: Pytree) -> OptState:
         tmask = _resolve_mask(params, mask)
-        zeros = lambda p, m: jnp.zeros(p.shape, mdt) if m else _EMPTY()
+        def zeros(p, m):
+            return jnp.zeros(p.shape, mdt) if m else _EMPTY()
         return OptState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree.map(zeros, params, tmask),

@@ -7,5 +7,10 @@ from repro.serving.block_pool import (
 )
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
 from repro.serving.metrics import RequestTrace, ServingMetrics
-from repro.serving.request import Request, RequestQueue, synthetic_trace
+from repro.serving.request import (
+    Request,
+    RequestQueue,
+    RequestState,
+    synthetic_trace,
+)
 from repro.serving.scheduler import Scheduler

@@ -38,6 +38,20 @@ the free list:
   write. Eviction is clock-hand: when an admission would otherwise defer,
   the hand sweeps the pool and drops refcount-0 cached blocks.
 
+On-demand allocation (the preemption-enabled engine) adds two per-slot
+paths on top of admission-time allocation:
+
+* ``extend(slot, n)`` — grow a running slot's table by ``n`` fresh blocks
+  as its decode actually crosses block boundaries, instead of charging
+  the worst case up front. Returns ``None`` (no state mutated) when even
+  eviction cannot supply the blocks — the engine then preempts a victim.
+* ``preempt(slot, tokens)`` — release a victim's blocks back to the pool.
+  With ``prefix_cache=True`` the victim's *full* blocks (prompt and
+  generated tokens both — their KV is deterministic in the token chain)
+  are first registered in the hash index, so they demote to refcount-0
+  *cached* entries rather than plain free blocks and the victim's
+  re-prefill at resume is mostly a prefix-cache hit.
+
 Invariants (``check`` in tests):
   - a block's refcount equals the number of slot tables holding it;
   - null/trash are never handed out;
@@ -173,6 +187,56 @@ class BlockAllocator:
         self._owned[slot] = blocks
         return list(blocks)
 
+    # -- on-demand growth / preemption --------------------------------------
+
+    def extend(self, slot: int, n: int) -> Optional[List[int]]:
+        """Grow ``slot``'s table by ``n`` fresh blocks (the on-demand
+        decode path: the engine calls this when a slot's next burst will
+        cross into blocks it does not own yet). Evicts refcount-0 cached
+        blocks as needed; returns ``None`` — with no state mutated — when
+        even eviction cannot supply ``n`` blocks, in which case the
+        caller preempts a victim and retries.
+
+        The returned blocks are *appended* to the slot's table in order;
+        their contents are stale (a prior owner's data may survive), so
+        the engine must wipe their ``pos`` entries to -1 before any
+        decode step can gather them."""
+        if slot not in self._owned:
+            raise RuntimeError(f"slot {slot} owns no blocks to extend")
+        if n <= 0:
+            return []
+        if not self.can_allocate(n):
+            return None
+        blocks = self._take_free(n)
+        for b in blocks:
+            self._ref[b] = 1
+        self._owned[slot].extend(blocks)
+        return list(blocks)
+
+    def preempt(self, slot: int, tokens: Optional[Sequence[int]] = None) -> None:
+        """Release a preemption victim's blocks back to the pool.
+
+        With ``prefix_cache=True`` and ``tokens`` given (the victim's
+        prompt + generated-so-far, i.e. exactly the tokens whose KV the
+        slot's blocks hold), every *full* block not already in the hash
+        index is registered first, so the release demotes it to a
+        refcount-0 *cached* entry instead of a free block — the victim's
+        resume re-prefill then matches its own chain and pays only for
+        the partial last block. Without the prefix cache this is a plain
+        ``release``."""
+        if self.prefix_cache and tokens is not None:
+            table = self._owned.get(slot, [])
+            hashes = chain_hashes(tokens, self.block_size)
+            for j, h in enumerate(hashes):
+                if j >= len(table):
+                    break
+                blk = table[j]
+                if h in self._block_of or blk in self._hash_of:
+                    continue  # chain (or block) already indexed
+                self._block_of[h] = blk
+                self._hash_of[blk] = h
+        self.release(slot)
+
     # -- prefix-cached admission --------------------------------------------
 
     def _match_chain(self, hashes: Sequence[int]) -> List[int]:
@@ -196,6 +260,7 @@ class BlockAllocator:
         tokens: Sequence[int],
         n_pos: int,
         n_pos_cold: Optional[int] = None,
+        reserve: int = 0,
     ) -> Optional[PrefixAdmit]:
         """Atomically admit a request: match its longest cached prefix, pin
         the matched blocks (refcount++), allocate the uncached remainder
@@ -204,12 +269,15 @@ class BlockAllocator:
         with no state mutated — when even after eviction the remainder
         would not fit (the scheduler defers FIFO).
 
-        ``n_pos`` is the request's total position need (prompt + budget);
-        ``n_pos_cold`` optionally inflates it for the cold path (bucketed
-        prefill writes whole blocks). A fully cached prompt keeps all its
-        matched blocks but copies the last one to a fresh block
-        (``cow_src/cow_dst``) so the last-token recompute never writes a
-        block with refcount > 1."""
+        ``n_pos`` is the request's total position need (prompt + budget
+        under worst-case charging; just the prompt under on-demand
+        admission); ``n_pos_cold`` optionally inflates it for the cold
+        path (bucketed prefill writes whole blocks). ``reserve`` is the
+        on-demand decode watermark: the admission defers unless it fits
+        with ``reserve`` blocks of headroom left for running slots to
+        grow into. A fully cached prompt keeps all its matched blocks but
+        copies the last one to a fresh block (``cow_src/cow_dst``) so the
+        last-token recompute never writes a block with refcount > 1."""
         if slot in self._owned:
             raise RuntimeError(f"slot {slot} already owns blocks")
         bs = self.block_size
@@ -226,7 +294,8 @@ class BlockAllocator:
         matched_evictable = sum(
             1 for b in set(matched) if self._ref.get(b, 0) == 0
         )
-        if n_fresh > len(self._free) + self.n_evictable() - matched_evictable:
+        headroom = len(self._free) + self.n_evictable() - matched_evictable
+        if n_fresh + reserve > headroom:
             return None
         for b in matched:
             if self._ref.get(b, 0) == 0:

@@ -30,13 +30,29 @@ it did not write. A fully cached prompt copies its last block before the
 last-token recompute (copy-on-write), so no slot ever writes a block with
 refcount > 1.
 
+``preemption=True`` (paged only) switches admission from worst-case
+charging to **on-demand allocation**: a request is charged only its
+prompt's blocks (plus a configurable ``decode_reserve`` watermark of
+unallocated headroom), and the engine extends each slot's block table
+just before a decode burst would cross into blocks it does not own.
+When the pool genuinely runs dry the engine *preempts*: the
+youngest-admitted running slot is evicted — its generated tokens are
+folded into its prompt and it re-queues at its original arrival — and
+its blocks return to the pool (demoted to refcount-0 cached entries
+when the prefix cache is on, so the resume re-prefill is mostly a hit).
+Resume is a plain prefill of the longer prompt with the remaining
+budget: token-exact under greedy decoding, for pure-attention and
+hybrid archs alike (the re-prefill recomputes SSM state from scratch).
+
 Device/host split: the decode step carries logits, per-slot positions, the
 active mask, emitted counts, and the output token buffer entirely on
 device; the host syncs two small vectors (active, emitted) once per
 ``sync_every``-step burst to run the scheduler, and fetches token buffers
 only when a slot finishes. No per-token host round-trips. In paged mode
 the block tables live host-side with the allocator; only the dirty slot
-rows are updated on device when admissions/releases change them.
+rows are updated on device when admissions/releases change them. The
+host mirrors each slot's position as ``prompt_len + emitted`` (exact for
+live rows), so on-demand growth needs no extra device sync.
 """
 from __future__ import annotations
 
@@ -55,6 +71,7 @@ from repro.serving.block_pool import (
     RESERVED_BLOCKS,
     TRASH_BLOCK,
     BlockAllocator,
+    blocks_needed,
 )
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request
@@ -91,6 +108,12 @@ class ContinuousEngine:
         n_blocks: Optional[int] = None,  # paged pool size (default: equal
         # memory to n_slots contiguous lanes, plus the 2 reserved blocks)
         prefix_cache: bool = False,  # share identical prompt-prefix blocks
+        preemption: bool = False,  # on-demand blocks + eviction under
+        # pressure (paged only); off = worst-case charging at admission
+        decode_reserve: int = 2,  # watermark blocks held unallocated at
+        # admission for running slots to grow into (preemption mode only)
+        check_invariants: bool = False,  # assert allocator invariants
+        # every scheduling round (test hook; O(pool) host work per round)
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
         if prefix_cache:
@@ -104,6 +127,12 @@ class ContinuousEngine:
                     "attention periods (shared blocks carry KV, not "
                     "SSM/MoE state)"
                 )
+        if preemption and block_size <= 0:
+            raise ValueError(
+                "preemption evicts pool blocks; it needs block_size > 0"
+            )
+        if decode_reserve < 0:
+            raise ValueError("decode_reserve must be >= 0")
         if block_size > 0:
             if not T.supports_paged_cache(cfg):
                 raise ValueError(
@@ -139,6 +168,9 @@ class ContinuousEngine:
         self.seed = seed
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        self.preemption = preemption
+        self.decode_reserve = decode_reserve
+        self.check_invariants = check_invariants
         self.max_blocks = max_len // block_size if block_size > 0 else 0
         if block_size > 0:
             self.n_blocks = (
@@ -256,7 +288,11 @@ class ContinuousEngine:
             if paged
             else None
         )
-        sched = Scheduler(b, self.max_len, self.prefill_bucket, allocator)
+        sched = Scheduler(
+            b, self.max_len, self.prefill_bucket, allocator,
+            on_demand=self.preemption,
+            decode_reserve=self.decode_reserve if self.preemption else 0,
+        )
         metrics = ServingMetrics(b)
         for r in requests:
             sched.submit(r)
@@ -291,9 +327,43 @@ class ContinuousEngine:
         key = jax.random.PRNGKey(self.seed)
 
         running: Dict[int, Request] = {}  # slot -> request
+        emitted_host: Dict[int, int] = {}  # slot -> emitted as of last sync
+        # a running slot's position is always len(serving prompt) + emitted;
+        # generated only mutates at preempt, after the slot leaves `running`
+        def slot_pos0(slot: int) -> int:
+            r = running[slot]
+            return r.prompt_len + len(r.generated)
         peak_running = 0
         t0 = self._clock()
-        now = lambda: self._clock() - t0
+
+        def now() -> float:
+            return self._clock() - t0
+
+        def push_rows(slots) -> None:
+            """Mirror dirty host-side block-table rows to the device in
+            one dispatch; the rest of the table stands untouched."""
+            nonlocal table_dev
+            dirty = np.asarray(sorted(set(slots)))
+            table_dev = table_dev.at[dirty].set(jnp.asarray(table_np[dirty]))
+
+        def preempt_slot(victim: int) -> None:
+            """Evict ``victim``: stitch its emitted-so-far tokens into its
+            resume prompt (the scheduler re-queues it), return its blocks
+            to the pool, and silence its device row. The row's pending
+            writes land in the trash block once the table update below
+            reaches the device — before the next burst."""
+            nonlocal active
+            req = running.pop(victim)
+            em = emitted_host.pop(victim)
+            toks = (
+                [int(t) for t in jax.device_get(buf[victim])[:em]]
+                if em > 0
+                else []
+            )
+            sched.preempt(victim, toks)
+            table_np[victim] = TRASH_BLOCK
+            active = active.at[victim].set(False)
+            metrics.on_preempt(req.rid, now())
 
         while sched.pending() or running:
             admits = sched.admit(now())
@@ -311,17 +381,20 @@ class ContinuousEngine:
                     blocks = allocator.blocks_of(slot)
                     table_np[slot] = NULL_BLOCK
                     table_np[slot, : len(blocks)] = blocks
-                dirty = np.asarray([slot for slot, _ in admits])
-                table_dev = table_dev.at[dirty].set(jnp.asarray(table_np[dirty]))
+                push_rows(slot for slot, _ in admits)
 
             for slot, req in admits:
                 metrics.on_admit(req.rid, now())
-                plen = req.prompt_len
+                # a resume (after preemption) prefills the original prompt
+                # plus everything generated so far, with the leftover budget
+                sp = req.serving_prompt
+                plen = len(sp)
+                budget = req.remaining_new_tokens
                 info = allocator.admit_info(slot) if self.prefix_cache else None
                 if info is not None and info.hit:
                     # shared-prefix admission: prefill only the uncached
                     # suffix; the CoW block copy rides the same dispatch
-                    suffix = req.prompt[info.cached_len :]
+                    suffix = sp[info.cached_len :]
                     blen = sched.bucket_len(len(suffix))
                     toks = jnp.asarray(
                         suffix + [0] * (blen - len(suffix)), jnp.int32
@@ -332,33 +405,88 @@ class ContinuousEngine:
                         self.params, cache, logits, pos, active, emitted,
                         maxnew, temps, toks, jnp.int32(len(suffix)),
                         jnp.int32(info.cached_len), jnp.int32(slot),
-                        jnp.int32(req.max_new_tokens),
+                        jnp.int32(budget),
                         jnp.float32(req.temperature), table_dev,
                         jnp.int32(info.cow_src), jnp.int32(info.cow_dst),
                     )
                 else:
                     blen = sched.bucket_len(plen)
                     toks = jnp.asarray(
-                        req.prompt + [0] * (blen - plen), jnp.int32
+                        sp + [0] * (blen - plen), jnp.int32
                     )[None, :]
                     (
                         cache, logits, pos, active, emitted, maxnew, temps,
                     ) = self._admit(
                         self.params, cache, logits, pos, active, emitted,
                         maxnew, temps, toks, jnp.int32(plen), jnp.int32(slot),
-                        jnp.int32(req.max_new_tokens),
+                        jnp.int32(budget),
                         jnp.float32(req.temperature), table_dev,
                     )
                 jax.block_until_ready(logits)
                 metrics.on_first_token(req.rid, now())
                 if self.prefix_cache:
                     metrics.on_prefix_lookup(
-                        req.rid, info.cached_len if info else 0, plen
+                        req.rid, info.cached_len if info else 0, plen,
+                        resume=req.n_preemptions > 0,
                     )
                 running[slot] = req
+                emitted_host[slot] = 0
+            if paged and self.preemption and running:
+                # on-demand growth: before the burst, every running slot
+                # must own the blocks its next sync_every writes can touch
+                # (a write through a null/stale table entry would corrupt
+                # shared state). Oldest slots claim headroom first; when
+                # the pool runs dry the youngest running slot is evicted
+                # and re-queued — repeat until the extension fits.
+                grow_dirty: List[int] = []
+                fresh_blocks: List[int] = []
+                for slot in sorted(running, key=sched.slot_seq.__getitem__):
+                    if slot not in running:
+                        continue  # preempted earlier in this same pass
+                    req = running[slot]
+                    pos_now = slot_pos0(slot) + emitted_host[slot]
+                    cap_pos = slot_pos0(slot) + req.remaining_new_tokens
+                    target = min(pos_now + sync_every, cap_pos)
+                    while True:
+                        owned = len(allocator.blocks_of(slot))
+                        need = blocks_needed(target, self.block_size) - owned
+                        if need <= 0:
+                            break
+                        got = allocator.extend(slot, need)
+                        if got is not None:
+                            table_np[slot, owned : owned + need] = got
+                            grow_dirty.append(slot)
+                            fresh_blocks.extend(got)
+                            break
+                        victim = sched.pick_victim()
+                        assert victim is not None  # running is non-empty
+                        preempt_slot(victim)
+                        grow_dirty.append(victim)
+                        if victim == slot:
+                            break  # slot was the youngest: evicted itself
+                if grow_dirty:
+                    push_rows(grow_dirty)
+                if fresh_blocks:
+                    # recycled blocks can carry a prior owner's pos entries;
+                    # wipe them to -1 (invalid) before any decode gather can
+                    # reach the block through the updated table
+                    wipe = jnp.asarray(sorted(set(fresh_blocks)), jnp.int32)
+                    cache = {
+                        lk: (
+                            {**lv, "pos": lv["pos"].at[:, wipe].set(-1)}
+                            if "pos" in lv
+                            else lv
+                        )
+                        for lk, lv in cache.items()
+                    }
+                if not running:
+                    continue  # everything was evicted; re-admit first
+
             peak_running = max(peak_running, len(running))
             if allocator is not None:
                 metrics.on_blocks_in_use(allocator.in_use())
+                if self.check_invariants:
+                    allocator.check()
 
             metrics.on_decode_steps(sync_every)
             for _ in range(sync_every):
@@ -367,6 +495,10 @@ class ContinuousEngine:
                     maxnew, buf, key, temps, table_dev,
                 )
             host_active, host_emitted = jax.device_get((active, emitted))
+            for s in running:
+                # host mirror of each slot's position (plen + emitted) —
+                # what the on-demand growth pass plans the next burst from
+                emitted_host[s] = int(host_emitted[s])
 
             done_slots = [s for s in running if not host_active[s]]
             if done_slots:
@@ -374,21 +506,21 @@ class ContinuousEngine:
                 t_done = now()
                 for slot in done_slots:
                     req = running.pop(slot)
+                    emitted_host.pop(slot)
                     n = int(host_emitted[slot])
-                    req.output = [int(t) for t in host_buf[slot, :n]]
-                    metrics.on_finish(req.rid, t_done, n)
+                    # stitch tokens generated before any preemption onto
+                    # this final running span's output
+                    req.output = req.generated + [
+                        int(t) for t in host_buf[slot, :n]
+                    ]
+                    metrics.on_finish(req.rid, t_done, len(req.output))
                     sched.release(slot)  # paged: blocks return to the pool
                     if paged:
                         # retire the row before the next decode burst: the
                         # freed blocks may be reallocated this very loop
                         table_np[slot] = TRASH_BLOCK
                 if paged:
-                    # dirty-row update, one dispatch; the rest of the table
-                    # stands untouched on device
-                    dirty = np.asarray(done_slots)
-                    table_dev = table_dev.at[dirty].set(
-                        jnp.asarray(table_np[dirty])
-                    )
+                    push_rows(done_slots)
 
         summary = metrics.summary()
         summary["peak_concurrency"] = float(peak_running)

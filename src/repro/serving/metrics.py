@@ -1,16 +1,19 @@
-"""Serving metrics: per-request TTFT/latency and fleet-level throughput and
-slot occupancy.
+"""Serving metrics: per-request TTFT/latency and fleet-level throughput,
+slot occupancy, block-pool occupancy, and preemption counters.
 
 All times are seconds relative to the run start (the engine's clock).
 TTFT is measured at prefill completion — with greedy sampling the first
 token is fully determined by the prefill logits, and this definition is
-engine-agnostic so static and continuous engines compare directly.
+engine-agnostic so static and continuous engines compare directly. A
+preempted request's TTFT is its *first* admission (the resume prefill
+does not reset it), and its token count is the final stitched output.
 """
+
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 
 @dataclasses.dataclass
@@ -54,7 +57,14 @@ class ServingMetrics:
         self.total_prompt_tokens: int = 0
         self.prefix_hits: int = 0
         self.prefix_lookups: int = 0
+        self.resume_prefix_hits: int = 0  # preemption resumes that re-hit
+        self.resume_cached_tokens: int = 0
+        # block-pool occupancy (stay zero for the contiguous layout)
         self.peak_blocks_in_use: int = 0
+        self.blocks_in_use_samples: List[int] = []
+        # preemption counters (stay zero under worst-case charging)
+        self.preemptions: int = 0
+        self.preempted_rids: Set[int] = set()
 
     # -- event hooks -------------------------------------------------------
 
@@ -65,7 +75,9 @@ class ServingMetrics:
         self.requests[rid].admitted = t
 
     def on_first_token(self, rid: int, t: float) -> None:
-        self.requests[rid].first_token = t
+        tr = self.requests[rid]
+        if tr.first_token is None:  # a resume prefill keeps the first TTFT
+            tr.first_token = t
 
     def on_finish(self, rid: int, t: float, n_tokens: int) -> None:
         tr = self.requests[rid]
@@ -76,9 +88,26 @@ class ServingMetrics:
     def on_occupancy(self, active_slots: float) -> None:
         self.occupancy_samples.append(active_slots)
 
-    def on_prefix_lookup(self, rid: int, cached_tokens: int, prompt_tokens: int) -> None:
+    def on_preempt(self, rid: int, t: float) -> None:
+        """Record an eviction: the request running in a slot lost its
+        blocks and went back to the queue at time ``t``."""
+        self.preemptions += 1
+        self.preempted_rids.add(rid)
+
+    def on_prefix_lookup(
+        self, rid: int, cached_tokens: int, prompt_tokens: int, resume: bool = False
+    ) -> None:
         """Record a prefix-cache lookup at admission: ``cached_tokens`` of
-        the ``prompt_tokens``-token prompt rode shared blocks (0 = miss)."""
+        the ``prompt_tokens``-token prompt rode shared blocks (0 = miss).
+        ``resume=True`` marks a preemption-resume admission — those count
+        in separate ``resume_*`` counters so the hit rate keeps measuring
+        cross-request sharing, not a request re-matching its own evicted
+        blocks."""
+        if resume:
+            self.resume_cached_tokens += cached_tokens
+            if cached_tokens > 0:
+                self.resume_prefix_hits += 1
+            return
         self.prefix_lookups += 1
         self.cached_prompt_tokens += cached_tokens
         self.total_prompt_tokens += prompt_tokens
@@ -87,6 +116,7 @@ class ServingMetrics:
 
     def on_blocks_in_use(self, n: int) -> None:
         self.peak_blocks_in_use = max(self.peak_blocks_in_use, int(n))
+        self.blocks_in_use_samples.append(int(n))
 
     def on_decode_steps(self, n: int) -> None:
         """Count decode steps run across all slots. When recorded, occupancy
@@ -114,6 +144,7 @@ class ServingMetrics:
             )
         else:
             occ = 0.0
+        blocks = self.blocks_in_use_samples
         return {
             "n_requests": float(len(self.requests)),
             "completed": float(len(lats)),
@@ -135,4 +166,9 @@ class ServingMetrics:
             "cached_prompt_tokens": float(self.cached_prompt_tokens),
             "prefix_hits": float(self.prefix_hits),
             "peak_blocks_in_use": float(self.peak_blocks_in_use),
+            "mean_blocks_in_use": sum(blocks) / len(blocks) if blocks else 0.0,
+            "preemptions": float(self.preemptions),
+            "preempted_requests": float(len(self.preempted_rids)),
+            "resume_prefix_hits": float(self.resume_prefix_hits),
+            "resume_cached_tokens": float(self.resume_cached_tokens),
         }

@@ -5,14 +5,39 @@ A ``Request`` is one user generation: a token prompt, an arrival time
 sampling parameters. ``RequestQueue`` is the arrival-ordered admission
 queue the scheduler pops from. ``synthetic_trace`` builds deterministic
 Poisson-arrival workloads for benchmarks and the ``--workload`` serve mode.
+
+Preemption (the on-demand paged engine) adds a small state machine:
+
+    QUEUED -> RUNNING -> FINISHED
+                 |  ^
+                 v  |  (evicted under memory pressure, re-queued with its
+             PREEMPTED  generated-so-far tokens appended to the prompt)
+
+A preempted request keeps everything it already generated in
+``generated``; the scheduler re-queues it and the engine re-prefills
+``serving_prompt`` (= prompt + generated) with the *remaining* budget, so
+the resumed decode continues token-exactly where the evicted one stopped
+(greedy decoding is deterministic in the prefix).
 """
+
 from __future__ import annotations
 
 import dataclasses
+import enum
 import heapq
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+
+class RequestState(str, enum.Enum):
+    """Lifecycle of a request inside the serving engine."""
+
+    QUEUED = "queued"  # waiting in the arrival queue for a slot + blocks
+    RUNNING = "running"  # admitted to a slot, prefilling or decoding
+    PREEMPTED = "preempted"  # evicted under memory pressure (transient:
+    # the scheduler immediately re-queues, moving it back to QUEUED)
+    FINISHED = "finished"  # EOS or budget exhausted; ``output`` is final
 
 
 @dataclasses.dataclass
@@ -25,10 +50,25 @@ class Request:
 
     # filled in by the engine
     output: Optional[List[int]] = None
+    state: RequestState = RequestState.QUEUED
+    generated: List[int] = dataclasses.field(default_factory=list)
+    n_preemptions: int = 0
 
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
+
+    @property
+    def serving_prompt(self) -> List[int]:
+        """What the engine prefills: the original prompt plus every token
+        generated in earlier (preempted) running spans — resume is a
+        plain prefill of this longer prompt."""
+        return self.prompt + self.generated
+
+    @property
+    def remaining_new_tokens(self) -> int:
+        """Generation budget left after earlier preempted spans."""
+        return self.max_new_tokens - len(self.generated)
 
 
 class RequestQueue:
@@ -37,17 +77,30 @@ class RequestQueue:
 
     Backed by a heap keyed on ``(arrival, seq)`` where ``seq`` is the
     submission order — push/pop are O(log n) and equal-arrival requests
-    pop in deterministic FIFO order."""
+    pop in deterministic FIFO order. A re-queued (preempted) request
+    keeps its original arrival time, so it sorts ahead of every
+    later-arriving request rather than to the back of the line."""
 
     def __init__(self, requests: Sequence[Request] = ()):
         self._seq = 0
+        self._front_seq = -1
         self._q: List[Tuple[float, int, Request]] = []
         for r in requests:
             self.push(r)
 
-    def push(self, req: Request) -> None:
-        heapq.heappush(self._q, (req.arrival, self._seq, req))
-        self._seq += 1
+    def push(self, req: Request, front: bool = False) -> None:
+        """Enqueue a request. ``front=True`` (preemption requeue) makes it
+        sort ahead of every already-queued request with the same arrival
+        time — the evicted request goes back to the head of the line, not
+        the tail, so eviction can never starve it behind peers that
+        arrived together."""
+        if front:
+            seq = self._front_seq
+            self._front_seq -= 1
+        else:
+            seq = self._seq
+            self._seq += 1
+        heapq.heappush(self._q, (req.arrival, seq, req))
 
     def peek_ready(self, now: float) -> Optional[Request]:
         """The request ``pop_ready`` would return, without removing it —

@@ -1,37 +1,53 @@
 """Slot scheduler for continuous batching.
 
 Maps queued requests onto a fixed pool of decode slots: a slot freed by a
-finished request (EOS or budget) is refilled mid-flight by the next arrived
-request, so decode batches stay full under load instead of draining to the
-slowest member (the static-batch failure mode).
+finished request (EOS or budget) is refilled mid-flight by the next
+arrived request, so decode batches stay full under load instead of
+draining to the slowest member (the static-batch failure mode).
 
 Admission control is by construction: a request is only admitted when
 ``prompt_len + max_new_tokens`` fits the engine's cache (checked at
-``submit``) and a slot is free. Optional prefill-length bucketing pads the
-prompt up to the next multiple of ``prefill_bucket``, bounding the number of
-distinct prefill shapes — and therefore jit recompiles — to
+``submit``) and a slot is free. Optional prefill-length bucketing pads
+the prompt up to the next multiple of ``prefill_bucket``, bounding the
+number of distinct prefill shapes — and therefore jit recompiles — to
 ``max_len / prefill_bucket`` (exactness of padded prefill is the model's
 ``supports_ragged_prefill`` contract).
 
 With a paged KV cache the scheduler additionally consults a
-``BlockAllocator``: a request is admitted when a slot is free *and* its
-worst-case block need — ``ceil(max(prompt + max_new, padded_prefill) /
-block_size)`` — is available, and its blocks return to the pool at
-``release``. Deferral is FIFO (the head of the queue blocks younger
-requests) so admission order stays deterministic under memory pressure.
+``BlockAllocator``. Under the default **worst-case charging**, a request
+is admitted when a slot is free *and* its worst-case block need —
+``ceil(max(prompt + max_new, padded_prefill) / block_size)`` — is
+available, and its blocks return to the pool at ``release``. Deferral is
+FIFO (the head of the queue blocks younger requests) so admission order
+stays deterministic under memory pressure.
+
+``on_demand=True`` (the preemption-enabled engine) switches to
+**watermark admission**: a request is charged only
+``blocks_needed(prompt)`` at admission, plus ``decode_reserve`` blocks of
+headroom that stay unallocated (the watermark running slots grow into
+block-by-block as decode crosses boundaries). The reserve is waived while
+no slot is occupied, so a lone request whose total need equals the pool
+is still admissible. When the pool genuinely runs dry mid-decode the
+engine preempts: ``pick_victim`` names the youngest-admitted running
+slot (preempting the youngest wastes the least completed work and can
+never starve the oldest), and ``preempt`` folds the victim's generated
+tokens into its prompt and re-queues it at its original arrival time, so
+resume is a plain re-prefill of the longer prompt — token-exact under
+greedy decoding.
 
 With prefix caching on the allocator, admission routes through
-``BlockAllocator.admit_request``: the request is charged only
-``blocks_needed(total) - cached_blocks`` fresh blocks (its longest cached
-block-aligned prompt prefix rides shared, refcounted blocks), and the
-allocator may evict refcount-0 cached blocks rather than defer.
+``BlockAllocator.admit_request``: the request is charged only the
+uncached remainder of its block need (its longest cached block-aligned
+prompt prefix rides shared, refcounted blocks), and the allocator may
+evict refcount-0 cached blocks rather than defer.
 """
+
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.block_pool import BlockAllocator, blocks_needed
-from repro.serving.request import Request, RequestQueue
+from repro.serving.request import Request, RequestQueue, RequestState
 
 
 class Scheduler:
@@ -41,18 +57,35 @@ class Scheduler:
         max_len: int,
         prefill_bucket: int = 0,
         allocator: Optional[BlockAllocator] = None,
+        on_demand: bool = False,
+        decode_reserve: int = 0,
     ):
+        if on_demand and allocator is None:
+            raise ValueError("on-demand admission needs a BlockAllocator")
+        if decode_reserve < 0:
+            raise ValueError("decode_reserve must be >= 0")
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
         self.allocator = allocator
+        self.on_demand = on_demand
+        self.decode_reserve = decode_reserve
         self.queue = RequestQueue()
         self.slots: List[Optional[Request]] = [None] * n_slots
-        self.assignments: Dict[int, int] = {}  # rid -> slot (history, last wins)
+        self.assignments: Dict[int, int] = {}  # rid -> slot (last wins)
+        self.slot_seq: Dict[int, int] = {}  # slot -> admission sequence
+        self._admit_counter = 0
 
     # -- admission --------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        # a fresh submit resets any state a previous run left behind (so
+        # traces can be replayed through several engines) — before the
+        # capacity check below, which reads serving_prompt
+        req.state = RequestState.QUEUED
+        req.generated = []
+        req.n_preemptions = 0
+        req.output = None
         need = req.prompt_len + req.max_new_tokens
         if need > self.max_len:
             raise ValueError(
@@ -80,54 +113,119 @@ class Scheduler:
         """Worst-case block count for a request: covers the generation
         budget and the (possibly longer) bucketed prefill write."""
         assert self.allocator is not None
-        need_pos = max(
-            req.prompt_len + req.max_new_tokens, self.bucket_len(req.prompt_len)
-        )
+        plen = len(req.serving_prompt)
+        need_pos = max(plen + req.remaining_new_tokens, self.bucket_len(plen))
         return blocks_needed(need_pos, self.allocator.block_size)
+
+    def prefill_need(self, req: Request) -> int:
+        """On-demand block count at admission: just the prompt. Bucketed
+        prefill pad chunks land in the null block, and decode growth is
+        ``BlockAllocator.extend`` territory."""
+        assert self.allocator is not None
+        return blocks_needed(len(req.serving_prompt), self.allocator.block_size)
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def admit(self, now: float) -> List[Tuple[int, Request]]:
         """Pop arrived requests into free slots; returns (slot, request)
-        pairs to prefill. Called between decode bursts. With an allocator,
-        a request is only popped once its blocks are guaranteed — if the
-        queue head doesn't fit, admission defers (FIFO) until a release
-        returns enough blocks."""
+        pairs to prefill. Called between decode bursts. With an
+        allocator, a request is only popped once its blocks are
+        guaranteed — if the queue head doesn't fit, admission defers
+        (FIFO) until a release returns enough blocks."""
         admitted = []
         for slot in self.free_slots():
             req = self.queue.peek_ready(now)
             if req is None:
                 break
+            # the decode-reserve watermark only applies while other slots
+            # are running (they are what grows into the headroom); an
+            # idle pool admits anything that fits outright
+            reserve = self.decode_reserve if self.running() > 0 else 0
             if self.allocator is not None and self.allocator.prefix_cache:
-                # one atomic call: match cached prefix, pin it, allocate
-                # (evicting if needed) only the uncached remainder
-                info = self.allocator.admit_request(
-                    slot,
-                    req.prompt,
-                    req.prompt_len + req.max_new_tokens,
-                    n_pos_cold=max(
-                        req.prompt_len + req.max_new_tokens,
-                        self.bucket_len(req.prompt_len),
-                    ),
-                )
+                sp = req.serving_prompt
+                if self.on_demand:
+                    info = self.allocator.admit_request(
+                        slot, sp, len(sp), reserve=reserve
+                    )
+                else:
+                    total = len(sp) + req.remaining_new_tokens
+                    info = self.allocator.admit_request(
+                        slot,
+                        sp,
+                        total,
+                        n_pos_cold=max(total, self.bucket_len(len(sp))),
+                    )
                 if info is None:
                     break
             elif self.allocator is not None:
-                nb = self.block_need(req)
-                if not self.allocator.can_allocate(nb):
-                    break
+                if self.on_demand:
+                    nb = self.prefill_need(req)
+                    if not self.allocator.can_allocate(nb + reserve):
+                        break
+                else:
+                    nb = self.block_need(req)
+                    if not self.allocator.can_allocate(nb):
+                        break
                 self.allocator.allocate(slot, nb)
             self.queue.pop_ready(now)
+            req.state = RequestState.RUNNING
             self.slots[slot] = req
             self.assignments[req.rid] = slot
+            self.slot_seq[slot] = self._admit_counter
+            self._admit_counter += 1
             admitted.append((slot, req))
         return admitted
 
     def release(self, slot: int) -> None:
+        req = self.slots[slot]
+        if req is not None:
+            req.state = RequestState.FINISHED
         self.slots[slot] = None
+        self.slot_seq.pop(slot, None)
         if self.allocator is not None:
             self.allocator.release(slot)
+
+    # -- preemption -------------------------------------------------------
+
+    def pick_victim(self) -> Optional[int]:
+        """Youngest-first victim selection: the running slot admitted
+        most recently. Preempting the youngest discards the least
+        completed work and guarantees the oldest request always makes
+        progress (no starvation)."""
+        if not self.slot_seq:
+            return None
+        return max(self.slot_seq, key=self.slot_seq.__getitem__)
+
+    def preempt(self, slot: int, new_tokens: Sequence[int]) -> Request:
+        """Evict the request running in ``slot``: fold ``new_tokens``
+        (everything it generated this span) into its resume prompt,
+        release its blocks (demoting full blocks to cached entries when
+        the allocator prefix-caches), and re-queue it at its original
+        arrival time. Token-exact resume is the caller's contract: the
+        engine re-prefills ``serving_prompt`` with the remaining
+        budget."""
+        req = self.slots[slot]
+        assert req is not None, f"slot {slot} is not running"
+        req.generated.extend(int(t) for t in new_tokens)
+        req.n_preemptions += 1
+        req.state = RequestState.PREEMPTED
+        self.slots[slot] = None
+        self.slot_seq.pop(slot, None)
+        if self.allocator is not None:
+            # serving_prompt now covers exactly the positions whose KV
+            # the slot's blocks hold: prompt + everything generated
+            self.allocator.preempt(slot, tokens=req.serving_prompt)
+        self.requeue(req)
+        return req
+
+    def requeue(self, req: Request) -> None:
+        """Put a preempted request back at the *head* of the arrival
+        queue: it keeps its original arrival time (ahead of every later
+        arrival) and jumps same-arrival peers, so eviction can never
+        starve it and it becomes admissible immediately."""
+        req.state = RequestState.QUEUED
+        self.queue.push(req, front=True)
 
     # -- state ------------------------------------------------------------
 

@@ -8,6 +8,8 @@ the ``integers`` / ``floats`` / ``sampled_from`` strategies — and runs each
 test body on a handful of examples drawn from a per-test seeded RNG. No
 shrinking, no search: thinner coverage than hypothesis, same invariants.
 """
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

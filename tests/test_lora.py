@@ -1,9 +1,7 @@
 """SLiM-LoRA (Alg. 2) tests: optimality in the saliency norm, invertibility,
 adapter quantization, rank monotonicity."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import naive_lora, quantize_adapters, slim_lora

@@ -5,13 +5,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.compressed import slim_linear_apply
 from repro.core.pipeline import CalibStats, CompressionConfig, compress_matrix
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.models.config import LayerSpec, ModelConfig
+from repro.models.config import ModelConfig
 
 V = 64
 

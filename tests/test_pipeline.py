@@ -1,5 +1,4 @@
 """End-to-end single-matrix pipeline tests (paper Fig. 1 ordering claims)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

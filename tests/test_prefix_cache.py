@@ -15,7 +15,6 @@ Covers the three layers of the feature:
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
@@ -223,10 +222,11 @@ class TestPrefixEngine:
         cfg, params = model
         p = [int(t) for t in
              jax.random.randint(jax.random.PRNGKey(9), (16,), 0, cfg.vocab_size)]
-        mk = lambda: [
-            Request(rid=i, prompt=list(p), arrival=0.0, max_new_tokens=4)
-            for i in range(2)
-        ]
+        def mk():
+            return [
+                Request(rid=i, prompt=list(p), arrival=0.0, max_new_tokens=4)
+                for i in range(2)
+            ]
         cold, warm = _run_pair(params, cfg, mk, n_slots=1)
         assert warm.outputs == cold.outputs
         # plen - 1 tokens rode the cache (the last is recomputed for logits)

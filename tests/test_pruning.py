@@ -1,19 +1,10 @@
 """Pruning tests: mask invariants (hypothesis), Wanda vs magnitude, SparseGPT."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (
-    check_nm,
-    jsq_compress,
-    magnitude_prune,
-    make_mask,
-    nm_mask,
-    sparsegpt_prune,
-    wanda_prune,
-)
-from repro.core.pruning import unstructured_mask, wanda_saliency
+from repro.core import check_nm, jsq_compress, magnitude_prune, nm_mask, sparsegpt_prune, wanda_prune
+from repro.core.pruning import unstructured_mask
 
 
 def _w(seed=0, shape=(128, 64)):

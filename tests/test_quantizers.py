@@ -1,5 +1,4 @@
 """Quantizer unit + property tests (paper §3.1 baselines + SLiM-Quant)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -37,7 +36,6 @@ class TestAbsMax:
 
     def test_exact_on_grid(self):
         # weights already on the quantization grid reconstruct exactly
-        alpha = 1.0
         codes = jnp.arange(-7, 8, dtype=jnp.float32)
         w = (codes / 8.0).reshape(-1, 1)
         qt = absmax_quantize(w, bits=4)
@@ -101,7 +99,6 @@ class TestSlimQuant:
         alpha_mg = float(slim_quant_alpha(p, centers, bits=4))
         dense_grid = jnp.linspace(1e-4, float(jnp.max(jnp.abs(w))), 2048)
         errs = estimate_error_curve(w, dense_grid, bits=4, n_bins=512)
-        alpha_ex = float(dense_grid[int(jnp.argmin(errs))])
         e_mg = float(estimate_error_curve(w, jnp.array([alpha_mg]), 4, 512)[0])
         e_ex = float(errs[int(jnp.argmin(errs))])
         assert e_mg <= e_ex * 1.05

@@ -1,9 +1,6 @@
 """Substrate tests: optimizers, data determinism, checkpoint fault-tolerance,
 distributed utilities."""
 import os
-import json
-import shutil
-import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -187,7 +184,6 @@ class TestDistributed:
         rng = np.random.default_rng(1)
         total_true = np.zeros(64)
         total_comp = np.zeros(64)
-        grads = {"g": None}
         residual = None
         for i in range(50):
             g = jnp.asarray(rng.normal(0, 1, (64,)) * 0.01, jnp.float32)

@@ -2,7 +2,6 @@
 full SLiM pipeline, verify the paper's qualitative claims hold on a model
 that actually learned something, then recover with PEFT (paper Fig. 1 flow)."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
