@@ -169,16 +169,27 @@ def adapter_factors(p: SlimLinear, dtype=jnp.float32):
 
 
 def slim_linear_apply(
-    p: SlimLinear, x: jnp.ndarray, compute_dtype=jnp.float32
+    p: SlimLinear, x: jnp.ndarray, compute_dtype=jnp.float32,
+    skip_lora: bool = False,
 ) -> jnp.ndarray:
     """y = (x * inv_act_scale) @ W_hat + (x @ L) @ R.
 
     Adapters consume the *original* activations (AWQ scaling only compensates
     the scaled base weights); matches repro.kernels.*.ref oracles.
+
+    ``skip_lora=True`` drops the low-rank correction and computes only the
+    quantized-sparse *backbone* ``(x * inv_act_scale) @ W_hat`` — the same
+    parameters driving a strictly cheaper forward pass. This is the draft
+    model of self-speculative decoding (serving/speculative.py): the
+    backbone is the compressed weight *before* error compensation, so its
+    argmax agrees with the full layer most of the time while skipping the
+    adapter dequantization and both LoRA matmuls.
     """
     w = dequantize_base(p, compute_dtype)
     xs = x if p.inv_act_scale is None else x * p.inv_act_scale.astype(x.dtype)
     y = jnp.dot(xs.astype(compute_dtype), w, preferred_element_type=compute_dtype)
+    if skip_lora:
+        return y
     l, r = adapter_factors(p, compute_dtype)
     if l is not None:
         y = y + jnp.dot(jnp.dot(x.astype(compute_dtype), l), r)

@@ -22,12 +22,19 @@ from repro.kernels.slim_linear import slim_linear
 
 
 def slim_linear_op(
-    p: SlimLinear, x: jnp.ndarray, interpret: Optional[bool] = None
+    p: SlimLinear, x: jnp.ndarray, interpret: Optional[bool] = None,
+    skip_lora: bool = False,
 ) -> jnp.ndarray:
-    """Kernel-path equivalent of ``core.compressed.slim_linear_apply``."""
+    """Kernel-path equivalent of ``core.compressed.slim_linear_apply``.
+
+    ``skip_lora=True`` is the backbone-only fast path (the self-speculative
+    draft model): it routes straight to the no-LoRA kernels —
+    ``sparse24_matmul`` / ``int4_matmul`` — so the draft forward never pays
+    the fused kernel's LoRA scratch accumulation, adapter dequantization,
+    or either low-rank matmul."""
     assert p.packed_vals.ndim == 2, "kernel path takes unstacked layers"
     if p.fmt == "sparse24":
-        if p.lora_l is not None:
+        if p.lora_l is not None and not skip_lora:
             return slim_linear(
                 x,
                 p.packed_vals,
@@ -53,7 +60,7 @@ def slim_linear_op(
         group_size=p.group_size,
         interpret=interpret,
     )
-    if p.lora_l is not None:
+    if p.lora_l is not None and not skip_lora:
         y = y + jnp.dot(jnp.dot(x, p.lora_l), p.lora_r)
     return y
 

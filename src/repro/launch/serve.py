@@ -85,6 +85,28 @@ def main(argv=None):
         help="watermark blocks held unallocated at admission for running "
         "slots to grow into (preemption mode only)",
     )
+    p.add_argument(
+        "--speculative", type=int, default=0, metavar="K",
+        help="self-speculative decoding: draft K-1 tokens per round with "
+        "the SLiM adapter path disabled, verify the window in one "
+        "full-model pass, bulk-commit the accepted prefix (needs "
+        "--block-size; K >= 2)",
+    )
+    p.add_argument(
+        "--victim-policy", choices=["youngest", "cost"], default="youngest",
+        help="preemption victim selection: youngest admission, or cost "
+        "(blocks freed per generated token discarded)",
+    )
+    p.add_argument(
+        "--prefix-index-cap", type=int, default=0,
+        help="cap on the prefix cache's content-hash index entries "
+        "(0 = unbounded; evict-oldest on overflow)",
+    )
+    p.add_argument(
+        "--prefix-index-ttl", type=float, default=0.0,
+        help="seconds a prefix-index entry may outlive its registration "
+        "(0 = no TTL)",
+    )
     args = p.parse_args(argv)
 
     if args.block_size > 0 and args.workload != "poisson":
@@ -99,6 +121,15 @@ def main(argv=None):
                 "needs --workload poisson")
     if args.preemption and args.block_size <= 0:
         p.error("--preemption evicts pool blocks; it needs --block-size")
+    if args.speculative and args.block_size <= 0:
+        p.error("--speculative verifies drafts against the paged pool; it "
+                "needs --block-size")
+    if args.victim_policy != "youngest" and not args.preemption:
+        p.error("--victim-policy selects the preemption victim; it needs "
+                "--preemption")
+    if (args.prefix_index_cap or args.prefix_index_ttl) and not args.prefix_cache:
+        p.error("--prefix-index-cap/--prefix-index-ttl bound the prefix "
+                "cache's hash index; they need --prefix-cache")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -142,6 +173,10 @@ def main(argv=None):
             block_size=args.block_size, n_blocks=args.n_blocks,
             prefix_cache=args.prefix_cache,
             preemption=args.preemption, decode_reserve=args.decode_reserve,
+            speculative=args.speculative,
+            victim_policy=args.victim_policy,
+            prefix_cache_max_entries=args.prefix_index_cap,
+            prefix_cache_ttl=args.prefix_index_ttl,
         )
         res = engine.run(trace, sync_every=args.sync_every)
         m = res.metrics
@@ -149,6 +184,7 @@ def main(argv=None):
             f"paged(bs={args.block_size}, blocks={engine.n_blocks}"
             + (", prefix-cache" if args.prefix_cache else "")
             + (", preemption" if args.preemption else "")
+            + (f", speculative={args.speculative}" if args.speculative else "")
             + ")"
             if args.block_size > 0
             else "contiguous"
@@ -177,9 +213,18 @@ def main(argv=None):
                 "[serve/continuous] preemption: "
                 f"preemptions={m['preemptions']:.0f} "
                 f"({m['preempted_requests']:.0f} requests evicted, "
+                f"policy {args.victim_policy}, "
                 f"reserve {args.decode_reserve} blocks, "
                 f"peak {m['peak_blocks_in_use']:.0f}/"
                 f"{engine.n_blocks - RESERVED_BLOCKS} blocks in use)"
+            )
+        if args.speculative:
+            print(
+                "[serve/continuous] speculative: "
+                f"accepted_drafts={m['draft_accepted']:.0f}/"
+                f"{m['draft_proposed']:.0f} proposed "
+                f"(acceptance {m['draft_acceptance_rate']:.2f}, K="
+                f"{args.speculative})"
             )
         first = res.requests[0]
         print("[serve/continuous] first request:", first.output[:16])

@@ -37,6 +37,13 @@ Params = Dict[str, Any]
 _CAPTURE: Optional[Dict[str, Any]] = None
 _CAPTURE_HESSIAN: bool = False
 _SCOPE: List[str] = []
+# Adapter-skip (self-speculative drafting): while the flag is set, every
+# compressed linear computes only its quantized-sparse backbone and drops
+# the low-rank correction. Read at *trace* time — the speculative engine
+# traces its draft step inside the scope, so the jitted draft program is
+# permanently backbone-only while the verify/decode programs keep the
+# full path (two distinct jit cache entries, no retracing races).
+_SKIP_ADAPTERS: bool = False
 
 
 @contextlib.contextmanager
@@ -59,6 +66,22 @@ def scope(name: str):
         _SCOPE.pop()
 
 
+@contextlib.contextmanager
+def skip_adapters():
+    """Trace the enclosed forward with every ``SlimLinear`` reduced to its
+    backbone (no LoRA correction) — the free draft model of
+    self-speculative decoding. Dense leaves are unaffected, so on an
+    uncompressed model the scope is an exact no-op (drafting degenerates
+    to lookahead decoding)."""
+    global _SKIP_ADAPTERS
+    prev = _SKIP_ADAPTERS
+    _SKIP_ADAPTERS = True
+    try:
+        yield
+    finally:
+        _SKIP_ADAPTERS = prev
+
+
 def _record(name: str, x: jnp.ndarray):
     if _CAPTURE is None or name is None:
         return
@@ -76,7 +99,10 @@ def linear(p, x: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray:
     _record(name, x)
     if isinstance(p, SlimLinear):
         lead = x.shape[:-1]
-        y = slim_linear_apply(p, x.reshape(-1, x.shape[-1]), compute_dtype=jnp.float32)
+        y = slim_linear_apply(
+            p, x.reshape(-1, x.shape[-1]), compute_dtype=jnp.float32,
+            skip_lora=_SKIP_ADAPTERS,
+        )
         return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
     return jnp.dot(x, p.astype(x.dtype))
 
@@ -96,7 +122,7 @@ def expert_matmul(p, xd: jnp.ndarray, name: Optional[str] = None) -> jnp.ndarray
     if isinstance(p, SlimLinear):
         w = dequantize_base(p, jnp.float32)  # [E, K, M]
         y = jnp.einsum("neck,ekm->necm", xd, w)
-        l, r = adapter_factors(p, xd.dtype)
+        l, r = (None, None) if _SKIP_ADAPTERS else adapter_factors(p, xd.dtype)
         if l is not None:
             t = jnp.einsum("neck,ekr->necr", xd, l)
             y = y + jnp.einsum("necr,erm->necm", t, r)
@@ -282,17 +308,19 @@ def attention_layer(
         kv_pos = jnp.arange(s, dtype=jnp.int32)
         out = mha(q, k, v, positions, kv_pos, cfg.sliding_window, cfg.q_chunk, plp, xkv)
     elif s > 1 and block_table is not None:
-        # paged *offset* prefill (prefix-cache suffix): the slot's table
-        # already names shared blocks holding positions [0, pos0); this
-        # pass computes K/V only for the suffix tokens at absolute
+        # paged *offset* prefill (prefix-cache suffix, speculative verify):
+        # the slot's table already names blocks holding positions [0, pos0);
+        # this pass computes K/V only for the suffix tokens at absolute
         # positions pos0 + i, writes them straight into the slot's own
         # pool blocks, and attends over the gather of the whole table row
-        # — so suffix queries see the shared prefix they did not write.
-        # Pad entries (i >= true_len) are routed to the null block with
-        # pos = -1, preserving its never-valid invariant; the engine has
-        # already wiped the slot's fresh blocks' pos, so no stale entries
-        # from a prior owner survive into the mask.
-        assert not per_slot, "multi-token prefill requires a scalar pos0"
+        # — so suffix queries see the prefix they did not write. A scalar
+        # pos0 is the prefix-cache admission path (one slot, bucketed
+        # suffix); a per-slot pos0 vector is the speculative *verify* step,
+        # where every slot scores its own K-token draft window at its own
+        # depth in one batched pass. Pad entries (i >= true_len) are routed
+        # to the null block with pos = -1, preserving its never-valid
+        # invariant; the engine has already wiped any fresh blocks' pos, so
+        # no stale entries from a prior owner survive into the mask.
         bs_blk = cache["k"].shape[1]
         nkv, dh = cfg.n_kv_heads, cfg.d_head
         max_blocks = block_table.shape[1]
@@ -302,13 +330,17 @@ def attention_layer(
             if true_len is None
             else idx < jnp.asarray(true_len, jnp.int32)
         )
-        pvec = positions  # [S] absolute suffix positions
-        blk = jnp.clip(pvec // bs_blk, 0, max_blocks - 1)
-        phys = jnp.where(wvalid, block_table[:, blk], NULL_BLOCK_ID)  # [B, S]
-        off = jnp.broadcast_to((pvec % bs_blk)[None, :], phys.shape)
-        pos_w = jnp.broadcast_to(
-            jnp.where(wvalid, pvec, -1)[None, :], phys.shape
+        # positions is [S] (scalar pos0) or [B, S] (per-slot verify)
+        pvec = jnp.broadcast_to(
+            positions if per_slot else positions[None, :], (b, s)
         )
+        wv = jnp.broadcast_to(wvalid[None, :], (b, s))
+        blk = jnp.clip(pvec // bs_blk, 0, max_blocks - 1)
+        phys = jnp.where(
+            wv, jnp.take_along_axis(block_table, blk, axis=1), NULL_BLOCK_ID
+        )  # [B, S]
+        off = pvec % bs_blk
+        pos_w = jnp.where(wv, pvec, -1)
         kq, ks = store(k)
         vq, vs = store(v)
         ck = cache["k"].at[phys, off].set(kq)

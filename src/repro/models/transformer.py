@@ -17,6 +17,7 @@ compiles. Training applies ``jax.checkpoint`` per period (full remat).
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -368,18 +369,27 @@ def decode_step(
     token_or_embed: jnp.ndarray,  # tokens [B, 1] int32 or embeds [B, 1, D]
     pos: jnp.ndarray,  # int32 [B] per-slot positions (scalar broadcasts)
     block_table: Optional[jnp.ndarray] = None,  # [B, max_blocks] paged cache
+    skip_adapters: bool = False,  # backbone-only draft forward (speculative)
 ) -> Tuple[jnp.ndarray, Params]:
     """One decode step. ``pos`` gives the absolute position of each row's
     token; a vector lets continuous-batching slots sit at different depths
     (ragged decode), a scalar keeps the legacy lockstep behaviour. With a
-    paged cache, ``block_table`` names each row's pool blocks."""
+    paged cache, ``block_table`` names each row's pool blocks.
+
+    ``skip_adapters=True`` is the self-speculative *draft* step: every
+    compressed linear computes only its quantized-sparse backbone (the
+    LoRA correction is skipped), so the step is a strictly cheaper forward
+    of the same weights. Its K/V writes are provisional — the speculative
+    engine's verify pass re-writes the same positions with full-model
+    values before any of them can be committed."""
     if cfg.input_mode == "embeddings":
         x = token_or_embed.astype(_dtype(cfg))
     else:
         x = jnp.take(params["embed"], token_or_embed, axis=0).astype(_dtype(cfg))
-    h, cache, _ = forward_hidden(
-        params, cfg, x, cache, pos, None, block_table=block_table
-    )
+    with L.skip_adapters() if skip_adapters else contextlib.nullcontext():
+        h, cache, _ = forward_hidden(
+            params, cfg, x, cache, pos, None, block_table=block_table
+        )
     logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
     return logits[:, 0], cache
 
@@ -422,6 +432,17 @@ def supports_prefix_cache(cfg: ModelConfig) -> bool:
     return supports_paged_cache(cfg) and all(
         sp.kind == "attn" and not sp.moe for sp in cfg.period
     )
+
+
+def supports_speculative(cfg: ModelConfig) -> bool:
+    """Whether self-speculative decoding is exact for this arch: pure
+    attention over the paged pool. Attention state is *positional* — a
+    rejected draft's K/V entries are simply overwritten or masked — but an
+    SSM recurrence integrates every draft step into its state and cannot
+    roll back a rejection, and MoE capacity couples draft rows across
+    slots. Same gate as the prefix cache (the verify pass *is* the offset
+    prefill, batched)."""
+    return supports_prefix_cache(cfg)
 
 
 def prefill_ragged(
@@ -566,3 +587,68 @@ def prefill_slot(
         else:  # ssm / cross_attn state stays per-slot
             new_cache[key] = jax.tree.map(splice_row, cache[key], small[key])
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: verify draft windows against the paged pool
+# ---------------------------------------------------------------------------
+
+def verify_slot(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    batch: Params,  # batch size 1: the slot's S-token draft window
+    slot,  # traced int32: which slot's blocks the window writes into
+    block_table: jnp.ndarray,  # [B, table_blocks] paged tables
+    pos0,  # traced int32: absolute position of the window's first token
+) -> Tuple[jnp.ndarray, Params]:
+    """Score one slot's draft window and return *per-position* logits.
+
+    This is ``prefill_slot(cached_len=pos0)`` generalized from "logits of
+    the last real token" to "logits at every window position": the same
+    offset-prefill pass — suffix K/V computed at absolute positions
+    ``pos0 + i``, written straight into the slot's pool blocks, attention
+    over the gathered table row — but the returned ``[1, S, V]`` logits
+    give the full-model next-token distribution *after each* window token,
+    which is exactly what speculative acceptance needs. The window's K/V
+    writes overwrite the draft pass's provisional (backbone-only) entries,
+    so every committed position ends up holding full-model K/V."""
+    assert supports_speculative(cfg), (
+        f"{cfg.name}: speculative verify is exact only for pure-attention "
+        "periods over the paged pool"
+    )
+    slot = jnp.asarray(slot, jnp.int32)
+    row = jax.lax.dynamic_slice_in_dim(block_table, slot, 1, axis=0)
+    x = embed_inputs(params, cfg, batch)  # [1, S, D]
+    h, cache, _ = forward_hidden(
+        params, cfg, x, cache, jnp.asarray(pos0, jnp.int32), None,
+        block_table=row,
+    )
+    logits = L.linear(_head_weights(params, cfg), h).astype(jnp.float32)
+    return logits, cache
+
+
+def verify_step(
+    params: Params,
+    cfg: ModelConfig,
+    cache: Params,
+    tokens: jnp.ndarray,  # [B, S] int32: every slot's draft window
+    pos: jnp.ndarray,  # [B] int32: absolute position of tokens[:, 0] per slot
+    block_table: jnp.ndarray,  # [B, table_blocks] paged tables
+) -> Tuple[jnp.ndarray, Params]:
+    """``verify_slot`` for every slot at once: one full-model pass scores
+    all B draft windows, each at its own depth (per-slot ``pos`` vector
+    through the paged offset-prefill branch). Returns ``[B, S, V]``
+    per-position logits. Inactive rows ride along — their tables point at
+    the trash block and their logits are discarded by the engine."""
+    assert supports_speculative(cfg), (
+        f"{cfg.name}: speculative verify is exact only for pure-attention "
+        "periods over the paged pool"
+    )
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
+    h, cache, _ = forward_hidden(
+        params, cfg, x, cache, jnp.asarray(pos, jnp.int32), None,
+        block_table=block_table,
+    )
+    logits = L.linear(_head_weights(params, cfg), h).astype(jnp.float32)
+    return logits, cache

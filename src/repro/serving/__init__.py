@@ -7,6 +7,7 @@ from repro.serving.block_pool import (
 )
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
 from repro.serving.metrics import RequestTrace, ServingMetrics
+from repro.serving.speculative import SpeculativeEngine
 from repro.serving.request import (
     Request,
     RequestQueue,

@@ -106,7 +106,13 @@ class PrefixAdmit:
 
 
 class BlockAllocator:
-    def __init__(self, n_blocks: int, block_size: int, prefix_cache: bool = False):
+    def __init__(
+        self,
+        n_blocks: int,
+        block_size: int,
+        prefix_cache: bool = False,
+        prefix_cache_max_entries: int = 0,  # 0 = unbounded hash index
+    ):
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         if n_blocks <= RESERVED_BLOCKS:
@@ -114,16 +120,30 @@ class BlockAllocator:
                 f"pool of {n_blocks} blocks leaves nothing to allocate "
                 f"({RESERVED_BLOCKS} reserved)"
             )
+        if prefix_cache_max_entries < 0:
+            raise ValueError("prefix_cache_max_entries must be >= 0")
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        self.prefix_cache_max_entries = prefix_cache_max_entries
+        self.index_evictions = 0  # entries dropped by cap/TTL (metrics)
+        self._now = 0.0  # engine clock, fed via tick(); stamps registrations
+        self._stamp: Dict[int, float] = {}  # chain hash -> registration time
         self._free: Deque[int] = deque(range(RESERVED_BLOCKS, n_blocks))
         self._owned: Dict[int, List[int]] = {}  # slot -> table blocks (in order)
         self._ref: Dict[int, int] = {}  # block -> refcount (allocated only)
         # prefix-cache state: hashed blocks keep their content while
-        # refcount 0 (evictable) until the clock hand reclaims them
+        # refcount 0 (evictable) until the clock hand reclaims them.
+        # Both index dicts are registration-ordered (Python dict order), so
+        # the cap's evict-oldest sweep is the front of ``_block_of``.
         self._hash_of: Dict[int, int] = {}  # block -> chain hash
         self._block_of: Dict[int, int] = {}  # chain hash -> block
+        # chain-tree links: entry h's parent is the hash of the one-block-
+        # shorter prefix (0 = chain root). Cap/TTL drops cascade to the
+        # whole subtree — a suffix entry whose ancestor is gone can never
+        # match again, so keeping it would waste cap space and blocks.
+        self._parent: Dict[int, int] = {}  # chain hash -> parent hash
+        self._kids: Dict[int, set] = {}  # chain hash -> child hashes
         self._hand: int = RESERVED_BLOCKS  # clock-hand eviction cursor
         self._n_evict: int = 0  # hashed blocks with refcount 0 (O(1) count)
         self._info: Dict[int, PrefixAdmit] = {}  # slot -> last admit info
@@ -157,10 +177,10 @@ class BlockAllocator:
             if self._hand >= self.n_blocks:
                 self._hand = RESERVED_BLOCKS
             if blk in self._hash_of and self._ref.get(blk, 0) == 0:
-                h = self._hash_of.pop(blk)
-                del self._block_of[h]
-                self._n_evict -= 1
-                self._free.append(blk)
+                # pool-pressure reclaim: drop just this entry. Descendant
+                # entries it strands stay evictable and are reclaimed as
+                # the hand (or a cap/TTL cascade) reaches them.
+                self._unlink(self._hash_of[blk])
                 return
         raise RuntimeError("eviction requested but no refcount-0 cached block")
 
@@ -168,6 +188,87 @@ class BlockAllocator:
         while len(self._free) < n:
             self._evict_one()
         return [self._free.popleft() for _ in range(n)]
+
+    # -- hash-index bookkeeping ---------------------------------------------
+
+    def _register(self, h: int, blk: int, parent: int = 0) -> None:
+        """Index ``blk`` under chain hash ``h`` (``parent`` = hash of the
+        one-block-shorter prefix, 0 for a chain root), enforcing the
+        optional entry cap. Matching always walks from the chain root, so
+        the index must never hold an entry whose prefix is gone: an entry
+        whose parent is no longer indexed is skipped outright, and when
+        the index would exceed ``prefix_cache_max_entries`` the
+        *oldest-registered chain* loses its deepest leaf — dropping from
+        the tail keeps every surviving entry matchable. Dropped blocks
+        stay owned if referenced, or move straight to the free list if
+        they were evictable."""
+        if parent and parent not in self._block_of:
+            # the one-block-shorter prefix has been dropped (cap/TTL/
+            # clock-hand); this entry could never match — dead weight
+            return
+        self._block_of[h] = blk
+        self._hash_of[blk] = h
+        self._stamp[h] = self._now
+        self._parent[h] = parent
+        if parent:
+            self._kids.setdefault(parent, set()).add(h)
+        cap = self.prefix_cache_max_entries
+        while cap and len(self._block_of) > cap:
+            old = next(iter(self._block_of))  # oldest chain's rootmost entry
+            while self._kids.get(old):
+                old = next(iter(self._kids[old]))  # walk to a leaf
+            self._unlink(old)
+            self.index_evictions += 1
+
+    def _unlink(self, h: int) -> None:
+        """Remove one index entry and its tree links (no cascade)."""
+        blk = self._block_of.pop(h)
+        del self._hash_of[blk]
+        self._stamp.pop(h, None)
+        parent = self._parent.pop(h, 0)
+        kids = self._kids.get(parent)
+        if kids is not None:
+            kids.discard(h)
+            if not kids:
+                del self._kids[parent]
+        if self._ref.get(blk, 0) == 0:
+            self._n_evict -= 1
+            self._free.append(blk)
+
+    def _drop_entry(self, h: int) -> None:
+        """Cap/TTL drop: unregister ``h`` and every descendant entry
+        (none of which could match once ``h`` is gone). Iterative — a
+        conversation-length chain is one long parent->child line, far
+        deeper than Python's recursion limit."""
+        stack, subtree = [h], []
+        while stack:
+            cur = stack.pop()
+            subtree.append(cur)
+            stack.extend(self._kids.get(cur, ()))
+        for cur in subtree:
+            self._kids.pop(cur, None)  # descendants all drop; no discards
+            self._unlink(cur)
+            self.index_evictions += 1
+
+    def tick(self, now: float) -> None:
+        """Advance the allocator's clock; later registrations are stamped
+        with it (the TTL sweep's time base)."""
+        self._now = now
+
+    def expire_index(self, cutoff: float) -> int:
+        """TTL sweep: drop every index entry registered before ``cutoff``.
+        Registration order is time order (the clock only moves forward),
+        so this pops from the front and costs O(dropped). Returns the
+        number of entries dropped."""
+        n = 0
+        while self._block_of:
+            old_h = next(iter(self._block_of))
+            if self._stamp.get(old_h, 0.0) >= cutoff:
+                break
+            before = self.index_evictions
+            self._drop_entry(old_h)  # cascades to the stranded subtree
+            n += self.index_evictions - before
+        return n
 
     # -- plain allocation (no prefix sharing) -------------------------------
 
@@ -213,17 +314,20 @@ class BlockAllocator:
         self._owned[slot].extend(blocks)
         return list(blocks)
 
-    def preempt(self, slot: int, tokens: Optional[Sequence[int]] = None) -> None:
-        """Release a preemption victim's blocks back to the pool.
+    def release_cached(self, slot: int, tokens: Optional[Sequence[int]]) -> None:
+        """Release a slot's blocks, first demoting its full blocks to
+        cached entries.
 
-        With ``prefix_cache=True`` and ``tokens`` given (the victim's
-        prompt + generated-so-far, i.e. exactly the tokens whose KV the
-        slot's blocks hold), every *full* block not already in the hash
-        index is registered first, so the release demotes it to a
-        refcount-0 *cached* entry instead of a free block — the victim's
-        resume re-prefill then matches its own chain and pays only for
-        the partial last block. Without the prefix cache this is a plain
-        ``release``."""
+        ``tokens`` is the committed chain whose KV the slot's blocks hold
+        — prompt plus every generated token (a preemption victim's
+        generated-so-far, or a finished request's whole output). Every
+        *full* block of that chain not already in the hash index is
+        registered first, so the release turns it into a refcount-0
+        *cached* entry instead of a free block: a preemption victim's
+        resume re-prefill matches its own chain, and a multi-turn
+        follow-up whose prompt extends a finished request's
+        prompt + output rides the earlier turn's blocks. With the prefix
+        cache off (or ``tokens=None``) this is a plain ``release``."""
         if self.prefix_cache and tokens is not None:
             table = self._owned.get(slot, [])
             hashes = chain_hashes(tokens, self.block_size)
@@ -233,9 +337,14 @@ class BlockAllocator:
                 blk = table[j]
                 if h in self._block_of or blk in self._hash_of:
                     continue  # chain (or block) already indexed
-                self._block_of[h] = blk
-                self._hash_of[blk] = h
+                self._register(h, blk, parent=hashes[j - 1] if j else 0)
         self.release(slot)
+
+    def preempt(self, slot: int, tokens: Optional[Sequence[int]] = None) -> None:
+        """Release a preemption victim's blocks back to the pool —
+        ``release_cached`` under its historical name (the victim's resume
+        re-prefill then pays only for the partial last block)."""
+        self.release_cached(slot, tokens)
 
     # -- prefix-cached admission --------------------------------------------
 
@@ -330,9 +439,7 @@ class BlockAllocator:
         for j in range(len(matched), len(hashes)):
             h = hashes[j]
             if h not in self._block_of:
-                blk = table[j]
-                self._block_of[h] = blk
-                self._hash_of[blk] = h
+                self._register(h, table[j], parent=hashes[j - 1] if j else 0)
         self._owned[slot] = table
         self._info[slot] = info
         return info
@@ -378,3 +485,13 @@ class BlockAllocator:
         assert len(self._block_of) == len(self._hash_of)
         for blk, h in self._hash_of.items():
             assert self._block_of[h] == blk, "hash index is not a bijection"
+        assert set(self._stamp) == set(self._block_of), (
+            "registration stamps disagree with the hash index"
+        )
+        assert set(self._parent) == set(self._block_of), (
+            "chain-tree links disagree with the hash index"
+        )
+        if self.prefix_cache_max_entries:
+            assert len(self._block_of) <= self.prefix_cache_max_entries, (
+                "hash index exceeded its entry cap"
+            )

@@ -44,6 +44,16 @@ Resume is a plain prefill of the longer prompt with the remaining
 budget: token-exact under greedy decoding, for pure-attention and
 hybrid archs alike (the re-prefill recomputes SSM state from scratch).
 
+``speculative=K`` (paged, pure-attention archs) turns on self-speculative
+decoding: each burst round drafts K-1 tokens per slot with the SLiM
+adapter path disabled (the quantized-sparse backbone is a strictly
+cheaper forward of the same weights), verifies the whole K-token window
+in one batched full-model offset-prefill pass, and bulk-commits the
+accepted prefix — up to K tokens per slot per round, token-exact under
+greedy decoding because everything committed (tokens, carry logits, and
+the window's K/V overwrites) comes from the full model. See
+``serving/speculative.py`` and docs/serving.md §Speculative decoding.
+
 Device/host split: the decode step carries logits, per-slot positions, the
 active mask, emitted counts, and the output token buffer entirely on
 device; the host syncs two small vectors (active, emitted) once per
@@ -114,6 +124,17 @@ class ContinuousEngine:
         # admission for running slots to grow into (preemption mode only)
         check_invariants: bool = False,  # assert allocator invariants
         # every scheduling round (test hook; O(pool) host work per round)
+        speculative: int = 0,  # K >= 2: self-speculative decoding — each
+        # round drafts K-1 tokens with the adapter path disabled, verifies
+        # the whole window in one full-model pass, and bulk-commits the
+        # accepted prefix (paged, pure-attention archs; 0 = off)
+        victim_policy: str = "youngest",  # preemption victim selection:
+        # "youngest" admission, or "cost" (blocks freed per generated
+        # token discarded, oldest slot exempt)
+        prefix_cache_max_entries: int = 0,  # cap on the allocator's
+        # content-hash index (0 = unbounded; evict-oldest on overflow)
+        prefix_cache_ttl: float = 0.0,  # seconds an index entry may
+        # outlive its registration (0 = no TTL; swept each round)
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
         if prefix_cache:
@@ -133,6 +154,38 @@ class ContinuousEngine:
             )
         if decode_reserve < 0:
             raise ValueError("decode_reserve must be >= 0")
+        if speculative:
+            if speculative < 2:
+                raise ValueError(
+                    "speculative=K drafts K-1 tokens per round; it needs "
+                    "K >= 2"
+                )
+            if block_size <= 0:
+                raise ValueError(
+                    "speculative decoding verifies draft windows against "
+                    "the paged pool; it needs block_size > 0"
+                )
+            if not T.supports_speculative(cfg):
+                raise ValueError(
+                    f"{cfg.name}: self-speculative decoding is exact only "
+                    "for pure-attention periods (an SSM recurrence cannot "
+                    "roll back a rejected draft, and MoE capacity couples "
+                    "draft rows across slots)"
+                )
+        if prefix_cache_max_entries < 0:
+            raise ValueError("prefix_cache_max_entries must be >= 0")
+        if prefix_cache_ttl < 0:
+            raise ValueError("prefix_cache_ttl must be >= 0")
+        if (prefix_cache_max_entries or prefix_cache_ttl) and not prefix_cache:
+            raise ValueError(
+                "prefix_cache_max_entries/prefix_cache_ttl bound the "
+                "prefix cache's hash index; they need prefix_cache=True"
+            )
+        if victim_policy != "youngest" and not preemption:
+            raise ValueError(
+                "victim_policy selects the preemption victim; it needs "
+                "preemption=True"
+            )
         if block_size > 0:
             if not T.supports_paged_cache(cfg):
                 raise ValueError(
@@ -171,10 +224,24 @@ class ContinuousEngine:
         self.preemption = preemption
         self.decode_reserve = decode_reserve
         self.check_invariants = check_invariants
+        self.speculative = speculative
+        self.victim_policy = victim_policy
+        self.prefix_cache_max_entries = prefix_cache_max_entries
+        self.prefix_cache_ttl = prefix_cache_ttl
         self.max_blocks = max_len // block_size if block_size > 0 else 0
+        # speculative drafting writes up to K positions past a slot's
+        # committed budget (the last round's verify window); block tables
+        # get that much scratch tail so draft writes land in blocks the
+        # slot owns, never clipped into a committed (shareable) block
+        self.spec_blocks = (
+            blocks_needed(speculative, block_size)
+            if speculative and block_size > 0
+            else 0
+        )
+        self.table_blocks = self.max_blocks + self.spec_blocks
         if block_size > 0:
             self.n_blocks = (
-                n_slots * self.max_blocks + RESERVED_BLOCKS
+                n_slots * self.table_blocks + RESERVED_BLOCKS
                 if n_blocks is None
                 else n_blocks
             )
@@ -271,6 +338,25 @@ class ContinuousEngine:
 
         self._step = jax.jit(_step, donate_argnums=(1,))
 
+        self._eos = eos
+        # speculative rounds are built lazily per sampling mode: an
+        # all-greedy trace gets the RNG-free round variant (argmax
+        # drafting + longest-prefix acceptance), anything else the
+        # rejection-sampling one
+        self._spec_rounds: Dict[bool, Any] = {}
+
+    def _spec_round_for(self, greedy: bool):
+        fn = self._spec_rounds.get(greedy)
+        if fn is None:
+            # lazy import: speculative.py imports ContinuousEngine
+            from repro.serving.speculative import build_spec_round
+
+            fn = build_spec_round(
+                self.cfg, self.speculative, self._eos, greedy=greedy
+            )
+            self._spec_rounds[greedy] = fn
+        return fn
+
     # ------------------------------------------------------------------
 
     def run(
@@ -283,7 +369,9 @@ class ContinuousEngine:
         paged = self.block_size > 0
         allocator = (
             BlockAllocator(
-                self.n_blocks, self.block_size, prefix_cache=self.prefix_cache
+                self.n_blocks, self.block_size,
+                prefix_cache=self.prefix_cache,
+                prefix_cache_max_entries=self.prefix_cache_max_entries,
             )
             if paged
             else None
@@ -292,11 +380,18 @@ class ContinuousEngine:
             b, self.max_len, self.prefill_bucket, allocator,
             on_demand=self.preemption,
             decode_reserve=self.decode_reserve if self.preemption else 0,
+            spec_pad=self.speculative,
+            victim_policy=self.victim_policy,
         )
         metrics = ServingMetrics(b)
         for r in requests:
             sched.submit(r)
             metrics.on_submit(r.rid, r.arrival)
+        spec_fn = (
+            self._spec_round_for(all(r.temperature == 0 for r in requests))
+            if self.speculative
+            else None
+        )
         cap = max_new_cap or max((r.max_new_tokens for r in requests), default=1)
         over = [r.rid for r in requests if r.max_new_tokens > cap]
         if over:
@@ -312,7 +407,7 @@ class ContinuousEngine:
         # point wholesale at the trash block so their decode writes can
         # never land in a block that has been reallocated
         table_np = (
-            np.full((b, self.max_blocks), TRASH_BLOCK, np.int32)
+            np.full((b, self.table_blocks), TRASH_BLOCK, np.int32)
             if paged
             else None
         )
@@ -325,6 +420,9 @@ class ContinuousEngine:
         buf = jnp.zeros((b, cap), jnp.int32)
         temps = jnp.zeros((b,), jnp.float32)
         key = jax.random.PRNGKey(self.seed)
+        # cumulative (accepted, proposed) draft counts, device-resident so
+        # speculative rounds never force an extra host sync
+        spec_counters = jnp.zeros((2,), jnp.int32)
 
         running: Dict[int, Request] = {}  # slot -> request
         emitted_host: Dict[int, int] = {}  # slot -> emitted as of last sync
@@ -346,6 +444,20 @@ class ContinuousEngine:
             dirty = np.asarray(sorted(set(slots)))
             table_dev = table_dev.at[dirty].set(jnp.asarray(table_np[dirty]))
 
+        def wipe_pos(cache, blocks):
+            """Invalidate recycled blocks before any decode gather can
+            reach them: a prior owner's pos entries must never enter an
+            attention mask (the K/V payload is masked garbage)."""
+            wipe = jnp.asarray(sorted(set(blocks)), jnp.int32)
+            return {
+                lk: (
+                    {**lv, "pos": lv["pos"].at[:, wipe].set(-1)}
+                    if "pos" in lv
+                    else lv
+                )
+                for lk, lv in cache.items()
+            }
+
         def preempt_slot(victim: int) -> None:
             """Evict ``victim``: stitch its emitted-so-far tokens into its
             resume prompt (the scheduler re-queues it), return its blocks
@@ -366,6 +478,13 @@ class ContinuousEngine:
             metrics.on_preempt(req.rid, now())
 
         while sched.pending() or running:
+            if allocator is not None and allocator.prefix_cache:
+                # keep the allocator's clock current (stamps registrations)
+                # and sweep TTL-expired index entries before matching
+                t_round = now()
+                allocator.tick(t_round)
+                if self.prefix_cache_ttl > 0:
+                    allocator.expire_index(t_round - self.prefix_cache_ttl)
             admits = sched.admit(now())
             if not admits and not running:
                 nxt_arrival = sched.next_arrival()
@@ -377,11 +496,21 @@ class ContinuousEngine:
                 # bind the freshly allocated blocks before any prefill or
                 # decode sees the table (unallocated tail -> null block);
                 # only the dirty slot rows are pushed, in one dispatch
+                wipe_admit: List[int] = []
                 for slot, _ in admits:
                     blocks = allocator.blocks_of(slot)
                     table_np[slot] = NULL_BLOCK
                     table_np[slot, : len(blocks)] = blocks
+                    # cold prefill overwrites the first max_blocks table
+                    # entries wholesale, but a speculative request whose
+                    # prompt+budget charge spills into the scratch tail
+                    # (worst-case charging) binds recycled blocks there
+                    # as-is — wipe their stale pos before any gather
+                    if len(blocks) > self.max_blocks:
+                        wipe_admit.extend(blocks[self.max_blocks :])
                 push_rows(slot for slot, _ in admits)
+                if wipe_admit:
+                    cache = wipe_pos(cache, wipe_admit)
 
             for slot, req in admits:
                 metrics.on_admit(req.rid, now())
@@ -440,13 +569,19 @@ class ContinuousEngine:
                 # and re-queued — repeat until the extension fits.
                 grow_dirty: List[int] = []
                 fresh_blocks: List[int] = []
+                # a speculative burst advances up to K per round and its
+                # verify windows write up to K positions past the budget
+                adv = sync_every * (self.speculative or 1)
                 for slot in sorted(running, key=sched.slot_seq.__getitem__):
                     if slot not in running:
                         continue  # preempted earlier in this same pass
                     req = running[slot]
                     pos_now = slot_pos0(slot) + emitted_host[slot]
-                    cap_pos = slot_pos0(slot) + req.remaining_new_tokens
-                    target = min(pos_now + sync_every, cap_pos)
+                    cap_pos = (
+                        slot_pos0(slot) + req.remaining_new_tokens
+                        + self.speculative
+                    )
+                    target = min(pos_now + adv, cap_pos)
                     while True:
                         owned = len(allocator.blocks_of(slot))
                         need = blocks_needed(target, self.block_size) - owned
@@ -458,7 +593,13 @@ class ContinuousEngine:
                             grow_dirty.append(slot)
                             fresh_blocks.extend(got)
                             break
-                        victim = sched.pick_victim()
+                        victim = sched.pick_victim(
+                            {
+                                s2: len(running[s2].generated)
+                                + emitted_host[s2]
+                                for s2 in running
+                            }
+                        )
                         assert victim is not None  # running is non-empty
                         preempt_slot(victim)
                         grow_dirty.append(victim)
@@ -468,17 +609,9 @@ class ContinuousEngine:
                     push_rows(grow_dirty)
                 if fresh_blocks:
                     # recycled blocks can carry a prior owner's pos entries;
-                    # wipe them to -1 (invalid) before any decode gather can
-                    # reach the block through the updated table
-                    wipe = jnp.asarray(sorted(set(fresh_blocks)), jnp.int32)
-                    cache = {
-                        lk: (
-                            {**lv, "pos": lv["pos"].at[:, wipe].set(-1)}
-                            if "pos" in lv
-                            else lv
-                        )
-                        for lk, lv in cache.items()
-                    }
+                    # wipe before any decode gather can reach them through
+                    # the updated table
+                    cache = wipe_pos(cache, fresh_blocks)
                 if not running:
                     continue  # everything was evicted; re-admit first
 
@@ -488,12 +621,28 @@ class ContinuousEngine:
                 if self.check_invariants:
                     allocator.check()
 
-            metrics.on_decode_steps(sync_every)
-            for _ in range(sync_every):
-                cache, logits, pos, active, emitted, buf, key = self._step(
-                    self.params, cache, logits, pos, active, emitted,
-                    maxnew, buf, key, temps, table_dev,
-                )
+            if self.speculative:
+                # each round is one dispatch: K-1 backbone draft steps,
+                # a batched full-model verify of every slot's window, and
+                # the rejection-sampled bulk commit
+                metrics.on_decode_steps(sync_every * self.speculative)
+                for _ in range(sync_every):
+                    (
+                        cache, logits, pos, active, emitted, buf, key,
+                        spec_counters,
+                    ) = spec_fn(
+                        self.params, cache, logits, pos, active, emitted,
+                        maxnew, buf, key, temps, table_dev, spec_counters,
+                    )
+            else:
+                metrics.on_decode_steps(sync_every)
+                for _ in range(sync_every):
+                    cache, logits, pos, active, emitted, buf, key = (
+                        self._step(
+                            self.params, cache, logits, pos, active,
+                            emitted, maxnew, buf, key, temps, table_dev,
+                        )
+                    )
             host_active, host_emitted = jax.device_get((active, emitted))
             for s in running:
                 # host mirror of each slot's position (plen + emitted) —
@@ -514,7 +663,18 @@ class ContinuousEngine:
                         int(t) for t in host_buf[slot, :n]
                     ]
                     metrics.on_finish(req.rid, t_done, len(req.output))
-                    sched.release(slot)  # paged: blocks return to the pool
+                    # paged: blocks return to the pool; with the prefix
+                    # cache the full blocks of prompt + output demote to
+                    # cached entries so a multi-turn follow-up re-prefills
+                    # only its new suffix
+                    sched.release(
+                        slot,
+                        tokens=(
+                            req.prompt + req.output
+                            if self.prefix_cache
+                            else None
+                        ),
+                    )
                     if paged:
                         # retire the row before the next decode burst: the
                         # freed blocks may be reallocated this very loop
@@ -522,6 +682,13 @@ class ContinuousEngine:
                 if paged:
                     push_rows(done_slots)
 
+        if self.speculative:
+            accepted, proposed = (
+                int(v) for v in jax.device_get(spec_counters)
+            )
+            metrics.on_speculative(accepted, proposed)
+        if allocator is not None and allocator.prefix_cache:
+            metrics.on_index_evictions(allocator.index_evictions)
         summary = metrics.summary()
         summary["peak_concurrency"] = float(peak_running)
         return ContinuousResult(

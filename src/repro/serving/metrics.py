@@ -65,6 +65,11 @@ class ServingMetrics:
         # preemption counters (stay zero under worst-case charging)
         self.preemptions: int = 0
         self.preempted_rids: Set[int] = set()
+        # speculative-decoding counters (stay zero with speculation off)
+        self.draft_accepted: int = 0
+        self.draft_proposed: int = 0
+        # prefix-index cap counter (stays zero while the index is unbounded)
+        self.prefix_index_evictions: int = 0
 
     # -- event hooks -------------------------------------------------------
 
@@ -114,6 +119,19 @@ class ServingMetrics:
         if cached_tokens > 0:
             self.prefix_hits += 1
 
+    def on_speculative(self, accepted: int, proposed: int) -> None:
+        """Record cumulative draft-token counts: of ``proposed`` tokens
+        the draft (backbone-only) model put forward, ``accepted`` survived
+        full-model verification. The acceptance rate is the quality of
+        the free draft model — 1.0 for a dense model (drafting degenerates
+        to exact lookahead)."""
+        self.draft_accepted += int(accepted)
+        self.draft_proposed += int(proposed)
+
+    def on_index_evictions(self, n: int) -> None:
+        """Record the allocator's cumulative prefix-index cap evictions."""
+        self.prefix_index_evictions = int(n)
+
     def on_blocks_in_use(self, n: int) -> None:
         self.peak_blocks_in_use = max(self.peak_blocks_in_use, int(n))
         self.blocks_in_use_samples.append(int(n))
@@ -124,7 +142,13 @@ class ServingMetrics:
         step emits one token per truly-live slot, except a request's final
         EOS-consuming step, which occupies the slot but emits nothing (the
         stop token is excluded from outputs), so occupancy reads slightly
-        conservative under EOS-terminated traffic."""
+        conservative under EOS-terminated traffic.
+
+        The speculative engine records K step-opportunities per round, so
+        there ``mean_occupancy`` is the realized fraction of *peak
+        speculative throughput* — slot idleness and draft rejections fold
+        into one number (acceptance is reported separately) — and is not
+        directly comparable with a non-speculative run's occupancy."""
         self.decode_steps += n
 
     # -- summary -----------------------------------------------------------
@@ -171,4 +195,13 @@ class ServingMetrics:
             "preempted_requests": float(len(self.preempted_rids)),
             "resume_prefix_hits": float(self.resume_prefix_hits),
             "resume_cached_tokens": float(self.resume_cached_tokens),
+            # speculative decoding: draft-token acceptance
+            "draft_accepted": float(self.draft_accepted),
+            "draft_proposed": float(self.draft_proposed),
+            "draft_acceptance_rate": (
+                self.draft_accepted / self.draft_proposed
+                if self.draft_proposed
+                else 0.0
+            ),
+            "prefix_index_evictions": float(self.prefix_index_evictions),
         }

@@ -5,11 +5,37 @@ Both the static (``engine.ServeEngine``) and continuous
 draw the next token per row (greedy or temperature), append it to each
 live row's output buffer, and flag EOS hits — all inside jit, with no
 host traffic. Kept in one place so the two engines can't drift.
+
+The speculative engine (``serving/speculative.py``) adds two more
+primitives over the same conventions: ``speculative_accept`` — standard
+speculative rejection sampling of a drafted token window against the
+full model's per-position logits (greedy rows reduce to
+longest-matching-prefix, which is provably token-exact) — and
+``emit_speculative``, the multi-token bulk commit that replays the
+one-token emit semantics (EOS is a signal, budgets count real tokens)
+over an accepted window.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def draw_tokens(logits, temps, key, greedy_only: bool = False):
+    """Draw one token per row from ``logits`` [B, V]: argmax where the
+    row's temperature is 0, temperature-scaled categorical otherwise.
+    Returns [B] int32. ``greedy_only`` is a static fast path that skips
+    the categorical draw (and therefore all RNG work) entirely."""
+    b = logits.shape[0]
+    greedy = jnp.argmax(logits, axis=-1)
+    if greedy_only:
+        return greedy.astype(jnp.int32)
+    t = jnp.broadcast_to(jnp.asarray(temps, jnp.float32), (b,))
+    # greedy rows (t == 0) discard `sampled`; divide by 1 instead of ~0 so
+    # the dead branch doesn't feed +-inf logits into categorical
+    safe_t = jnp.where(t > 0, t, 1.0)
+    sampled = jax.random.categorical(key, logits / safe_t[:, None])
+    return jnp.where(t > 0, sampled, greedy).astype(jnp.int32)
 
 
 def sample_and_emit(logits, temps, key, buf, live, emitted, eos):
@@ -30,13 +56,7 @@ def sample_and_emit(logits, temps, key, buf, live, emitted, eos):
     """
     b = logits.shape[0]
     key, sk = jax.random.split(key)
-    greedy = jnp.argmax(logits, axis=-1)
-    t = jnp.broadcast_to(jnp.asarray(temps, jnp.float32), (b,))
-    # greedy rows (t == 0) discard `sampled`; divide by 1 instead of ~0 so
-    # the dead branch doesn't feed +-inf logits into categorical
-    safe_t = jnp.where(t > 0, t, 1.0)
-    sampled = jax.random.categorical(sk, logits / safe_t[:, None])
-    nxt = jnp.where(t > 0, sampled, greedy).astype(jnp.int32)
+    nxt = draw_tokens(logits, temps, sk)
     hit_eos = nxt == eos
     emit = live & ~hit_eos
     # non-emitting rows target index buf.shape[1]; mode="drop" discards
@@ -44,3 +64,111 @@ def sample_and_emit(logits, temps, key, buf, live, emitted, eos):
     buf = buf.at[jnp.arange(b), idx].set(nxt, mode="drop")
     emitted = emitted + emit.astype(jnp.int32)
     return nxt, buf, emitted, hit_eos, key
+
+
+def speculative_accept(fed, draft_logits, target_logits, temps, key,
+                       greedy: bool = False):
+    """Accept a drafted window by speculative rejection sampling.
+
+    fed           [B, K] i32    tokens fed to the verify pass. ``fed[:, 0]``
+                                was drawn from the full model's carry
+                                logits (always correct); ``fed[:, i]`` for
+                                i >= 1 was proposed by the draft model from
+                                ``draft_logits[:, i-1]``.
+    draft_logits  [B, K-1, V]   the draft distribution behind each proposal
+    target_logits [B, K, V]     full-model logits after each fed token
+                                (``target_logits[:, i]`` is the
+                                distribution of window position i+1)
+    temps         [B] f32       per-row temperature (0 = greedy)
+
+    Returns ``(n_acc [B] i32 in [1, K], carry_logits [B, V], key)``.
+
+    ``n_acc`` counts accepted fed tokens: ``fed[:, 0]`` always, then each
+    proposal while every earlier one was accepted and
+
+    * greedy rows: ``fed[:, i] == argmax(target_logits[:, i-1])`` —
+      longest matching prefix, token-exact against one-by-one decoding;
+    * temperature rows: ``u < p(tok) / q(tok)`` with ``p``/``q`` the
+      temperature-scaled target/draft distributions (the classic
+      acceptance test).
+
+    ``carry_logits`` is what the next round's first token must be drawn
+    from: the target logits after the last accepted token, except for a
+    temperature row that rejected mid-window, which carries the *residual*
+    ``max(p - q, 0)`` at the rejection position (re-expressed as
+    temperature-scaled logits) — the correction that makes each committed
+    token's marginal distribution exactly the full model's.
+    """
+    b, k = fed.shape
+    t = jnp.broadcast_to(jnp.asarray(temps, jnp.float32), (b,))
+    if k == 1:  # no proposals: the window is just the carry token
+        return jnp.ones((b,), jnp.int32), target_logits[:, 0], key
+    if greedy:
+        # static all-greedy fast path (the engine selects it when a whole
+        # trace is temperature-0): pure argmax comparison, no softmaxes,
+        # no residuals, and — crucially for the hot round — no RNG
+        ok = fed[:, 1:] == jnp.argmax(target_logits[:, : k - 1], axis=-1)
+        acc = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+        n_acc = (1 + jnp.sum(acc, axis=1)).astype(jnp.int32)
+        carry = jnp.take_along_axis(
+            target_logits, (n_acc - 1)[:, None, None], axis=1
+        )[:, 0]
+        return n_acc, carry, key
+    safe_t = jnp.where(t > 0, t, 1.0)[:, None, None]
+    p = jax.nn.softmax(target_logits[:, : k - 1] / safe_t, axis=-1)
+    q = jax.nn.softmax(draft_logits / safe_t, axis=-1)
+    props = fed[:, 1:]  # [B, K-1] draft proposals
+    p_tok = jnp.take_along_axis(p, props[..., None], axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(q, props[..., None], axis=-1)[..., 0]
+    key, sk = jax.random.split(key)
+    u = jax.random.uniform(sk, (b, k - 1))
+    ok_temp = u * q_tok < p_tok  # accept with probability min(1, p/q)
+    ok_greedy = props == jnp.argmax(target_logits[:, : k - 1], axis=-1)
+    ok = jnp.where(t[:, None] > 0, ok_temp, ok_greedy)
+    acc = jnp.cumprod(ok.astype(jnp.int32), axis=1)  # prefix acceptance
+    n_acc = (1 + jnp.sum(acc, axis=1)).astype(jnp.int32)
+    carry = jnp.take_along_axis(
+        target_logits, (n_acc - 1)[:, None, None], axis=1
+    )[:, 0]  # [B, V] target logits after the last accepted token
+    # temperature rows that rejected a proposal carry the residual of the
+    # rejection position instead; scaling the log-residual by t makes the
+    # next round's logits/t softmax reproduce max(p - q, 0) exactly
+    residual = jnp.maximum(p - q, 0.0)
+    rej = jnp.minimum(n_acc - 1, k - 2)  # clamp for fully accepted rows
+    res_at = jnp.take_along_axis(residual, rej[:, None, None], axis=1)[:, 0]
+    res_logits = t[:, None] * jnp.log(res_at + 1e-20)
+    rejected = (t > 0) & (n_acc < k)
+    carry = jnp.where(rejected[:, None], res_logits, carry)
+    return n_acc, carry, key
+
+
+def emit_speculative(fed, n_acc, buf, active, emitted, maxnew, eos):
+    """Bulk-commit an accepted window into the output buffers.
+
+    Emits ``fed[:, i]`` for each row while ``i < n_acc`` and the row is
+    still live, replaying the one-token emit semantics position by
+    position (K unrolled in-trace steps): EOS is a stop signal — never
+    written to ``buf``, never counted — and the token that brings
+    ``emitted`` to ``maxnew`` is emitted and then ends the row, exactly
+    like the non-speculative step's post-emit budget check.
+
+    Returns ``(buf, emitted, committed [B] i32, still [B] bool)`` where
+    ``committed`` counts tokens emitted from this window (the caller's
+    position advance) and ``still`` flags rows that survive the round.
+    """
+    b, k = fed.shape
+    cap = buf.shape[1]
+    rows = jnp.arange(b)
+    alive = active
+    committed = jnp.zeros((b,), jnp.int32)
+    for i in range(k):
+        tok = fed[:, i]
+        ok = alive & (i < n_acc)
+        hit = ok & (tok == eos)
+        emit = ok & ~hit
+        idx = jnp.where(emit, emitted, cap)
+        buf = buf.at[rows, idx].set(tok, mode="drop")
+        emitted = emitted + emit.astype(jnp.int32)
+        committed = committed + emit.astype(jnp.int32)
+        alive = alive & ~hit & ~(emit & (emitted >= maxnew))
+    return buf, emitted, committed, alive

@@ -40,6 +40,14 @@ With prefix caching on the allocator, admission routes through
 uncached remainder of its block need (its longest cached block-aligned
 prompt prefix rides shared, refcounted blocks), and the allocator may
 evict refcount-0 cached blocks rather than defer.
+
+``spec_pad=K`` (the speculative engine) widens every charge by K
+positions of draft scratch — the last verify window writes up to K
+positions past the budget — and charges the decode-reserve watermark in
+units of K-token windows. ``victim_policy="cost"`` replaces
+youngest-first victim selection with blocks-freed per
+generated-token-discarded scoring (the oldest admission stays exempt, so
+the no-starvation guarantee survives).
 """
 
 from __future__ import annotations
@@ -59,17 +67,30 @@ class Scheduler:
         allocator: Optional[BlockAllocator] = None,
         on_demand: bool = False,
         decode_reserve: int = 0,
+        spec_pad: int = 0,  # speculative draft-window length K: charging
+        # covers K positions of draft scratch past the budget, and the
+        # decode-reserve watermark is charged in units of K-token windows
+        victim_policy: str = "youngest",  # "youngest" | "cost"
     ):
         if on_demand and allocator is None:
             raise ValueError("on-demand admission needs a BlockAllocator")
         if decode_reserve < 0:
             raise ValueError("decode_reserve must be >= 0")
+        if spec_pad < 0:
+            raise ValueError("spec_pad must be >= 0")
+        if victim_policy not in ("youngest", "cost"):
+            raise ValueError(
+                f"unknown victim_policy {victim_policy!r} "
+                "(expected 'youngest' or 'cost')"
+            )
         self.n_slots = n_slots
         self.max_len = max_len
         self.prefill_bucket = prefill_bucket
         self.allocator = allocator
         self.on_demand = on_demand
         self.decode_reserve = decode_reserve
+        self.spec_pad = spec_pad
+        self.victim_policy = victim_policy
         self.queue = RequestQueue()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.assignments: Dict[int, int] = {}  # rid -> slot (last wins)
@@ -111,11 +132,13 @@ class Scheduler:
 
     def block_need(self, req: Request) -> int:
         """Worst-case block count for a request: covers the generation
-        budget and the (possibly longer) bucketed prefill write."""
+        budget, the (possibly longer) bucketed prefill write, and — in
+        speculative mode — the up-to-K positions of draft scratch the
+        last verify window can write past the budget."""
         assert self.allocator is not None
         plen = len(req.serving_prompt)
         need_pos = max(plen + req.remaining_new_tokens, self.bucket_len(plen))
-        return blocks_needed(need_pos, self.allocator.block_size)
+        return blocks_needed(need_pos + self.spec_pad, self.allocator.block_size)
 
     def prefill_need(self, req: Request) -> int:
         """On-demand block count at admission: just the prompt. Bucketed
@@ -140,8 +163,13 @@ class Scheduler:
                 break
             # the decode-reserve watermark only applies while other slots
             # are running (they are what grows into the headroom); an
-            # idle pool admits anything that fits outright
+            # idle pool admits anything that fits outright. Speculative
+            # decode grows in K-token draft windows, so the reserve is
+            # charged in units of K: each reserve unit covers the blocks
+            # one window's growth can claim.
             reserve = self.decode_reserve if self.running() > 0 else 0
+            if reserve and self.spec_pad and self.allocator is not None:
+                reserve *= blocks_needed(self.spec_pad, self.allocator.block_size)
             if self.allocator is not None and self.allocator.prefix_cache:
                 sp = req.serving_prompt
                 if self.on_demand:
@@ -149,12 +177,12 @@ class Scheduler:
                         slot, sp, len(sp), reserve=reserve
                     )
                 else:
-                    total = len(sp) + req.remaining_new_tokens
+                    total = len(sp) + req.remaining_new_tokens + self.spec_pad
                     info = self.allocator.admit_request(
                         slot,
                         sp,
                         total,
-                        n_pos_cold=max(total, self.bucket_len(len(sp))),
+                        n_pos_cold=max(total, self.bucket_len(len(sp)) + self.spec_pad),
                     )
                 if info is None:
                     break
@@ -177,25 +205,60 @@ class Scheduler:
             admitted.append((slot, req))
         return admitted
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int, tokens: Optional[Sequence[int]] = None) -> None:
+        """Free a finished slot. With the prefix cache and ``tokens`` (the
+        request's committed chain: prompt + output), the slot's full
+        blocks demote to cached index entries instead of free blocks, so
+        a multi-turn follow-up whose prompt extends this conversation
+        re-prefills only its new suffix."""
         req = self.slots[slot]
         if req is not None:
             req.state = RequestState.FINISHED
         self.slots[slot] = None
         self.slot_seq.pop(slot, None)
         if self.allocator is not None:
-            self.allocator.release(slot)
+            if tokens is not None and self.allocator.prefix_cache:
+                self.allocator.release_cached(slot, tokens)
+            else:
+                self.allocator.release(slot)
 
     # -- preemption -------------------------------------------------------
 
-    def pick_victim(self) -> Optional[int]:
-        """Youngest-first victim selection: the running slot admitted
-        most recently. Preempting the youngest discards the least
-        completed work and guarantees the oldest request always makes
-        progress (no starvation)."""
+    def pick_victim(
+        self, generated: Optional[Dict[int, int]] = None
+    ) -> Optional[int]:
+        """Choose the running slot to evict.
+
+        ``"youngest"`` (default): the slot admitted most recently —
+        discards the least completed work and guarantees the oldest
+        request always makes progress (no starvation).
+
+        ``"cost"``: the slot with the best blocks-freed per
+        generated-token-discarded ratio (``generated`` maps slot to its
+        generated-so-far count; a missing entry reads as 0) — evictions
+        prefer slots that return a lot of memory at little re-prefill
+        cost. The oldest-admitted slot is exempt while anything else is
+        running, which preserves the no-starvation guarantee; ties break
+        youngest-first."""
         if not self.slot_seq:
             return None
-        return max(self.slot_seq, key=self.slot_seq.__getitem__)
+        youngest = max(self.slot_seq, key=self.slot_seq.__getitem__)
+        if self.victim_policy == "youngest" or len(self.slot_seq) == 1:
+            return youngest
+        gen = generated or {}
+        oldest = min(self.slot_seq, key=self.slot_seq.__getitem__)
+
+        def score(slot: int) -> float:
+            freed = (
+                len(self.allocator.blocks_of(slot))
+                if self.allocator is not None
+                else 1
+            )
+            return freed / (1.0 + gen.get(slot, 0))
+
+        candidates = [s for s in self.slot_seq if s != oldest]
+        # best score, ties broken youngest-first (least work lost)
+        return max(candidates, key=lambda s: (score(s), self.slot_seq[s]))
 
     def preempt(self, slot: int, new_tokens: Sequence[int]) -> Request:
         """Evict the request running in ``slot``: fold ``new_tokens``

@@ -1,0 +1,174 @@
+"""Self-speculative decoding: the SLiM backbone as a free draft model.
+
+SLiM decomposes every weight into a quantized 2:4-sparse *backbone* plus a
+low-rank *adapter* that compensates the compression error. That structure
+is a draft model for free: the backbone without the adapter is a strictly
+cheaper forward pass of the *same* weights — no second checkpoint, no
+separate draft KV cache, no extra block-pool pressure. Per round the
+engine
+
+1. **drafts** K-1 tokens with the adapter path disabled
+   (``decode_step(skip_adapters=True)`` — ``SlimLinear`` layers compute
+   only the backbone matmul). Draft K/V writes land in the slot's own
+   pool blocks at the drafted positions; they are provisional, not
+   trusted;
+2. **verifies** the whole K-token window (the carry-committed token plus
+   the K-1 proposals) in one full-model pass: ``transformer.verify_step``
+   is the PR-3 offset-prefill generalized to per-slot position vectors
+   and per-position logits, so every slot scores its own window at its
+   own depth in a single dispatch. The verify pass re-writes the window's
+   K/V with full-model values — whatever gets committed was computed by
+   the full model, which is what makes greedy speculative decoding
+   token-exact;
+3. **accepts** by standard speculative rejection sampling
+   (``sampling.speculative_accept``; greedy rows reduce to the longest
+   matching prefix) and **commits in bulk**
+   (``sampling.emit_speculative``): up to K tokens per row land in the
+   on-device output buffers, positions advance by the committed count,
+   and the carry logits become the full-model distribution after the last
+   accepted token — so the next round's first token is always exact.
+
+Rejected draft positions need no explicit rollback: their pool entries
+hold positions strictly greater than every committed position, so causal
+masking hides them until the next round's writes overwrite them, and they
+can never fall inside a *full* committed block — the only thing the
+prefix cache ever registers.
+
+On a dense (uncompressed) model ``skip_adapters`` is a no-op, the draft
+*is* the target, and the scheme degenerates to exact lookahead decoding —
+every proposal is accepted, which makes dense runs a useful calibration
+ceiling for the acceptance-rate metric.
+
+The engine entry point is ``ContinuousEngine(speculative=K)``;
+``SpeculativeEngine`` is a thin alias that makes the mode explicit. It
+composes with the prefix cache (committed blocks hold full-model K/V) and
+preemption (a victim's accepted tokens fold into the resume prompt like
+any others; the scheduler charges the decode-reserve watermark in units
+of K-token draft windows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.sampling import (
+    draw_tokens,
+    emit_speculative,
+    speculative_accept,
+)
+
+# Unrolling the per-period layer scan inside the round is what lets XLA
+# CSE one weight-decompression across all K forwards (see
+# ``build_spec_round``); past this many periods the unrolled HLO gets big
+# enough that compile time wins over the dequant sharing, so deep stacks
+# keep the scan.
+UNROLL_PERIOD_LIMIT = 16
+
+
+def build_spec_round(
+    cfg: ModelConfig, k: int, eos: int, unroll: Optional[bool] = None,
+    greedy: bool = False,
+):
+    """Build the jitted speculative round: K-1 backbone draft steps, one
+    batched full-model verify, rejection-sampled bulk commit — a single
+    dispatch per round.
+
+    The round is traced with the layer scan *unrolled* (for stacks up to
+    ``UNROLL_PERIOD_LIMIT`` periods; override with ``unroll``). The round
+    program contains K forward passes over the same compressed weights,
+    and the weight decompression (int4 unpack + 2:4 expand + dequant) is
+    loop-invariant across them — but ``lax.scan`` walls each forward's
+    layers into separate loops XLA cannot share across. Unrolled, common
+    subexpression elimination collapses the K identical dequants into
+    one, which roughly halves the round's cost for compressed models on
+    backends where dequant dominates (the measured K=4 round drops ~2x
+    on CPU). The non-speculative step gains nothing from unrolling — one
+    forward per program has nothing to share — so this is a win the
+    round *structure* unlocks.
+
+    The returned function maps
+    ``(params, cache, logits, pos, active, emitted, maxnew, buf, key,
+    temps, table, counters)`` to
+    ``(cache, logits, pos, active, emitted, buf, key, counters)`` with the
+    same carry conventions as the non-speculative ``_step``; ``counters``
+    is a length-2 int32 vector accumulating (accepted, proposed) draft
+    counts for the acceptance-rate metric.
+
+    ``greedy=True`` builds the all-greedy variant the engine selects when
+    every request in a trace is temperature-0: argmax drafting and
+    longest-prefix acceptance with no RNG at all — the categorical/gumbel
+    draws are a measurable slice of an otherwise matmul-only round.
+    """
+    assert k >= 2, "a speculative round needs at least one draft proposal"
+    if unroll is None:
+        unroll = cfg.n_periods <= UNROLL_PERIOD_LIMIT
+    if unroll and not cfg.unroll_layers:
+        cfg = dataclasses.replace(cfg, unroll_layers=True)
+
+    def round_fn(
+        params, cache, logits, pos, active, emitted, maxnew, buf, key,
+        temps, table, counters,
+    ):
+        # window token 0: drawn from the carry logits — full-model, so it
+        # is the token the non-speculative engine would emit next
+        if greedy:
+            cur = draw_tokens(logits, temps, key, greedy_only=True)
+        else:
+            key, sk = jax.random.split(key)
+            cur = draw_tokens(logits, temps, sk)
+        fed = [cur]
+        dlogits = []
+        # K-1 chained draft steps: backbone-only forward, provisional K/V
+        # writes at pos + i - 1 through the slot's own table row
+        for i in range(1, k):
+            d, cache = T.decode_step(
+                params, cfg, cache, cur[:, None], pos + (i - 1),
+                block_table=table, skip_adapters=True,
+            )
+            if greedy:
+                cur = draw_tokens(d, temps, key, greedy_only=True)
+            else:
+                key, sk = jax.random.split(key)
+                cur = draw_tokens(d, temps, sk)
+            fed.append(cur)
+            dlogits.append(d)
+        fed = jnp.stack(fed, axis=1)  # [B, K]
+        dstack = jnp.stack(dlogits, axis=1)  # [B, K-1, V]
+        # one full-model pass scores the whole window for every slot and
+        # overwrites the drafts' provisional K/V with full-model values
+        tgt, cache = T.verify_step(params, cfg, cache, fed, pos, table)
+        n_acc, carry, key = speculative_accept(
+            fed, dstack, tgt, temps, key, greedy=greedy
+        )
+        buf, emitted, committed, still = emit_speculative(
+            fed, n_acc, buf, active, emitted, maxnew, eos
+        )
+        # pos advances by the committed count for every row — finished
+        # rows freeze at their committed length, so any later (ignored)
+        # writes they make stay strictly beyond their committed chain
+        pos = pos + committed
+        logits = jnp.where(active[:, None], carry, logits)
+        counters = counters.at[0].add(jnp.sum(jnp.where(active, n_acc - 1, 0)))
+        counters = counters.at[1].add(
+            jnp.sum(active.astype(jnp.int32)) * (k - 1)
+        )
+        return cache, logits, pos, still, emitted, buf, key, counters
+
+    return jax.jit(round_fn, donate_argnums=(1,))
+
+
+class SpeculativeEngine(ContinuousEngine):
+    """``ContinuousEngine`` with self-speculative decoding always on —
+    ``speculative`` defaults to 4 and must be >= 2. Purely a naming
+    convenience: ``ContinuousEngine(speculative=K)`` is the same engine."""
+
+    def __init__(self, params, cfg, speculative: int = 4, **kw):
+        if speculative < 2:
+            raise ValueError("SpeculativeEngine needs speculative >= 2")
+        super().__init__(params, cfg, speculative=speculative, **kw)

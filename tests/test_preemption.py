@@ -211,6 +211,44 @@ class TestSchedulerOnDemand:
         sched.release(1)
         assert sched.pick_victim() == 0
 
+    def test_cost_victim_frees_most_blocks_per_token_discarded(self):
+        # 3 slots: slot 1 owns many blocks but has generated little (best
+        # ratio), slot 2 owns few with lots of work done (worst). Cost
+        # policy picks slot 1; youngest would have picked slot 2.
+        alloc = BlockAllocator(n_blocks=16, block_size=4)
+        sched = Scheduler(
+            n_slots=3, max_len=64, allocator=alloc, on_demand=True, victim_policy="cost"
+        )
+        for i, plen in [(0, 8), (1, 24), (2, 4)]:
+            sched.submit(Request(i, [1] * plen, arrival=0.0, max_new_tokens=8))
+        sched.admit(0.0)  # blocks owned: slot0=2, slot1=6, slot2=1
+        gen = {0: 4, 1: 1, 2: 7}
+        assert sched.pick_victim(gen) == 1
+        # missing generated counts read as zero work discarded
+        assert sched.pick_victim({}) == 1
+        alloc.check()
+
+    def test_cost_victim_exempts_oldest(self):
+        # the oldest-admitted slot never gets evicted while anything else
+        # runs — the no-starvation guarantee youngest-first gives for free
+        alloc = BlockAllocator(n_blocks=16, block_size=4)
+        sched = Scheduler(
+            n_slots=2, max_len=64, allocator=alloc, on_demand=True, victim_policy="cost"
+        )
+        # the oldest admission has the best cost score (most blocks, no
+        # generated tokens) but must still be exempt
+        for i, plen in [(0, 24), (1, 4)]:
+            sched.submit(Request(i, [1] * plen, arrival=0.0, max_new_tokens=8))
+        sched.admit(0.0)
+        assert sched.pick_victim({0: 0, 1: 9}) == 1
+        sched.release(1)
+        # a lone running slot is its own victim of last resort
+        assert sched.pick_victim({0: 0}) == 0
+
+    def test_unknown_victim_policy_rejected(self):
+        with pytest.raises(ValueError):
+            Scheduler(n_slots=1, max_len=32, victim_policy="oldest")
+
     def test_preempt_folds_tokens_and_requeues_ahead(self):
         sched, alloc = self._sched()
         r0 = Request(0, [1] * 8, arrival=0.0, max_new_tokens=8)
@@ -295,12 +333,17 @@ class TestPreemptionEngine:
         assert res.metrics["preemptions"] >= 1
         _assert_solo_exact(cp, cfg, res)
 
-    def test_no_starvation_and_state_machine(self, model):
-        """Every request — the evicted ones included — completes, and a
-        preempted request's resume picks up exactly where it stopped."""
+    @pytest.mark.parametrize("victim_policy", ["youngest", "cost"])
+    def test_no_starvation_and_state_machine(self, model, victim_policy):
+        """Every request — the evicted ones included — completes under
+        either victim policy (cost exempts the oldest admission, so it
+        can't starve anyone either), and a preempted request's resume
+        picks up exactly where it stopped."""
         cfg, params = model
         reqs = _requests(cfg, 5, plen=10, max_new=10)
-        res = self._tight_engine(params, cfg).run(reqs, sync_every=2)
+        res = self._tight_engine(params, cfg, victim_policy=victim_policy).run(
+            reqs, sync_every=2
+        )
         evicted = [r for r in res.requests if r.n_preemptions > 0]
         assert evicted, "the tight pool should have forced an eviction"
         for r in res.requests:

@@ -168,6 +168,86 @@ class TestPrefixAllocator:
         assert a.available() == 6
         a.check()
 
+    def test_index_cap_keeps_a_matchable_prefix(self):
+        # cap of 2: registering a 4-block chain keeps the 2-entry *head*
+        # — the cap drops chain tails (and skips entries whose prefix is
+        # gone), so everything that survives in the index stays matchable
+        a = BlockAllocator(
+            n_blocks=16, block_size=BS, prefix_cache=True,
+            prefix_cache_max_entries=2,
+        )
+        toks = list(range(4 * BS))
+        a.admit_request(0, toks, n_pos=len(toks))
+        assert len(a.match_prefix(toks)) == 2
+        assert a.index_evictions == 1  # block 2's entry; block 3's skipped
+        a.check()
+        a.release(0)
+        # only the 2 still-indexed blocks demote to cached; the unindexed
+        # ones went straight back to the free list
+        assert a.n_evictable() == 2
+        a.check()
+
+    def test_index_cap_frees_evictable_blocks_on_overflow(self):
+        # an entry evicted from the index while its block is refcount-0
+        # cached must move that block to the free list immediately
+        a = BlockAllocator(
+            n_blocks=16, block_size=BS, prefix_cache=True,
+            prefix_cache_max_entries=3,
+        )
+        a.admit_request(0, list(range(2 * BS)), n_pos=2 * BS)
+        a.release(0)  # 2 cached entries, refcount 0
+        free_before = a.available() - a.n_evictable()
+        a.admit_request(1, [7] * (2 * BS), n_pos=2 * BS)  # 2 new entries
+        assert a.index_evictions == 1  # cap 3: the oldest chain lost its tail
+        assert a.n_evictable() == 1
+        assert a.available() - a.n_evictable() == free_before - 2 + 1
+        # the surviving entry is the old chain's head — still matchable
+        assert len(a.match_prefix(list(range(2 * BS)))) == 1
+        a.check()
+
+    def test_index_ttl_expires_old_entries(self):
+        a = BlockAllocator(n_blocks=16, block_size=BS, prefix_cache=True)
+        a.tick(0.0)
+        a.admit_request(0, list(range(2 * BS)), n_pos=2 * BS)
+        a.release(0)  # 2 cached entries stamped at t=0
+        a.tick(5.0)
+        a.admit_request(1, [7] * (2 * BS), n_pos=2 * BS)  # stamped at t=5
+        assert a.expire_index(4.0) == 2  # the t=0 entries age out
+        assert a.index_evictions == 2
+        assert a.n_evictable() == 0  # expired refcount-0 blocks went free
+        assert a.match_prefix(list(range(2 * BS))) == []
+        assert len(a.match_prefix([7] * (2 * BS))) == 2  # fresh survive
+        assert a.expire_index(4.0) == 0  # idempotent below the cutoff
+        a.check()
+
+    def test_deep_chain_ttl_drop_is_iterative(self):
+        # a 2000-entry chain is one parent->child line; the TTL cascade
+        # must not recurse chain-length deep (RecursionError at ~1000)
+        a = BlockAllocator(n_blocks=2100, block_size=1, prefix_cache=True)
+        a.admit_request(0, list(range(2000)), n_pos=2000)
+        a.tick(1.0)
+        a.release(0)
+        assert a.expire_index(2.0) == 2000
+        assert a.n_evictable() == 0
+        a.check()
+
+    def test_finished_release_registers_chain(self):
+        # release_cached (the finished-request path) demotes the full
+        # blocks of prompt + output to cached entries a follow-up turn can
+        # match — same machinery as preemption demotion
+        a = BlockAllocator(n_blocks=16, block_size=BS, prefix_cache=True)
+        prompt = list(range(BS + 4))
+        a.admit_request(0, prompt, n_pos=len(prompt) + BS)
+        output = [3] * (BS - 4 + 2)  # chain = 2 full blocks + 2 spare
+        chain = prompt + output
+        a.release_cached(0, chain)
+        assert len(a.match_prefix(chain)) == 2
+        assert a.n_evictable() == 2
+        a.check()
+        info = a.admit_request(1, chain + [9] * 4, n_pos=len(chain) + 8)
+        assert info is not None and info.cached_len == 2 * BS
+        a.check()
+
 
 # ---------------------------------------------------------------------------
 # Engine: token-exactness vs cold prefill
@@ -288,6 +368,48 @@ class TestPrefixEngine:
         )
         assert warm.metrics["peak_concurrency"] == 4
         assert warm.metrics["peak_blocks_in_use"] <= 8
+
+    def test_multi_turn_follow_up_rides_finished_blocks(self, model):
+        """A *finished* request's full blocks — generated tokens included —
+        demote to cached entries at release, so a follow-up turn whose
+        prompt extends prompt + output re-prefills only its new suffix,
+        token-exactly against a cold run."""
+        cfg, params = model
+        prompt = [
+            int(t) for t in
+            jax.random.randint(jax.random.PRNGKey(11), (12,), 0, cfg.vocab_size)
+        ]
+        kw = dict(n_slots=2, max_len=MAX_LEN, block_size=BS,
+                  prefix_cache=True, check_invariants=True)
+        eng = ContinuousEngine(params, cfg, **kw)
+        # solo turn 1 learns the output *and* warms the prefill/decode jit
+        # caches on this engine, so in the replay below turn 1 finishes
+        # (and releases its blocks) well before the follow-up arrives
+        first = eng.run(
+            [Request(0, list(prompt), arrival=0.0, max_new_tokens=8)],
+            sync_every=2,
+        )
+        out1 = first.requests[0].output
+        follow = prompt + out1 + [5, 9]
+        # replay turn 1 plus the follow-up through one engine run; the
+        # follow-up arrives only after turn 1 has finished and released
+        reqs = [
+            Request(0, list(prompt), arrival=0.0, max_new_tokens=8),
+            Request(1, list(follow), arrival=0.6, max_new_tokens=6),
+        ]
+        res = eng.run(reqs, sync_every=2)
+        m = res.metrics
+        chain_blocks = (len(prompt) + len(out1)) // BS
+        assert m["prefix_hits"] >= 1
+        assert m["cached_prompt_tokens"] >= chain_blocks * BS
+        cold = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=BS
+        ).run(
+            [Request(7, list(follow), arrival=0.0, max_new_tokens=6)],
+            sync_every=2,
+        )
+        assert res.requests[1].output == cold.requests[0].output
+        assert res.requests[0].output == out1
 
     def test_rejects_non_attention_arch(self):
         base = get_config("jamba-v0.1-52b", reduced=True)

@@ -1,0 +1,469 @@
+"""Self-speculative decoding: SLiM's backbone as a free draft model.
+
+Covers the four layers of the subsystem:
+
+* ``skip_lora`` / ``skip_adapters`` — the backbone-only forward drops the
+  low-rank correction (XLA and kernel paths agree) and is a no-op on
+  dense weights.
+* ``transformer.verify_step`` / ``verify_slot`` — one offset-prefill pass
+  returns per-position logits that bit-match one-by-one decode steps
+  against the same paged pool.
+* ``sampling.speculative_accept`` / ``emit_speculative`` — greedy rows
+  accept the longest matching prefix; temperature rows implement the
+  classic rejection test whose committed-token distribution matches the
+  target model's (verified empirically on a toy vocab); the bulk commit
+  replays the one-token EOS/budget semantics.
+* ``ContinuousEngine(speculative=K)`` — greedy outputs are token-exact
+  against the non-speculative engine for dense, SLiM-compressed and
+  kv_quant archs, including under forced preemption and composed with
+  the prefix cache; a dense model's acceptance rate is exactly 1.0
+  (drafting degenerates to lookahead).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core.compressed import (
+    SlimLinear,
+    dequantize_base,
+    slim_linear_apply,
+)
+from repro.core.pipeline import CompressionConfig
+from repro.data import SyntheticLMConfig, calibration_batch
+from repro.kernels.ops import slim_linear_op
+from repro.models import transformer as T
+from repro.serving import ContinuousEngine, Request, SpeculativeEngine
+from repro.serving.sampling import (
+    draw_tokens,
+    emit_speculative,
+    sample_and_emit,
+    speculative_accept,
+)
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("slim-tiny")
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=384, vocab_size=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def compressed(model):
+    cfg, params = model
+    from repro.models.compress import compress_model
+
+    dcfg = SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0
+    )
+    calib = calibration_batch(dcfg, n_samples=4)
+    cp, _ = compress_model(
+        params, cfg, calib,
+        CompressionConfig(adapter="slim", rank=16, quantize_adapters=True),
+    )
+    return cp
+
+
+def _slim_leaf(compressed) -> SlimLinear:
+    """One unstacked SlimLinear (first period's wq) from the model tree."""
+    sl = compressed["blocks"]["layer_0"]["wq"]
+    assert isinstance(sl, SlimLinear)
+    return jax.tree.map(lambda a: a[0], sl)
+
+
+def _requests(cfg, n, plen, max_new, seed=7):
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed), (n, plen), 0, cfg.vocab_size
+    )
+    return [
+        Request(rid=i, prompt=[int(t) for t in prompts[i]], arrival=0.0,
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# skip_lora: the backbone-only forward
+# ---------------------------------------------------------------------------
+
+
+class TestSkipLora:
+    def test_skip_lora_is_backbone_only(self, compressed):
+        sl = _slim_leaf(compressed)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, sl.d_in), jnp.float32)
+        backbone = slim_linear_apply(sl, x, skip_lora=True)
+        full = slim_linear_apply(sl, x)
+        # the backbone is exactly x @ W_hat (with AWQ activation scaling)
+        xs = x if sl.inv_act_scale is None else x * sl.inv_act_scale
+        want = jnp.dot(xs, dequantize_base(sl))
+        np.testing.assert_allclose(backbone, want, rtol=1e-6)
+        # and the adapters really contribute: skipping them changes outputs
+        assert not np.allclose(backbone, full)
+
+    def test_kernel_fast_path_matches_xla_backbone(self, compressed):
+        sl = _slim_leaf(compressed)
+        x = jax.random.normal(jax.random.PRNGKey(2), (8, sl.d_in), jnp.float32)
+        ker = slim_linear_op(sl, x, skip_lora=True)
+        xla = slim_linear_apply(sl, x, skip_lora=True)
+        np.testing.assert_allclose(ker, xla, rtol=1e-5, atol=1e-5)
+
+    def test_skip_adapters_scope(self, compressed):
+        from repro.models import layers as L
+
+        sl = _slim_leaf(compressed)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 4, sl.d_in))
+        dense = jax.random.normal(jax.random.PRNGKey(4), (sl.d_in, 16))
+        with L.skip_adapters():
+            in_scope = L.linear(sl, x)
+            dense_in = L.linear(dense, x)
+        # SlimLinear loses its correction inside the scope...
+        np.testing.assert_allclose(
+            in_scope, slim_linear_apply(
+                sl, x.reshape(-1, sl.d_in), skip_lora=True
+            ).reshape(in_scope.shape).astype(in_scope.dtype), rtol=1e-5,
+        )
+        assert not np.allclose(in_scope, L.linear(sl, x))
+        # ...dense weights are untouched, and the scope restores cleanly
+        np.testing.assert_array_equal(dense_in, L.linear(dense, x))
+
+
+# ---------------------------------------------------------------------------
+# verify_step / verify_slot: per-position logits == one-by-one decode
+# ---------------------------------------------------------------------------
+
+
+class TestVerify:
+    def _paged_setup(self, cfg, params, plen=10, bs=4):
+        from repro.serving.block_pool import TRASH_BLOCK
+
+        n_blocks = 16
+        cache = T.init_cache(cfg, 2, MAX_LEN, bs, n_blocks)
+        table = np.full((2, MAX_LEN // bs), TRASH_BLOCK, np.int32)
+        table[0, : MAX_LEN // bs] = np.arange(2, 2 + MAX_LEN // bs)
+        table = jnp.asarray(table)
+        toks = jax.random.randint(jax.random.PRNGKey(5), (1, plen), 0, cfg.vocab_size)
+        logits, cache = T.prefill_slot(
+            params, cfg, cache, {"tokens": toks}, 0, MAX_LEN,
+            block_table=table,
+        )
+        return cache, table, logits
+
+    @pytest.mark.parametrize("kv_quant", [False, True])
+    def test_verify_matches_decode_steps(self, model, kv_quant):
+        cfg, params = model
+        if kv_quant:
+            cfg = dataclasses.replace(cfg, kv_quant=True)
+        plen, k = 10, 4
+        cache, table, carry = self._paged_setup(cfg, params, plen)
+
+        # reference: feed the greedy continuation one token at a time
+        ref_logits, toks = [], []
+        cur = int(jnp.argmax(carry[0]))
+        c = cache
+        for i in range(k):
+            toks.append(cur)
+            pos = jnp.asarray([plen + i, 0], jnp.int32)
+            step = jnp.asarray([cur, 0], jnp.int32)[:, None]
+            lg, c = T.decode_step(params, cfg, c, step, pos, block_table=table)
+            ref_logits.append(lg[0])
+            cur = int(jnp.argmax(lg[0]))
+
+        # verify: score the whole window in one pass on a fresh cache
+        cache2, table2, _ = self._paged_setup(cfg, params, plen)
+        window = jnp.asarray([toks, [0] * k], jnp.int32)
+        vlogits, cache2 = T.verify_step(
+            params, cfg, cache2, window, jnp.asarray([plen, 0], jnp.int32),
+            table2,
+        )
+        # the batched s=K einsums reassociate float reductions, so logits
+        # agree to fp tolerance rather than bit-for-bit; what greedy
+        # exactness needs — and what the engine end-to-end tests pin — is
+        # that the *decisions* (argmax) agree at every window position
+        for i in range(k):
+            np.testing.assert_allclose(
+                np.asarray(vlogits[0, i]), np.asarray(ref_logits[i]),
+                rtol=2e-5, atol=2e-5,
+                err_msg=f"window position {i} diverged from decode",
+            )
+            assert int(jnp.argmax(vlogits[0, i])) == int(
+                jnp.argmax(ref_logits[i])
+            )
+
+    def test_verify_slot_matches_verify_step(self, model):
+        cfg, params = model
+        plen, k = 10, 3
+        cache, table, carry = self._paged_setup(cfg, params, plen)
+        toks = jax.random.randint(jax.random.PRNGKey(6), (1, k), 0, cfg.vocab_size)
+        cache2, table2, _ = self._paged_setup(cfg, params, plen)
+        batched, _ = T.verify_step(
+            params, cfg, cache,
+            jnp.concatenate([toks, jnp.zeros((1, k), jnp.int32)]),
+            jnp.asarray([plen, 0], jnp.int32), table,
+        )
+        single, _ = T.verify_slot(
+            params, cfg, cache2, {"tokens": toks}, 0, table2, plen
+        )
+        np.testing.assert_allclose(
+            np.asarray(single[0]), np.asarray(batched[0]), rtol=2e-5, atol=2e-5
+        )
+
+    def test_rejects_non_attention_arch(self):
+        base = get_config("jamba-v0.1-52b", reduced=True)
+        from repro.models.config import LayerSpec
+
+        cfg = dataclasses.replace(
+            base, name="hybrid-spec-test", n_layers=2,
+            period=(LayerSpec("ssm"), LayerSpec("attn")),
+        )
+        assert not T.supports_speculative(cfg)
+        with pytest.raises(ValueError):
+            ContinuousEngine(
+                {}, cfg, n_slots=1, max_len=32, block_size=8, speculative=4
+            )
+
+    def test_rejects_contiguous_and_k1(self, model):
+        cfg, _ = model
+        with pytest.raises(ValueError):
+            ContinuousEngine({}, cfg, n_slots=1, max_len=MAX_LEN, speculative=4)
+        with pytest.raises(ValueError):
+            ContinuousEngine(
+                {}, cfg, n_slots=1, max_len=MAX_LEN, block_size=8,
+                speculative=1,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Sampling: rejection acceptance + bulk emit semantics (property tests)
+# ---------------------------------------------------------------------------
+
+
+class TestSpeculativeSampling:
+    def test_greedy_accepts_longest_matching_prefix(self):
+        v, k = 8, 4
+        key = jax.random.PRNGKey(0)
+        tgt = jax.random.normal(key, (3, k, v))
+        drf = jax.random.normal(jax.random.fold_in(key, 1), (3, k - 1, v))
+        want = jnp.argmax(tgt, axis=-1)  # greedy target continuation
+        fed = np.asarray(want)
+        fed = np.concatenate([np.zeros((3, 1), np.int64), fed[:, :-1]], axis=1)
+        # row 0: all proposals match; row 1: mismatch at window pos 2;
+        # row 2: mismatch at the first proposal
+        fed[1, 2] = (fed[1, 2] + 1) % v
+        fed[2, 1] = (fed[2, 1] + 1) % v
+        n_acc, carry, _ = speculative_accept(
+            jnp.asarray(fed, jnp.int32), drf, tgt,
+            jnp.zeros((3,)), jax.random.PRNGKey(7),
+        )
+        assert list(np.asarray(n_acc)) == [k, 2, 1]
+        # the carry is the target distribution after the last accepted token
+        np.testing.assert_array_equal(np.asarray(carry[0]), np.asarray(tgt[0, k - 1]))
+        np.testing.assert_array_equal(np.asarray(carry[1]), np.asarray(tgt[1, 1]))
+        np.testing.assert_array_equal(np.asarray(carry[2]), np.asarray(tgt[2, 0]))
+
+    def test_rejection_sampler_matches_target_distribution(self):
+        """The committed token at a drafted position — the proposal when
+        accepted, else the next round's draw from the residual carry —
+        must be distributed exactly like a draw from the target model."""
+        v = 5
+        key = jax.random.PRNGKey(42)
+        tgt_logits = jnp.asarray([0.9, -0.3, 0.4, -1.2, 0.1], jnp.float32)
+        drf_logits = jnp.asarray([-0.5, 0.8, -0.1, 0.3, -0.7], jnp.float32)
+        temps = jnp.ones((1,), jnp.float32)
+        tgt = jnp.tile(tgt_logits, (1, 2, 1))  # [B=1, K=2, V]
+        drf = jnp.tile(drf_logits, (1, 1, 1))  # [B=1, K-1=1, V]
+        counts = np.zeros(v)
+        trials = 3000
+        for i in range(trials):
+            key, k1, k2 = jax.random.split(key, 3)
+            prop = draw_tokens(drf[:, 0], temps, k1)
+            fed = jnp.stack([jnp.zeros((1,), jnp.int32), prop], axis=1)
+            n_acc, carry, _ = speculative_accept(
+                fed, drf, tgt, temps, k2
+            )
+            if int(n_acc[0]) == 2:
+                tok = int(prop[0])
+            else:  # rejected: the next round draws from the residual carry
+                key, k3 = jax.random.split(key)
+                tok = int(draw_tokens(carry, temps, k3)[0])
+            counts[tok] += 1
+        want = np.asarray(jax.nn.softmax(tgt_logits))
+        got = counts / trials
+        assert np.abs(got - want).sum() < 0.08, (got, want)
+
+    def test_emit_speculative_stops_at_eos_and_budget(self):
+        eos = 9
+        fed = jnp.asarray(
+            [
+                [1, 2, 3, 4],  # all accepted, budget cuts after 2
+                [5, eos, 6, 7],  # EOS at window pos 1: emit 1, finish
+                [8, 1, 2, 3],  # rejection: only 2 accepted
+                [4, 5, 6, 7],  # inactive row: nothing happens
+            ],
+            jnp.int32,
+        )
+        n_acc = jnp.asarray([4, 4, 2, 4], jnp.int32)
+        buf = jnp.zeros((4, 6), jnp.int32)
+        active = jnp.asarray([True, True, True, False])
+        emitted = jnp.asarray([0, 0, 0, 0], jnp.int32)
+        maxnew = jnp.asarray([2, 6, 6, 6], jnp.int32)
+        buf, emitted, committed, still = emit_speculative(
+            fed, n_acc, buf, active, emitted, maxnew, eos
+        )
+        assert list(np.asarray(emitted)) == [2, 1, 2, 0]
+        assert list(np.asarray(committed)) == [2, 1, 2, 0]
+        assert list(np.asarray(still)) == [False, False, True, False]
+        assert list(np.asarray(buf[0, :2])) == [1, 2]
+        assert list(np.asarray(buf[1, :1])) == [5]
+        assert eos not in np.asarray(buf)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 7), st.integers(1, 6), st.floats(0.0, 2.0))
+    def test_sample_and_emit_never_buffers_eos(self, eos, cap, temp):
+        key = jax.random.PRNGKey(eos * 31 + cap)
+        logits = jax.random.normal(key, (4, 8), jnp.float32) * 4
+        buf = -jnp.ones((4, cap), jnp.int32)
+        live = jnp.asarray([True, True, False, True])
+        emitted = jnp.zeros((4,), jnp.int32)
+        nxt, buf, emitted, hit, _ = sample_and_emit(
+            logits, jnp.full((4,), temp), key, buf, live, emitted, eos
+        )
+        out = np.asarray(buf)
+        assert eos not in out
+        # EOS rows and dead rows emit nothing; others emit exactly once
+        want = np.asarray(live & ~hit).astype(int)
+        assert list(np.asarray(emitted)) == list(want)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_temp0_matches_argmax(self, seed):
+        key = jax.random.PRNGKey(seed)
+        logits = jax.random.normal(key, (3, 16), jnp.float32)
+        toks = draw_tokens(logits, jnp.zeros((3,)), key)
+        assert list(np.asarray(toks)) == list(np.asarray(jnp.argmax(logits, -1)))
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end: token-exact vs the non-speculative engine
+# ---------------------------------------------------------------------------
+
+
+class TestSpeculativeEngine:
+    def _run(self, params, cfg, speculative=0, reqs=None, **kw):
+        kw.setdefault("n_slots", 2)
+        kw.setdefault("max_len", MAX_LEN)
+        kw.setdefault("block_size", 4)
+        kw.setdefault("check_invariants", True)
+        eng = ContinuousEngine(params, cfg, speculative=speculative, **kw)
+        return eng.run(reqs or _requests(cfg, 4, plen=10, max_new=10),
+                       sync_every=2)
+
+    @pytest.mark.parametrize("k", [2, 4])
+    def test_dense_token_exact_and_lookahead(self, model, k):
+        cfg, params = model
+        base = self._run(params, cfg)
+        spec = self._run(params, cfg, speculative=k)
+        assert spec.outputs == base.outputs
+        # dense self-drafting degenerates to lookahead: the draft IS the
+        # target, so every proposal must be accepted
+        assert spec.metrics["draft_acceptance_rate"] == 1.0
+        assert spec.metrics["draft_proposed"] > 0
+
+    def test_slim_compressed_token_exact(self, model, compressed):
+        cfg, _ = model
+        base = self._run(compressed, cfg)
+        spec = self._run(compressed, cfg, speculative=4)
+        assert spec.outputs == base.outputs
+        assert 0.0 < spec.metrics["draft_acceptance_rate"] <= 1.0
+
+    def test_kv_quant_token_exact(self, model):
+        cfg, params = model
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+        base = self._run(params, cfg)
+        spec = self._run(params, cfg, speculative=4)
+        assert spec.outputs == base.outputs
+
+    def test_token_exact_under_forced_preemption(self, model, compressed):
+        cfg, _ = model
+        kw = dict(preemption=True, n_blocks=12, decode_reserve=0)
+        base = self._run(compressed, cfg, **kw)
+        spec = self._run(compressed, cfg, speculative=4, **kw)
+        assert spec.outputs == base.outputs
+        assert spec.metrics["preemptions"] >= 1
+        assert spec.metrics["completed"] == base.metrics["completed"] == 4
+
+    def test_composes_with_prefix_cache(self, model, compressed):
+        cfg, _ = model
+        base = self._run(compressed, cfg, prefix_cache=True)
+        spec = self._run(compressed, cfg, speculative=4, prefix_cache=True)
+        assert spec.outputs == base.outputs
+
+    def test_speculative_engine_alias(self, model):
+        cfg, params = model
+        eng = SpeculativeEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=4
+        )
+        assert eng.speculative == 4
+        res = eng.run(_requests(cfg, 2, plen=10, max_new=6), sync_every=2)
+        base = self._run(params, cfg, reqs=_requests(cfg, 2, plen=10, max_new=6))
+        assert res.outputs == base.outputs
+        with pytest.raises(ValueError):
+            SpeculativeEngine(params, cfg, speculative=1, block_size=4)
+
+    def test_scratch_tail_block_reuse_is_exact(self, model):
+        """A request whose prompt+budget fills max_len charges into the
+        scratch tail — the one table region cold prefill does not
+        overwrite wholesale. On a tight pool later requests recycle
+        earlier requests' blocks there, so admission must wipe the
+        recycled tail blocks' stale pos entries or their prior owner's
+        positions would leak into the verify gather's mask."""
+        cfg, params = model
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(17), (3, 8), 0, cfg.vocab_size
+        )
+
+        def reqs():
+            # mixed budgets misalign the free-list recycling order, so a
+            # mid-sequence block of one request lands in a later
+            # request's scratch-tail table entry
+            return [
+                Request(rid=i, prompt=[int(t) for t in prompts[i]],
+                        arrival=0.0, max_new_tokens=mn)
+                for i, mn in enumerate([28, 40, 40])  # 8 + 40 == MAX_LEN
+            ]
+
+        kw = dict(
+            n_slots=2, max_len=MAX_LEN, block_size=4, n_blocks=15,
+            check_invariants=True,
+        )
+        base = ContinuousEngine(params, cfg, **kw).run(reqs(), sync_every=2)
+        spec = ContinuousEngine(params, cfg, speculative=4, **kw).run(
+            reqs(), sync_every=2
+        )
+        assert spec.outputs == base.outputs
+        assert spec.metrics["completed"] == 3
+
+    def test_spec_pad_charges_scratch_blocks(self, model):
+        """The scheduler charges up to K positions of draft scratch, and
+        the engine's tables grow a matching scratch tail."""
+        cfg, params = model
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=4,
+            speculative=4,
+        )
+        assert eng.table_blocks == MAX_LEN // 4 + 1
+        from repro.serving.block_pool import BlockAllocator
+        from repro.serving.scheduler import Scheduler
+
+        alloc = BlockAllocator(n_blocks=32, block_size=4)
+        sched = Scheduler(2, MAX_LEN, allocator=alloc, spec_pad=4)
+        req = Request(0, [1] * 8, arrival=0.0, max_new_tokens=8)
+        # 8 + 8 positions -> 4 blocks, plus 4 scratch positions -> 1 more
+        assert sched.block_need(req) == 5
