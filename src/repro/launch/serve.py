@@ -20,6 +20,7 @@ roofline story is in benchmarks/bench_speedup.py and EXPERIMENTS §Roofline.
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 
@@ -28,7 +29,12 @@ from repro.core.pipeline import CompressionConfig
 from repro.data import SyntheticLMConfig, calibration_batch, synthetic_batches
 from repro.models import transformer as T
 from repro.models.compress import compress_model, summarize_reports
-from repro.serving import ContinuousEngine, ServeEngine, synthetic_trace
+from repro.serving import (
+    ContinuousEngine,
+    ServeEngine,
+    SpanTracer,
+    synthetic_trace,
+)
 from repro.serving.block_pool import RESERVED_BLOCKS
 
 
@@ -107,6 +113,23 @@ def main(argv=None):
         help="seconds a prefix-index entry may outlive its registration "
         "(0 = no TTL)",
     )
+    # observability (docs/observability.md)
+    p.add_argument(
+        "--trace-out", default=None, metavar="PATH",
+        help="record the request lifecycle as Chrome trace-event JSON "
+        "(load in Perfetto / chrome://tracing; continuous workload only)",
+    )
+    p.add_argument(
+        "--metrics-json", default=None, metavar="PATH",
+        help="dump the run's full metrics summary as JSON — every "
+        "registry-generated key, not just the printed subset "
+        "(continuous workload only)",
+    )
+    p.add_argument(
+        "--profile-dir", default=None, metavar="DIR",
+        help="bracket the run in jax.profiler.start_trace/stop_trace; "
+        "the xprof capture lands in DIR (view with TensorBoard)",
+    )
     args = p.parse_args(argv)
 
     if args.block_size > 0 and args.workload != "poisson":
@@ -130,6 +153,12 @@ def main(argv=None):
     if (args.prefix_index_cap or args.prefix_index_ttl) and not args.prefix_cache:
         p.error("--prefix-index-cap/--prefix-index-ttl bound the prefix "
                 "cache's hash index; they need --prefix-cache")
+    if args.trace_out and args.workload != "poisson":
+        p.error("--trace-out records the continuous engine's lifecycle; "
+                "it needs --workload poisson")
+    if args.metrics_json and args.workload != "poisson":
+        p.error("--metrics-json dumps the continuous engine's metrics "
+                "registry; it needs --workload poisson")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -167,6 +196,7 @@ def main(argv=None):
             seed=args.seed,
             shared_prefix_len=args.shared_prefix,
         )
+        tracer = SpanTracer() if args.trace_out else None
         engine = ContinuousEngine(
             params, cfg, n_slots=args.slots, max_len=max_len,
             prefill_bucket=bucket, seed=args.seed,
@@ -177,8 +207,16 @@ def main(argv=None):
             victim_policy=args.victim_policy,
             prefix_cache_max_entries=args.prefix_index_cap,
             prefix_cache_ttl=args.prefix_index_ttl,
+            trace=tracer,
         )
-        res = engine.run(trace, sync_every=args.sync_every)
+        if args.profile_dir:
+            jax.profiler.start_trace(args.profile_dir)
+        try:
+            res = engine.run(trace, sync_every=args.sync_every)
+        finally:
+            if args.profile_dir:
+                jax.profiler.stop_trace()
+                print(f"[serve/continuous] xprof capture -> {args.profile_dir}")
         m = res.metrics
         cache_kind = (
             f"paged(bs={args.block_size}, blocks={engine.n_blocks}"
@@ -226,6 +264,17 @@ def main(argv=None):
                 f"(acceptance {m['draft_acceptance_rate']:.2f}, K="
                 f"{args.speculative})"
             )
+        if tracer is not None:
+            tracer.export(args.trace_out)
+            print(
+                f"[serve/continuous] trace -> {args.trace_out} "
+                f"({len(tracer)} events, {tracer.dropped} dropped)"
+            )
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as fh:
+                json.dump(m, fh, indent=2, sort_keys=True)
+                fh.write("\n")
+            print(f"[serve/continuous] metrics -> {args.metrics_json}")
         first = res.requests[0]
         print("[serve/continuous] first request:", first.output[:16])
         return
@@ -235,9 +284,17 @@ def main(argv=None):
     )
     batch = next(synthetic_batches(data_cfg))
     batch.pop("labels", None)
-    res = engine.generate(
-        batch, max_new_tokens=args.new_tokens, temperature=args.temperature
-    )
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
+    try:
+        res = engine.generate(
+            batch, max_new_tokens=args.new_tokens,
+            temperature=args.temperature,
+        )
+    finally:
+        if args.profile_dir:
+            jax.profiler.stop_trace()
+            print(f"[serve] xprof capture -> {args.profile_dir}")
     print(
         f"[serve] batch={args.batch} prompt={args.prompt_len} "
         f"new={res.steps}: prefill {res.prefill_s:.2f}s, "

@@ -357,7 +357,10 @@ def prefill(
     b = x.shape[0]
     cache = init_cache(cfg, b, max_len)
     vision = batch.get("vision_embeds")
-    h, cache, _ = forward_hidden(params, cfg, x, cache, 0, vision)
+    # named_scope: an xprof/TensorBoard capture attributes this op tree to
+    # the serving phase it implements (see docs/observability.md)
+    with jax.named_scope("serve/prefill"):
+        h, cache, _ = forward_hidden(params, cfg, x, cache, 0, vision)
     logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
     return logits[:, 0], cache
 
@@ -386,10 +389,12 @@ def decode_step(
         x = token_or_embed.astype(_dtype(cfg))
     else:
         x = jnp.take(params["embed"], token_or_embed, axis=0).astype(_dtype(cfg))
-    with L.skip_adapters() if skip_adapters else contextlib.nullcontext():
-        h, cache, _ = forward_hidden(
-            params, cfg, x, cache, pos, None, block_table=block_table
-        )
+    scope = "serve/draft_step" if skip_adapters else "serve/decode_step"
+    with jax.named_scope(scope):
+        with L.skip_adapters() if skip_adapters else contextlib.nullcontext():
+            h, cache, _ = forward_hidden(
+                params, cfg, x, cache, pos, None, block_table=block_table
+            )
     logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
     return logits[:, 0], cache
 
@@ -460,7 +465,8 @@ def prefill_ragged(
     b = x.shape[0]
     true_len = jnp.asarray(true_len, jnp.int32)
     cache = init_cache(cfg, b, max_len)
-    h, cache, _ = forward_hidden(params, cfg, x, cache, 0, None)
+    with jax.named_scope("serve/prefill_ragged"):
+        h, cache, _ = forward_hidden(params, cfg, x, cache, 0, None)
     h_last = h[:, true_len - 1][:, None, :]
     logits = L.linear(_head_weights(params, cfg), h_last).astype(jnp.float32)
     masked = {}
@@ -534,10 +540,11 @@ def prefill_slot(
         x = embed_inputs(params, cfg, batch)
         s = x.shape[1]
         tl = jnp.asarray(s if true_len is None else true_len, jnp.int32)
-        h, new_cache, _ = forward_hidden(
-            params, cfg, x, wiped, cached_len, None,
-            block_table=row, true_len=tl,
-        )
+        with jax.named_scope("serve/prefill_offset"):
+            h, new_cache, _ = forward_hidden(
+                params, cfg, x, wiped, cached_len, None,
+                block_table=row, true_len=tl,
+            )
         h_last = h[:, tl - 1][:, None, :]
         logits = L.linear(_head_weights(params, cfg), h_last).astype(jnp.float32)
         return logits[:, 0], new_cache
@@ -575,17 +582,20 @@ def prefill_slot(
         )
 
     new_cache: Params = {}
-    for i, spec in enumerate(cfg.period):
-        key = f"layer_{i}"
-        if key not in cache:
-            continue
-        if spec.kind == "attn":
-            new_cache[key] = {
-                leaf: scatter_blocks(cache[key][leaf], small[key][leaf])
-                for leaf in cache[key]
-            }
-        else:  # ssm / cross_attn state stays per-slot
-            new_cache[key] = jax.tree.map(splice_row, cache[key], small[key])
+    with jax.named_scope("serve/prefill_scatter"):
+        for i, spec in enumerate(cfg.period):
+            key = f"layer_{i}"
+            if key not in cache:
+                continue
+            if spec.kind == "attn":
+                new_cache[key] = {
+                    leaf: scatter_blocks(cache[key][leaf], small[key][leaf])
+                    for leaf in cache[key]
+                }
+            else:  # ssm / cross_attn state stays per-slot
+                new_cache[key] = jax.tree.map(
+                    splice_row, cache[key], small[key]
+                )
     return logits, new_cache
 
 
@@ -620,10 +630,11 @@ def verify_slot(
     slot = jnp.asarray(slot, jnp.int32)
     row = jax.lax.dynamic_slice_in_dim(block_table, slot, 1, axis=0)
     x = embed_inputs(params, cfg, batch)  # [1, S, D]
-    h, cache, _ = forward_hidden(
-        params, cfg, x, cache, jnp.asarray(pos0, jnp.int32), None,
-        block_table=row,
-    )
+    with jax.named_scope("serve/verify"):
+        h, cache, _ = forward_hidden(
+            params, cfg, x, cache, jnp.asarray(pos0, jnp.int32), None,
+            block_table=row,
+        )
     logits = L.linear(_head_weights(params, cfg), h).astype(jnp.float32)
     return logits, cache
 
@@ -646,9 +657,10 @@ def verify_step(
         "periods over the paged pool"
     )
     x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg))
-    h, cache, _ = forward_hidden(
-        params, cfg, x, cache, jnp.asarray(pos, jnp.int32), None,
-        block_table=block_table,
-    )
+    with jax.named_scope("serve/verify"):
+        h, cache, _ = forward_hidden(
+            params, cfg, x, cache, jnp.asarray(pos, jnp.int32), None,
+            block_table=block_table,
+        )
     logits = L.linear(_head_weights(params, cfg), h).astype(jnp.float32)
     return logits, cache

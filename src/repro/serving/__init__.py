@@ -6,7 +6,15 @@ from repro.serving.block_pool import (
     chain_hashes,
 )
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
-from repro.serving.metrics import RequestTrace, ServingMetrics
+from repro.serving.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    RequestTrace,
+    ServingMetrics,
+)
+from repro.serving.tracing import SpanTracer, validate_trace
 from repro.serving.speculative import SpeculativeEngine
 from repro.serving.request import (
     Request,

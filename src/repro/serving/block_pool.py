@@ -63,7 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import Counter, deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 NULL_BLOCK = 0  # read target of unallocated table entries; pos stays -1
 TRASH_BLOCK = 1  # write target of inactive slots; never read by live rows
@@ -127,6 +127,11 @@ class BlockAllocator:
         self.prefix_cache = prefix_cache
         self.prefix_cache_max_entries = prefix_cache_max_entries
         self.index_evictions = 0  # entries dropped by cap/TTL (metrics)
+        # optional telemetry hook: called as on_event(name, args_dict) at
+        # point occurrences deep inside the allocator (clock-hand block
+        # reclaim, index subtree drops); the engine wires it to its span
+        # tracer. None (the default) costs one comparison per event.
+        self.on_event: Optional[Callable[[str, Dict[str, int]], None]] = None
         self._now = 0.0  # engine clock, fed via tick(); stamps registrations
         self._stamp: Dict[int, float] = {}  # chain hash -> registration time
         self._free: Deque[int] = deque(range(RESERVED_BLOCKS, n_blocks))
@@ -181,6 +186,8 @@ class BlockAllocator:
                 # entries it strands stay evictable and are reclaimed as
                 # the hand (or a cap/TTL cascade) reaches them.
                 self._unlink(self._hash_of[blk])
+                if self.on_event is not None:
+                    self.on_event("cache_evict", {"block": blk})
                 return
         raise RuntimeError("eviction requested but no refcount-0 cached block")
 
@@ -249,6 +256,8 @@ class BlockAllocator:
             self._kids.pop(cur, None)  # descendants all drop; no discards
             self._unlink(cur)
             self.index_evictions += 1
+        if self.on_event is not None:
+            self.on_event("index_drop", {"entries": len(subtree)})
 
     def tick(self, now: float) -> None:
         """Advance the allocator's clock; later registrations are stamped

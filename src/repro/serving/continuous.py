@@ -87,6 +87,7 @@ from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request
 from repro.serving.sampling import sample_and_emit
 from repro.serving.scheduler import Scheduler
+from repro.serving.tracing import ENGINE_TID, QUEUE_TID, SpanTracer, slot_tid
 
 Params = Dict[str, Any]
 
@@ -135,6 +136,10 @@ class ContinuousEngine:
         # content-hash index (0 = unbounded; evict-oldest on overflow)
         prefix_cache_ttl: float = 0.0,  # seconds an index entry may
         # outlive its registration (0 = no TTL; swept each round)
+        trace: Any = None,  # SpanTracer (or True for a default one):
+        # record the request lifecycle as Chrome trace events — see
+        # serving/tracing.py and docs/observability.md. None = off, and
+        # every trace site reduces to one `is not None` check.
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
         if prefix_cache:
@@ -228,6 +233,15 @@ class ContinuousEngine:
         self.victim_policy = victim_policy
         self.prefix_cache_max_entries = prefix_cache_max_entries
         self.prefix_cache_ttl = prefix_cache_ttl
+        # True -> a fresh default tracer; a SpanTracer -> used as-is
+        # (an *empty* tracer is falsy via __len__, so no truthiness
+        # shortcuts here); anything else (None, False) -> disabled
+        if trace is True:
+            self.tracer: Optional[SpanTracer] = SpanTracer()
+        elif isinstance(trace, SpanTracer):
+            self.tracer = trace
+        else:
+            self.tracer = None
         self.max_blocks = max_len // block_size if block_size > 0 else 0
         # speculative drafting writes up to K positions past a slot's
         # committed budget (the last round's verify window); block tables
@@ -437,6 +451,31 @@ class ContinuousEngine:
         def now() -> float:
             return self._clock() - t0
 
+        tr = self.tracer
+        span_start: Dict[int, float] = {}  # slot -> running-span start
+        if tr is not None:
+            tr.name_slots(b)
+            if allocator is not None:
+                # point evictions (clock-hand reclaim, index drops) fire
+                # deep inside the allocator; surface them as instants
+                allocator.on_event = lambda name, args: tr.instant(
+                    name, ENGINE_TID, now(), args
+                )
+        # host wall-time attribution: every stretch of the loop is charged
+        # to the phase that ends it (schedule / prefill / decode / verify),
+        # on the host's monotonic clock — idle waits are charged nowhere
+        ph_last = time.perf_counter()
+
+        def phase(name: str) -> None:
+            nonlocal ph_last
+            t = time.perf_counter()
+            metrics.on_phase(name, t - ph_last)
+            ph_last = t
+
+        def phase_skip() -> None:
+            nonlocal ph_last
+            ph_last = time.perf_counter()
+
         def push_rows(slots) -> None:
             """Mirror dirty host-side block-table rows to the device in
             one dispatch; the rest of the table stands untouched."""
@@ -475,7 +514,18 @@ class ContinuousEngine:
             sched.preempt(victim, toks)
             table_np[victim] = TRASH_BLOCK
             active = active.at[victim].set(False)
-            metrics.on_preempt(req.rid, now())
+            t_ev = now()
+            metrics.on_preempt(req.rid, t_ev)
+            if tr is not None:
+                tr.instant(
+                    "preempt", slot_tid(victim), t_ev,
+                    {"rid": req.rid, "emitted": em},
+                )
+                tr.complete(
+                    "request", slot_tid(victim),
+                    span_start.pop(victim, t_ev), t_ev,
+                    {"rid": req.rid, "preempted": True},
+                )
 
         while sched.pending() or running:
             if allocator is not None and allocator.prefix_cache:
@@ -489,7 +539,11 @@ class ContinuousEngine:
             if not admits and not running:
                 nxt_arrival = sched.next_arrival()
                 assert nxt_arrival is not None
+                t_idle = now()
                 self._sleep(max(nxt_arrival - now(), 0.0) + 1e-4)
+                if tr is not None:
+                    tr.complete("idle", ENGINE_TID, t_idle, now())
+                phase_skip()  # idle wait is not host scheduling work
                 continue
 
             if paged and admits:
@@ -512,8 +566,18 @@ class ContinuousEngine:
                 if wipe_admit:
                     cache = wipe_pos(cache, wipe_admit)
 
+            if admits:
+                phase("schedule")
             for slot, req in admits:
-                metrics.on_admit(req.rid, now())
+                t_admit = now()
+                metrics.on_admit(req.rid, t_admit)
+                if tr is not None:
+                    # queued span: submission (arrival) -> this admission
+                    tr.complete(
+                        "queued", QUEUE_TID, req.arrival, t_admit,
+                        {"rid": req.rid, "resume": req.n_preemptions > 0},
+                    )
+                    span_start[slot] = t_admit
                 # a resume (after preemption) prefills the original prompt
                 # plus everything generated so far, with the leftover budget
                 sp = req.serving_prompt
@@ -551,8 +615,23 @@ class ContinuousEngine:
                         jnp.int32(budget),
                         jnp.float32(req.temperature), table_dev,
                     )
-                jax.block_until_ready(logits)
-                metrics.on_first_token(req.rid, now())
+                with jax.profiler.TraceAnnotation("serve/prefill"):
+                    jax.block_until_ready(logits)
+                t_first = now()
+                metrics.on_first_token(req.rid, t_first)
+                if tr is not None:
+                    cached = info.cached_len if info is not None else 0
+                    tr.complete(
+                        "prefill", slot_tid(slot), t_admit, t_first,
+                        {
+                            "rid": req.rid,
+                            "prompt_len": plen,
+                            "cached_len": cached,
+                            "prefix_hit": cached > 0,
+                            "resume": req.n_preemptions > 0,
+                        },
+                    )
+                phase("prefill")
                 if self.prefix_cache:
                     metrics.on_prefix_lookup(
                         req.rid, info.cached_len if info else 0, plen,
@@ -592,6 +671,11 @@ class ContinuousEngine:
                             table_np[slot, owned : owned + need] = got
                             grow_dirty.append(slot)
                             fresh_blocks.extend(got)
+                            if tr is not None:
+                                tr.instant(
+                                    "grow", slot_tid(slot), now(),
+                                    {"rid": req.rid, "blocks": need},
+                                )
                             break
                         victim = sched.pick_victim(
                             {
@@ -616,34 +700,62 @@ class ContinuousEngine:
                     continue  # everything was evicted; re-admit first
 
             peak_running = max(peak_running, len(running))
+            t_round = now()
+            metrics.on_queue_depth(sched.queue_depth(), t_round)
+            if tr is not None:
+                tr.counter("queue_depth", t_round, depth=sched.queue_depth())
             if allocator is not None:
-                metrics.on_blocks_in_use(allocator.in_use())
+                in_use = allocator.in_use()
+                metrics.on_blocks_in_use(in_use, t_round)
+                if tr is not None:
+                    tr.counter("blocks_in_use", t_round, blocks=in_use)
                 if self.check_invariants:
                     allocator.check()
 
+            phase("schedule")
+            t_burst = now()
             if self.speculative:
                 # each round is one dispatch: K-1 backbone draft steps,
                 # a batched full-model verify of every slot's window, and
                 # the rejection-sampled bulk commit
                 metrics.on_decode_steps(sync_every * self.speculative)
-                for _ in range(sync_every):
-                    (
-                        cache, logits, pos, active, emitted, buf, key,
-                        spec_counters,
-                    ) = spec_fn(
-                        self.params, cache, logits, pos, active, emitted,
-                        maxnew, buf, key, temps, table_dev, spec_counters,
+                with jax.profiler.TraceAnnotation("serve/speculative_burst"):
+                    for _ in range(sync_every):
+                        (
+                            cache, logits, pos, active, emitted, buf, key,
+                            spec_counters,
+                        ) = spec_fn(
+                            self.params, cache, logits, pos, active, emitted,
+                            maxnew, buf, key, temps, table_dev, spec_counters,
+                        )
+                    host_active, host_emitted = jax.device_get(
+                        (active, emitted)
                     )
+                # draft + verify + commit are fused in one dispatch, so the
+                # whole burst's wall time is attributed to "verify" (the
+                # full-model pass dominates it)
+                phase("verify")
             else:
                 metrics.on_decode_steps(sync_every)
-                for _ in range(sync_every):
-                    cache, logits, pos, active, emitted, buf, key = (
-                        self._step(
-                            self.params, cache, logits, pos, active,
-                            emitted, maxnew, buf, key, temps, table_dev,
+                with jax.profiler.TraceAnnotation("serve/decode_burst"):
+                    for _ in range(sync_every):
+                        cache, logits, pos, active, emitted, buf, key = (
+                            self._step(
+                                self.params, cache, logits, pos, active,
+                                emitted, maxnew, buf, key, temps, table_dev,
+                            )
                         )
+                    host_active, host_emitted = jax.device_get(
+                        (active, emitted)
                     )
-            host_active, host_emitted = jax.device_get((active, emitted))
+                phase("decode")
+            if tr is not None:
+                tr.complete(
+                    "speculative_burst" if self.speculative else
+                    "decode_burst",
+                    ENGINE_TID, t_burst, now(),
+                    {"rounds": sync_every, "running": len(running)},
+                )
             for s in running:
                 # host mirror of each slot's position (plen + emitted) —
                 # what the on-demand growth pass plans the next burst from
@@ -663,6 +775,12 @@ class ContinuousEngine:
                         int(t) for t in host_buf[slot, :n]
                     ]
                     metrics.on_finish(req.rid, t_done, len(req.output))
+                    if tr is not None:
+                        tr.complete(
+                            "request", slot_tid(slot),
+                            span_start.pop(slot, t_done), t_done,
+                            {"rid": req.rid, "tokens": len(req.output)},
+                        )
                     # paged: blocks return to the pool; with the prefix
                     # cache the full blocks of prompt + output demote to
                     # cached entries so a multi-turn follow-up re-prefills

@@ -1,5 +1,24 @@
-"""Serving metrics: per-request TTFT/latency and fleet-level throughput,
-slot occupancy, block-pool occupancy, and preemption counters.
+"""Serving metrics: a registry of typed instruments behind the engine's
+per-request TTFT/latency and fleet-level throughput accounting.
+
+The registry holds three instrument kinds:
+
+* ``Counter`` — a monotonically growing value (preemptions, draft tokens,
+  decode steps, per-phase wall time).
+* ``Gauge`` — a sampled time series ``(t, value)`` with last/peak/mean
+  (blocks in use, queue depth, slot occupancy).
+* ``Histogram`` — fixed-boundary buckets with streaming p50/p95/p99
+  estimation (TTFT, per-request latency, inter-token latency). With
+  ``track_exact=True`` (the serving default — a run's request count is
+  small) raw samples are kept alongside the buckets and quantiles are
+  exact order statistics; ``track_exact=False`` is the bounded-memory
+  streaming mode whose quantiles interpolate within the bucket holding
+  the target rank.
+
+``ServingMetrics`` is the engine-facing facade: event hooks
+(``on_submit``/``on_admit``/.../``on_finish``) route into registry
+instruments, and ``summary()`` is generated from the registry — its keys
+are stable across PRs (``BENCH_serving.json`` tracks them).
 
 All times are seconds relative to the run start (the engine's clock).
 TTFT is measured at prefill completion — with greedy sampling the first
@@ -7,13 +26,42 @@ token is fully determined by the prefill logits, and this definition is
 engine-agnostic so static and continuous engines compare directly. A
 preempted request's TTFT is its *first* admission (the resume prefill
 does not reset it), and its token count is the final stitched output.
+TPOT (inter-token latency) is ``(finished - first_token) / (n_tokens -
+1)`` per request — the steady-state decode interval; single-token
+requests have no interval and are excluded. Every timestamped event
+advances ``end_time``, so a run where nothing finishes (interrupted or
+budget-exhausted traces) still reports a sane duration.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+# log-spaced second-scale boundaries: TTFT/latency land mid-range on the
+# CPU container, sub-ms to minutes stays resolvable
+DEFAULT_TIME_BUCKETS = (
+    0.0005,
+    0.001,
+    0.0025,
+    0.005,
+    0.01,
+    0.025,
+    0.05,
+    0.1,
+    0.25,
+    0.5,
+    1.0,
+    2.5,
+    5.0,
+    10.0,
+    30.0,
+    60.0,
+)
+
+# the engine's host-attributed phases; summary always carries all four
+PHASES = ("schedule", "prefill", "decode", "verify")
 
 
 @dataclasses.dataclass
@@ -36,8 +84,19 @@ class RequestTrace:
             return None
         return self.finished - self.arrival
 
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean inter-token latency (time-per-output-token) over the
+        decode phase; ``None`` until finished or with < 2 tokens (no
+        interval to measure)."""
+        if self.finished is None or self.first_token is None:
+            return None
+        if self.n_tokens < 2:
+            return None
+        return (self.finished - self.first_token) / (self.n_tokens - 1)
 
-def _quantile(xs: List[float], q: float) -> float:
+
+def _quantile(xs: Sequence[float], q: float) -> float:
     if not xs:
         return float("nan")
     ys = sorted(xs)
@@ -45,59 +104,303 @@ def _quantile(xs: List[float], q: float) -> float:
     return ys[idx]
 
 
+# ---------------------------------------------------------------------------
+# Instruments
+# ---------------------------------------------------------------------------
+
+
+class Counter:
+    """Monotonically growing value. ``set`` exists for counters mirrored
+    from another subsystem's cumulative count (e.g. the allocator's index
+    evictions) and still never moves backwards."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def set(self, v: float) -> None:
+        if v < self.value:
+            raise ValueError(f"counter {self.name} cannot decrease")
+        self.value = v
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"value": self.value}
+
+
+class Gauge:
+    """A sampled time series: ``set(value, t)`` appends one sample."""
+
+    __slots__ = ("name", "samples", "last", "peak")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.samples: List[Tuple[Optional[float], float]] = []
+        self.last = 0.0
+        self.peak = 0.0
+
+    def set(self, v: float, t: Optional[float] = None) -> None:
+        self.samples.append((t, v))
+        self.last = v
+        self.peak = max(self.peak, v)
+
+    def values(self) -> List[float]:
+        return [v for _, v in self.samples]
+
+    def mean(self) -> float:
+        if not self.samples:
+            return 0.0
+        return sum(v for _, v in self.samples) / len(self.samples)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "last": self.last,
+            "peak": self.peak,
+            "mean": self.mean(),
+            "n_samples": float(len(self.samples)),
+        }
+
+
+class Histogram:
+    """Fixed-boundary histogram with streaming quantile estimation.
+
+    ``boundaries`` are ascending upper edges; bucket ``i`` covers
+    ``(boundaries[i-1], boundaries[i]]`` with an implicit overflow bucket
+    above the last edge. ``quantile`` returns an exact order statistic
+    when raw samples are tracked, otherwise a linear interpolation inside
+    the bucket holding the target rank (error bounded by that bucket's
+    width — the property tests pin this)."""
+
+    __slots__ = (
+        "name",
+        "boundaries",
+        "counts",
+        "n",
+        "total",
+        "_min",
+        "_max",
+        "_samples",
+    )
+
+    def __init__(
+        self,
+        name: str,
+        boundaries: Sequence[float] = DEFAULT_TIME_BUCKETS,
+        track_exact: bool = True,
+    ):
+        bounds = tuple(float(b) for b in boundaries)
+        if not bounds or any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:])):
+            raise ValueError("boundaries must be non-empty and ascending")
+        self.name = name
+        self.boundaries = bounds
+        self.counts = [0] * (len(bounds) + 1)
+        self.n = 0
+        self.total = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._samples: Optional[List[float]] = [] if track_exact else None
+
+    def observe(self, x: float) -> None:
+        if math.isnan(x):
+            return
+        self.n += 1
+        self.total += x
+        self._min = min(self._min, x)
+        self._max = max(self._max, x)
+        lo, hi = 0, len(self.boundaries)
+        while lo < hi:  # first bucket whose upper edge holds x
+            mid = (lo + hi) // 2
+            if x <= self.boundaries[mid]:
+                hi = mid
+            else:
+                lo = mid + 1
+        self.counts[lo] += 1
+        if self._samples is not None:
+            self._samples.append(x)
+
+    def mean(self) -> float:
+        return self.total / self.n if self.n else float("nan")
+
+    def quantile(self, q: float) -> float:
+        if self._samples is not None:
+            return _quantile(self._samples, q)
+        return self.quantile_est(q)
+
+    def quantile_est(self, q: float) -> float:
+        """Bucket-interpolated quantile (the streaming estimate)."""
+        if self.n == 0:
+            return float("nan")
+        rank = min(self.n - 1, max(0, math.ceil(q * self.n) - 1))
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if rank < seen + c:
+                lo = self.boundaries[i - 1] if i > 0 else self._min
+                hi = self.boundaries[i] if i < len(self.boundaries) else self._max
+                lo = max(lo, self._min)
+                hi = min(hi, self._max)
+                if c == 1 or hi <= lo:
+                    return min(max(lo, self._min), self._max)
+                frac = (rank - seen + 0.5) / c
+                return lo + frac * (hi - lo)
+            seen += c
+        return self._max  # unreachable: ranks are < n
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "n": float(self.n),
+            "mean": self.mean(),
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+
+class MetricsRegistry:
+    """Name-keyed instrument store; getters are get-or-create so call
+    sites never pre-declare, and a name is pinned to its first kind."""
+
+    def __init__(self):
+        self._instruments: Dict[str, object] = {}
+
+    def _get(self, name: str, kind, *args, **kw):
+        inst = self._instruments.get(name)
+        if inst is None:
+            inst = kind(name, *args, **kw)
+            self._instruments[name] = inst
+        elif not isinstance(inst, kind):
+            raise TypeError(
+                f"instrument {name!r} is {type(inst).__name__}, "
+                f"not {kind.__name__}"
+            )
+        return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(
+        self,
+        name: str,
+        boundaries: Sequence[float] = DEFAULT_TIME_BUCKETS,
+        track_exact: bool = True,
+    ) -> Histogram:
+        return self._get(name, Histogram, boundaries, track_exact)
+
+    def names(self) -> List[str]:
+        return sorted(self._instruments)
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Per-instrument summaries, keyed ``kind/name``."""
+        out = {}
+        for name, inst in sorted(self._instruments.items()):
+            kind = type(inst).__name__.lower()
+            out[f"{kind}/{name}"] = inst.snapshot()
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Engine-facing facade
+# ---------------------------------------------------------------------------
+
+
 class ServingMetrics:
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
         self.requests: Dict[int, RequestTrace] = {}
-        self.occupancy_samples: List[float] = []  # active slots per sample
-        self.decode_steps: int = 0  # for token-exact occupancy
         self.end_time: float = 0.0
-        # prefix-cache counters (stay zero when the cache is off)
-        self.cached_prompt_tokens: int = 0
-        self.total_prompt_tokens: int = 0
-        self.prefix_hits: int = 0
-        self.prefix_lookups: int = 0
-        self.resume_prefix_hits: int = 0  # preemption resumes that re-hit
-        self.resume_cached_tokens: int = 0
-        # block-pool occupancy (stay zero for the contiguous layout)
-        self.peak_blocks_in_use: int = 0
-        self.blocks_in_use_samples: List[int] = []
-        # preemption counters (stay zero under worst-case charging)
-        self.preemptions: int = 0
         self.preempted_rids: Set[int] = set()
-        # speculative-decoding counters (stay zero with speculation off)
-        self.draft_accepted: int = 0
-        self.draft_proposed: int = 0
-        # prefix-index cap counter (stays zero while the index is unbounded)
-        self.prefix_index_evictions: int = 0
+        r = self.registry = MetricsRegistry()
+        # counters (each stays zero when its feature is off)
+        self._decode_steps = r.counter("decode_steps")
+        self._cached_prompt_tokens = r.counter("cached_prompt_tokens")
+        self._total_prompt_tokens = r.counter("total_prompt_tokens")
+        self._prefix_hits = r.counter("prefix_hits")
+        self._prefix_lookups = r.counter("prefix_lookups")
+        self._resume_prefix_hits = r.counter("resume_prefix_hits")
+        self._resume_cached_tokens = r.counter("resume_cached_tokens")
+        self._preemptions = r.counter("preemptions")
+        self._draft_accepted = r.counter("draft_accepted")
+        self._draft_proposed = r.counter("draft_proposed")
+        self._prefix_index_evictions = r.counter("prefix_index_evictions")
+        self._phase = {p: r.counter(f"phase_{p}_s") for p in PHASES}
+        # gauges (time series; peak/mean land in summary)
+        self._occupancy = r.gauge("slot_occupancy")
+        self._blocks_in_use = r.gauge("blocks_in_use")
+        self._queue_depth = r.gauge("queue_depth")
+        # histograms (exact quantiles per run, streaming buckets for free)
+        self._ttft = r.histogram("ttft_s")
+        self._latency = r.histogram("latency_s")
+        self._tpot = r.histogram("tpot_s")
+
+    # -- back-compat views -------------------------------------------------
+
+    @property
+    def decode_steps(self) -> int:
+        return int(self._decode_steps.value)
+
+    @property
+    def preemptions(self) -> int:
+        return int(self._preemptions.value)
+
+    @property
+    def occupancy_samples(self) -> List[float]:
+        return self._occupancy.values()
+
+    @property
+    def blocks_in_use_samples(self) -> List[int]:
+        return [int(v) for v in self._blocks_in_use.values()]
+
+    @property
+    def peak_blocks_in_use(self) -> int:
+        return int(self._blocks_in_use.peak)
 
     # -- event hooks -------------------------------------------------------
 
+    def _touch(self, t: float) -> None:
+        """Advance the run's end time. Every timestamped event calls this,
+        so a run where no request ever finishes still reports its true
+        span instead of a ~0 duration and a garbage tokens/s."""
+        self.end_time = max(self.end_time, t)
+
     def on_submit(self, rid: int, arrival: float) -> None:
         self.requests[rid] = RequestTrace(arrival=arrival)
+        self._touch(arrival)
 
     def on_admit(self, rid: int, t: float) -> None:
         self.requests[rid].admitted = t
+        self._touch(t)
 
     def on_first_token(self, rid: int, t: float) -> None:
         tr = self.requests[rid]
         if tr.first_token is None:  # a resume prefill keeps the first TTFT
             tr.first_token = t
+            self._ttft.observe(tr.ttft)
+        self._touch(t)
 
     def on_finish(self, rid: int, t: float, n_tokens: int) -> None:
         tr = self.requests[rid]
         tr.finished = t
         tr.n_tokens = n_tokens
-        self.end_time = max(self.end_time, t)
+        self._latency.observe(tr.latency)
+        if tr.tpot is not None:
+            self._tpot.observe(tr.tpot)
+        self._touch(t)
 
     def on_occupancy(self, active_slots: float) -> None:
-        self.occupancy_samples.append(active_slots)
+        self._occupancy.set(active_slots)
 
     def on_preempt(self, rid: int, t: float) -> None:
         """Record an eviction: the request running in a slot lost its
         blocks and went back to the queue at time ``t``."""
-        self.preemptions += 1
+        self._preemptions.inc()
         self.preempted_rids.add(rid)
+        self._touch(t)
 
     def on_prefix_lookup(
         self, rid: int, cached_tokens: int, prompt_tokens: int, resume: bool = False
@@ -109,15 +412,15 @@ class ServingMetrics:
         cross-request sharing, not a request re-matching its own evicted
         blocks."""
         if resume:
-            self.resume_cached_tokens += cached_tokens
+            self._resume_cached_tokens.inc(cached_tokens)
             if cached_tokens > 0:
-                self.resume_prefix_hits += 1
+                self._resume_prefix_hits.inc()
             return
-        self.prefix_lookups += 1
-        self.cached_prompt_tokens += cached_tokens
-        self.total_prompt_tokens += prompt_tokens
+        self._prefix_lookups.inc()
+        self._cached_prompt_tokens.inc(cached_tokens)
+        self._total_prompt_tokens.inc(prompt_tokens)
         if cached_tokens > 0:
-            self.prefix_hits += 1
+            self._prefix_hits.inc()
 
     def on_speculative(self, accepted: int, proposed: int) -> None:
         """Record cumulative draft-token counts: of ``proposed`` tokens
@@ -125,16 +428,30 @@ class ServingMetrics:
         full-model verification. The acceptance rate is the quality of
         the free draft model — 1.0 for a dense model (drafting degenerates
         to exact lookahead)."""
-        self.draft_accepted += int(accepted)
-        self.draft_proposed += int(proposed)
+        self._draft_accepted.inc(int(accepted))
+        self._draft_proposed.inc(int(proposed))
 
     def on_index_evictions(self, n: int) -> None:
         """Record the allocator's cumulative prefix-index cap evictions."""
-        self.prefix_index_evictions = int(n)
+        self._prefix_index_evictions.set(int(n))
 
-    def on_blocks_in_use(self, n: int) -> None:
-        self.peak_blocks_in_use = max(self.peak_blocks_in_use, int(n))
-        self.blocks_in_use_samples.append(int(n))
+    def on_blocks_in_use(self, n: int, t: Optional[float] = None) -> None:
+        self._blocks_in_use.set(int(n), t)
+        if t is not None:
+            self._touch(t)
+
+    def on_queue_depth(self, n: int, t: Optional[float] = None) -> None:
+        """Sample the arrival queue's depth (requests waiting for a slot
+        or for blocks) — the backlog signal SLO scheduling keys off."""
+        self._queue_depth.set(int(n), t)
+        if t is not None:
+            self._touch(t)
+
+    def on_phase(self, phase: str, seconds: float) -> None:
+        """Attribute ``seconds`` of host wall time to an engine phase
+        (one of ``PHASES``); the per-phase totals land in summary as
+        ``phase_<name>_s``."""
+        self._phase[phase].inc(seconds)
 
     def on_decode_steps(self, n: int) -> None:
         """Count decode steps run across all slots. When recorded, occupancy
@@ -149,7 +466,7 @@ class ServingMetrics:
         speculative throughput* — slot idleness and draft rejections fold
         into one number (acceptance is reported separately) — and is not
         directly comparable with a non-speculative run's occupancy."""
-        self.decode_steps += n
+        self._decode_steps.inc(n)
 
     # -- summary -----------------------------------------------------------
 
@@ -157,51 +474,62 @@ class ServingMetrics:
         return sum(tr.n_tokens for tr in self.requests.values())
 
     def summary(self) -> Dict[str, float]:
-        ttfts = [tr.ttft for tr in self.requests.values() if tr.ttft is not None]
-        lats = [tr.latency for tr in self.requests.values() if tr.latency is not None]
         dur = max(self.end_time, 1e-9)
-        if self.decode_steps > 0:
-            occ = self.total_tokens() / (self.decode_steps * self.n_slots)
-        elif self.occupancy_samples:
-            occ = sum(self.occupancy_samples) / (
-                len(self.occupancy_samples) * self.n_slots
-            )
+        steps = self._decode_steps.value
+        if steps > 0:
+            occ = self.total_tokens() / (steps * self.n_slots)
+        elif self._occupancy.samples:
+            occ = self._occupancy.mean() / self.n_slots
         else:
             occ = 0.0
-        blocks = self.blocks_in_use_samples
-        return {
+        out = {
             "n_requests": float(len(self.requests)),
-            "completed": float(len(lats)),
+            "completed": float(self._latency.n),
             "total_tokens": float(self.total_tokens()),
             "duration_s": dur,
             "tokens_per_s": self.total_tokens() / dur,
-            "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
-            "p50_ttft_s": _quantile(ttfts, 0.50),
-            "p95_ttft_s": _quantile(ttfts, 0.95),
-            "mean_latency_s": sum(lats) / len(lats) if lats else float("nan"),
-            "p95_latency_s": _quantile(lats, 0.95),
+            "mean_ttft_s": self._ttft.mean(),
+            "p50_ttft_s": self._ttft.quantile(0.50),
+            "p95_ttft_s": self._ttft.quantile(0.95),
+            "p99_ttft_s": self._ttft.quantile(0.99),
+            "mean_latency_s": self._latency.mean(),
+            "p50_latency_s": self._latency.quantile(0.50),
+            "p95_latency_s": self._latency.quantile(0.95),
+            "p99_latency_s": self._latency.quantile(0.99),
+            # inter-token latency (time per output token, decode phase)
+            "mean_tpot_s": self._tpot.mean(),
+            "tpot_p50_s": self._tpot.quantile(0.50),
+            "tpot_p95_s": self._tpot.quantile(0.95),
+            "tpot_p99_s": self._tpot.quantile(0.99),
             "mean_occupancy": occ,
             # prefix-cache: token-weighted hit rate (cached / prompt tokens)
             "prefix_cache_hit_rate": (
-                self.cached_prompt_tokens / self.total_prompt_tokens
-                if self.total_prompt_tokens
+                self._cached_prompt_tokens.value / self._total_prompt_tokens.value
+                if self._total_prompt_tokens.value
                 else 0.0
             ),
-            "cached_prompt_tokens": float(self.cached_prompt_tokens),
-            "prefix_hits": float(self.prefix_hits),
-            "peak_blocks_in_use": float(self.peak_blocks_in_use),
-            "mean_blocks_in_use": sum(blocks) / len(blocks) if blocks else 0.0,
-            "preemptions": float(self.preemptions),
+            "cached_prompt_tokens": self._cached_prompt_tokens.value,
+            "prefix_hits": self._prefix_hits.value,
+            "peak_blocks_in_use": self._blocks_in_use.peak,
+            "mean_blocks_in_use": self._blocks_in_use.mean(),
+            "preemptions": self._preemptions.value,
             "preempted_requests": float(len(self.preempted_rids)),
-            "resume_prefix_hits": float(self.resume_prefix_hits),
-            "resume_cached_tokens": float(self.resume_cached_tokens),
+            "resume_prefix_hits": self._resume_prefix_hits.value,
+            "resume_cached_tokens": self._resume_cached_tokens.value,
             # speculative decoding: draft-token acceptance
-            "draft_accepted": float(self.draft_accepted),
-            "draft_proposed": float(self.draft_proposed),
+            "draft_accepted": self._draft_accepted.value,
+            "draft_proposed": self._draft_proposed.value,
             "draft_acceptance_rate": (
-                self.draft_accepted / self.draft_proposed
-                if self.draft_proposed
+                self._draft_accepted.value / self._draft_proposed.value
+                if self._draft_proposed.value
                 else 0.0
             ),
-            "prefix_index_evictions": float(self.prefix_index_evictions),
+            "prefix_index_evictions": self._prefix_index_evictions.value,
+            # arrival-queue backlog time series
+            "mean_queue_depth": self._queue_depth.mean(),
+            "peak_queue_depth": self._queue_depth.peak,
         }
+        # host wall-time attribution (schedule / prefill / decode / verify)
+        for p in PHASES:
+            out[f"phase_{p}_s"] = self._phase[p].value
+        return out

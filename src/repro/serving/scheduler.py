@@ -295,6 +295,11 @@ class Scheduler:
     def pending(self) -> bool:
         return len(self.queue) > 0
 
+    def queue_depth(self) -> int:
+        """Requests waiting for a slot (or for blocks) — the backlog the
+        telemetry layer samples every scheduling round."""
+        return len(self.queue)
+
     def running(self) -> int:
         return sum(r is not None for r in self.slots)
 

@@ -125,30 +125,35 @@ def build_spec_round(
         fed = [cur]
         dlogits = []
         # K-1 chained draft steps: backbone-only forward, provisional K/V
-        # writes at pos + i - 1 through the slot's own table row
-        for i in range(1, k):
-            d, cache = T.decode_step(
-                params, cfg, cache, cur[:, None], pos + (i - 1),
-                block_table=table, skip_adapters=True,
-            )
-            if greedy:
-                cur = draw_tokens(d, temps, key, greedy_only=True)
-            else:
-                key, sk = jax.random.split(key)
-                cur = draw_tokens(d, temps, sk)
-            fed.append(cur)
-            dlogits.append(d)
-        fed = jnp.stack(fed, axis=1)  # [B, K]
-        dstack = jnp.stack(dlogits, axis=1)  # [B, K-1, V]
+        # writes at pos + i - 1 through the slot's own table row. The
+        # named_scope brackets let an xprof capture split the round's
+        # device time into draft / verify / commit (decode_step adds its
+        # own serve/draft_step scope per forward).
+        with jax.named_scope("spec/draft"):
+            for i in range(1, k):
+                d, cache = T.decode_step(
+                    params, cfg, cache, cur[:, None], pos + (i - 1),
+                    block_table=table, skip_adapters=True,
+                )
+                if greedy:
+                    cur = draw_tokens(d, temps, key, greedy_only=True)
+                else:
+                    key, sk = jax.random.split(key)
+                    cur = draw_tokens(d, temps, sk)
+                fed.append(cur)
+                dlogits.append(d)
+            fed = jnp.stack(fed, axis=1)  # [B, K]
+            dstack = jnp.stack(dlogits, axis=1)  # [B, K-1, V]
         # one full-model pass scores the whole window for every slot and
         # overwrites the drafts' provisional K/V with full-model values
         tgt, cache = T.verify_step(params, cfg, cache, fed, pos, table)
-        n_acc, carry, key = speculative_accept(
-            fed, dstack, tgt, temps, key, greedy=greedy
-        )
-        buf, emitted, committed, still = emit_speculative(
-            fed, n_acc, buf, active, emitted, maxnew, eos
-        )
+        with jax.named_scope("spec/commit"):
+            n_acc, carry, key = speculative_accept(
+                fed, dstack, tgt, temps, key, greedy=greedy
+            )
+            buf, emitted, committed, still = emit_speculative(
+                fed, n_acc, buf, active, emitted, maxnew, eos
+            )
         # pos advances by the committed count for every row — finished
         # rows freeze at their committed length, so any later (ignored)
         # writes they make stay strictly beyond their committed chain

@@ -1,0 +1,201 @@
+"""Span tracing for the serving engine: ring-buffered lifecycle events,
+exported as Chrome trace-event JSON.
+
+The tracer records the full request lifecycle the continuous engine
+drives — queued→admitted, prefill, decode bursts, speculative rounds,
+preemptions, block-table growth, finish — as retrospective *complete*
+spans (the engine already timestamps both ends of every phase on its own
+clock), plus *instant* events for point occurrences (preemption, cache
+eviction) and *counter* events for time series (queue depth, blocks in
+use). Events live in a bounded ring buffer (``collections.deque``), so a
+long-running engine holds the most recent ``capacity`` events and the
+tracer's memory is O(capacity) no matter how long the trace; the number
+of evicted events is reported as ``dropped``.
+
+The export is the Chrome trace-event format (the JSON array flavour,
+wrapped in ``{"traceEvents": [...]}``), loadable directly in Perfetto
+(https://ui.perfetto.dev) or ``chrome://tracing``:
+
+* one **pid** per engine (multi-replica serving gives each replica its
+  own pid, so a fleet's traces merge into one timeline);
+* one **tid** per slot (``tid = slot + 1``), plus two reserved lanes:
+  ``ENGINE_TID`` (0) for engine-wide phases — host scheduling, decode
+  bursts, idle waits — and ``QUEUE_TID`` for pre-admission queued spans
+  (a queued request has no slot yet);
+* timestamps in microseconds on the engine clock (relative to run
+  start), the unit the format requires.
+
+Cost model: a disabled tracer is ``None`` at every call site (the engine
+guards each event with one ``is not None`` check), so tracing off costs
+one pointer comparison per event site. Enabled, an event is one tuple
+append to a deque — no string formatting, no dict building until
+``export``.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+ENGINE_TID = 0  # engine-wide lane: scheduling, bursts, idle
+QUEUE_TID = 1_000_000  # pre-admission lane: queued->admitted spans
+
+
+def slot_tid(slot: int) -> int:
+    """Trace lane of a decode slot (0 is the engine-wide lane)."""
+    return slot + 1
+
+
+class SpanTracer:
+    """Ring-buffered trace-event recorder for one engine (one pid)."""
+
+    def __init__(
+        self,
+        capacity: int = 100_000,
+        pid: int = 0,
+        process_name: str = "engine",
+    ):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.pid = pid
+        self.process_name = process_name
+        self.n_events = 0  # total recorded (>= len(buffer) once full)
+        # (ph, name, tid, ts_us, dur_us, args) — dur/args may be None
+        self._buf: Deque[Tuple] = deque(maxlen=capacity)
+        self._threads: Dict[int, str] = {
+            ENGINE_TID: "engine",
+            QUEUE_TID: "queue",
+        }
+
+    # -- recording ---------------------------------------------------------
+
+    def complete(
+        self,
+        name: str,
+        tid: int,
+        t0: float,
+        t1: float,
+        args: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        """A span covering ``[t0, t1]`` seconds on the engine clock."""
+        self.n_events += 1
+        self._buf.append(("X", name, tid, t0 * 1e6, max(t1 - t0, 0.0) * 1e6, args))
+
+    def instant(
+        self,
+        name: str,
+        tid: int,
+        t: float,
+        args: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        """A point event at ``t`` (preemption, eviction, ...)."""
+        self.n_events += 1
+        self._buf.append(("i", name, tid, t * 1e6, None, args))
+
+    def counter(self, name: str, t: float, **values: float) -> None:
+        """A time-series sample (rendered as a track in Perfetto)."""
+        self.n_events += 1
+        self._buf.append(("C", name, ENGINE_TID, t * 1e6, None, values))
+
+    def name_thread(self, tid: int, name: str) -> None:
+        self._threads[tid] = name
+
+    def name_slots(self, n_slots: int) -> None:
+        for s in range(n_slots):
+            self.name_thread(slot_tid(s), f"slot {s}")
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    # -- export ------------------------------------------------------------
+
+    @property
+    def dropped(self) -> int:
+        """Events evicted from the ring buffer (oldest-first)."""
+        return self.n_events - len(self._buf)
+
+    def events(self) -> List[Dict[str, Any]]:
+        """The buffered events as Chrome trace-event dicts, metadata
+        (process/thread names) first."""
+        out: List[Dict[str, Any]] = [
+            {
+                "ph": "M",
+                "name": "process_name",
+                "pid": self.pid,
+                "tid": ENGINE_TID,
+                "ts": 0,
+                "args": {"name": self.process_name},
+            }
+        ]
+        for tid, name in sorted(self._threads.items()):
+            out.append(
+                {
+                    "ph": "M",
+                    "name": "thread_name",
+                    "pid": self.pid,
+                    "tid": tid,
+                    "ts": 0,
+                    "args": {"name": name},
+                }
+            )
+        for ph, name, tid, ts, dur, args in self._buf:
+            ev: Dict[str, Any] = {
+                "ph": ph,
+                "name": name,
+                "pid": self.pid,
+                "tid": tid,
+                "ts": ts,
+            }
+            if ph == "X":
+                ev["dur"] = dur
+            elif ph == "i":
+                ev["s"] = "t"  # instant scope: thread
+            if args:
+                ev["args"] = dict(args)
+            out.append(ev)
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "traceEvents": self.events(),
+            "displayTimeUnit": "ms",
+            "otherData": {
+                "recorded_events": self.n_events,
+                "dropped_events": self.dropped,
+            },
+        }
+
+    def export(self, path: str) -> int:
+        """Write the trace as Chrome trace-event JSON; returns the number
+        of events written (excluding metadata)."""
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f)
+            f.write("\n")
+        return len(self._buf)
+
+
+def validate_trace(trace: Dict[str, Any]) -> List[str]:
+    """Schema check for an exported trace (CI gate): every event carries
+    the required ``ph``/``ts``/``pid`` keys, complete events carry
+    ``dur``, and the trace holds at least one span per lifecycle phase.
+    Returns a list of problems (empty = valid)."""
+    problems: List[str] = []
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["traceEvents missing or empty"]
+    for i, ev in enumerate(events):
+        for key in ("ph", "ts", "pid"):
+            if key not in ev:
+                problems.append(f"event {i} missing {key!r}: {ev}")
+                break
+        if ev.get("ph") == "X" and "dur" not in ev:
+            problems.append(f"complete event {i} missing 'dur': {ev}")
+    names = {ev.get("name") for ev in events if ev.get("ph") == "X"}
+    for phase in ("queued", "prefill", "request"):
+        if phase not in names:
+            problems.append(f"no {phase!r} span in trace")
+    if not ({"decode_burst", "speculative_burst"} & names):
+        problems.append("no decode_burst/speculative_burst span in trace")
+    return problems
