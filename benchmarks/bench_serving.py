@@ -203,6 +203,10 @@ def run_continuous(
         prefill_bucket=PROMPT_LEN, block_size=block_size, n_blocks=n_blocks,
         preemption=preemption, decode_reserve=DECODE_RESERVE,
         speculative=speculative, trace=trace,
+        # timed reps run against warm jit caches by construction; the
+        # guard turns a silent mid-replay recompile into a hard failure
+        # and its per-path compile counts land in the recorded row
+        check_retrace=True,
     )
     # warm the prefill/decode jit caches with a minimal same-shape trace
     warm = synthetic_trace(
@@ -244,6 +248,7 @@ def shared_prefix_runner(params, cfg, vocab, prefix_cache):
         params, cfg, n_slots=N_SLOTS, max_len=PREFIX_MAX_LEN,
         prefill_bucket=PREFIX_TAIL, block_size=BLOCK_SIZE,
         n_blocks=PREFIX_BLOCKS, prefix_cache=prefix_cache,
+        check_retrace=True,
     )
     # warm every jit shape this trace will hit (cold prompt buckets and,
     # with the cache on, the suffix buckets) outside the timed replay
@@ -293,6 +298,17 @@ def run(table: Table):
             "phase_decode_s": round(m["phase_decode_s"], 4),
             "phase_verify_s": round(m["phase_verify_s"], 4),
         }
+        # retrace-guard compile counts for the recorded (best) rep —
+        # engines warm outside the timed replay, so every hot path should
+        # read 0 here; a nonzero value names the path that recompiled
+        jit = {
+            k[len("jit_compiles_"):]: int(v)
+            for k, v in m.items()
+            if k.startswith("jit_compiles_")
+        }
+        if jit:
+            row["jit_compiles"] = jit
+            row["jit_retraces"] = int(m.get("jit_retraces", 0))
         cells[label] = row
         table.add(label, **row)
 

@@ -61,7 +61,7 @@ def trained_model():
         return apply_updates(p, u), s, l
 
     it = synthetic_batches(dcfg)
-    for i in range(TRAIN_STEPS):
+    for _ in range(TRAIN_STEPS):
         params, state, loss = step(params, state, next(it))
     mgr.save(TRAIN_STEPS, params)
     return cfg, dcfg, params

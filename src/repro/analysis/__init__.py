@@ -1,0 +1,57 @@
+"""slimcheck — JAX/Pallas-aware static analysis + runtime retrace guard.
+
+Two layers of correctness tooling for the serving hot path (see
+docs/static-analysis.md):
+
+* **Lint** (`repro.analysis.lint`, CLI ``python -m repro.analysis``): an
+  AST pass that resolves every jit/pallas_call *traced scope* in a file —
+  functions decorated with or passed to ``jax.jit`` / ``pl.pallas_call``,
+  including locally-defined jitted closures like the continuous engine's
+  ``_step`` — and checks the SC00x rule set against it (Python branches
+  on traced values, host syncs in hot loops, non-static config params,
+  Pallas entry points that bypass ``default_interpret``, un-donated cache
+  mutation). Pure stdlib: importable and runnable without jax installed.
+
+* **Retrace guard** (`repro.analysis.retrace`): a runtime monitor over
+  ``jax.jit`` compile counts. ``ContinuousEngine(check_retrace=True)``
+  wraps its hot functions in it and raises ``RetraceError`` — naming the
+  function and the argument-signature delta — the moment a steady-state
+  path recompiles.
+
+The lint layer must stay importable without jax (the CI job runs it on a
+bare interpreter), so the retrace module is loaded lazily on attribute
+access.
+"""
+from __future__ import annotations
+
+from repro.analysis.lint import (
+    Baseline,
+    Finding,
+    LintResult,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "LintResult",
+    "RULES",
+    "lint_paths",
+    "lint_source",
+    "RetraceError",
+    "RetraceGuard",
+    "arg_signature",
+    "compile_count",
+]
+
+_RETRACE_NAMES = {"RetraceError", "RetraceGuard", "arg_signature", "compile_count"}
+
+
+def __getattr__(name):  # lazy: repro.analysis.retrace imports jax
+    if name in _RETRACE_NAMES:
+        from repro.analysis import retrace
+
+        return getattr(retrace, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,140 @@
+"""``python -m repro.analysis`` — the slimcheck lint CLI.
+
+    python -m repro.analysis src/                 # lint vs the default baseline
+    python -m repro.analysis src/ --stats         # per-rule counts
+    python -m repro.analysis --write-baseline     # accept current findings
+    python -m repro.analysis --list-rules
+
+Exit status: 0 = clean (no findings beyond the baseline), 1 = new
+findings (or unparseable files). The default baseline is
+``slimcheck-baseline.json`` in the working directory when it exists;
+``--baseline PATH`` overrides, ``--no-baseline`` disables.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint import Baseline, lint_paths
+from repro.analysis.rules import RULES
+
+DEFAULT_BASELINE = "slimcheck-baseline.json"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="slimcheck: JAX/Pallas-aware static analysis "
+        "(docs/static-analysis.md)",
+    )
+    p.add_argument(
+        "paths", nargs="*", default=None,
+        help="files/directories to lint (default: src)",
+    )
+    p.add_argument(
+        "--rules", default=None, metavar="SC001,SC002",
+        help="comma-separated rule subset (default: all)",
+    )
+    p.add_argument(
+        "--baseline", default=None, metavar="PATH",
+        help=f"baseline file of accepted findings (default: "
+        f"{DEFAULT_BASELINE} if present)",
+    )
+    p.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore any baseline; report every finding",
+    )
+    p.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current findings to the baseline file and exit 0",
+    )
+    p.add_argument(
+        "--stats", action="store_true",
+        help="print per-rule finding counts and suppression totals",
+    )
+    p.add_argument("--list-rules", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES.values():
+            print(f"{rule.id}  {rule.summary}")
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    if rules:
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            p.error(f"unknown rule(s): {unknown}; see --list-rules")
+
+    paths = args.paths or ["src"]
+    result = lint_paths(paths, rules)
+
+    baseline_path = args.baseline or DEFAULT_BASELINE
+    if args.write_baseline:
+        Baseline.from_findings(result.findings).dump(baseline_path)
+        print(
+            f"[slimcheck] wrote {len(result.findings)} finding(s) to "
+            f"{baseline_path}"
+        )
+        return 0
+
+    baseline = None
+    if not args.no_baseline:
+        try:
+            baseline = Baseline.load(baseline_path)
+        except FileNotFoundError:
+            if args.baseline is not None:
+                print(
+                    f"[slimcheck] baseline not found: {baseline_path}",
+                    file=sys.stderr,
+                )
+                return 1
+
+    new = (
+        baseline.new_findings(result.findings)
+        if baseline is not None
+        else result.findings
+    )
+    for f in new:
+        print(f.render())
+    for err in result.errors:
+        print(f"[slimcheck] parse error: {err}", file=sys.stderr)
+
+    if args.stats:
+        print(
+            f"[slimcheck] {result.files} file(s), "
+            f"{len(result.findings)} finding(s) "
+            f"({len(new)} new, {result.suppressed} suppressed inline"
+            + (
+                f", {len(result.findings) - len(new)} baselined"
+                if baseline is not None
+                else ""
+            )
+            + ")"
+        )
+        for rule, n in sorted(result.by_rule().items()):
+            print(f"[slimcheck]   {rule}: {n}")
+        if baseline is not None:
+            stale = baseline.stale_entries(result.findings)
+            if stale:
+                print(
+                    f"[slimcheck] {len(stale)} stale baseline entr"
+                    f"{'y' if len(stale) == 1 else 'ies'} (fixed findings "
+                    "still baselined — consider --write-baseline):"
+                )
+                for rule, path, context in stale:
+                    print(f"[slimcheck]   {rule} {path}: {context}")
+
+    if new or result.errors:
+        if not args.stats:
+            print(
+                f"[slimcheck] {len(new)} new finding(s) "
+                f"across {result.files} file(s)",
+                file=sys.stderr,
+            )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

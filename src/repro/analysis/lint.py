@@ -1,0 +1,221 @@
+"""slimcheck lint runner: file models, suppressions, baseline.
+
+Suppression syntax (checked per finding line and the comment line
+directly above it):
+
+    x = foo()  # slimcheck: disable=SC001
+    # slimcheck: disable=SC002,SC005
+    # slimcheck: sync-site        <- semantic alias for disable=SC002:
+                                     declares an *intentional* host sync
+
+The baseline file (``slimcheck-baseline.json``, checked in at the repo
+root) records accepted findings as (rule, path, context-line) counts —
+line numbers are deliberately not part of the key so unrelated edits
+don't churn it. A lint run fails only on findings *not covered* by the
+baseline; regenerate with ``python -m repro.analysis --write-baseline``.
+
+This module is pure stdlib — the CI lint job runs it on a bare
+interpreter, no jax required.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from collections import Counter
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.rules import RULES, Finding
+from repro.analysis.scopes import FuncInfo, ModuleScopes, Taint
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*slimcheck:\s*(disable|sync-site)\s*(?:=\s*([A-Z0-9,\s]+))?"
+)
+
+
+class FileModel:
+    """Parsed module + scope/taint info handed to every rule."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace(os.sep, "/").replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.scopes = ModuleScopes(self.tree)
+        self._taints: Dict[int, Taint] = {}
+        # line -> set of suppressed rule ids ("*" = all)
+        self.suppressions: Dict[int, Set[str]] = {}
+        for i, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            if m.group(1) == "sync-site":
+                codes = {"SC002"}
+            elif m.group(2):
+                codes = {c.strip() for c in m.group(2).split(",") if c.strip()}
+            else:
+                codes = {"*"}
+            self.suppressions.setdefault(i, set()).update(codes)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def taint(self, fi: FuncInfo) -> Taint:
+        key = id(fi.node)
+        if key not in self._taints:
+            self._taints[key] = Taint(fi)
+        return self._taints[key]
+
+    def walk_function(self, fi: FuncInfo) -> Iterator[ast.AST]:
+        """Every node of the function body, nested trace-time defs
+        included (pl.when bodies execute under the same trace)."""
+        yield from ast.walk(fi.node)
+
+    def suppressed(self, f: Finding) -> bool:
+        for line in (f.line, f.line - 1):
+            codes = self.suppressions.get(line)
+            if codes and ("*" in codes or f.rule in codes):
+                # a suppression on the *previous* line only counts if that
+                # line is comment-only (it annotates the line below)
+                if line == f.line or self.line_text(line).startswith("#"):
+                    return True
+        return False
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    suppressed: int
+    files: int
+    errors: List[str]  # unparseable files
+
+    def by_rule(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+
+def lint_source(
+    source: str, path: str = "<string>", rules: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    model = FileModel(path, source)
+    kept, _ = _run_rules(model, rules)
+    return kept
+
+
+def _run_rules(model: FileModel, rules: Optional[Sequence[str]]):
+    active = [RULES[r] for r in rules] if rules else list(RULES.values())
+    raw: List[Finding] = []
+    for rule in active:
+        raw.extend(rule.func(model))
+    kept = [f for f in raw if not model.suppressed(f)]
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    n_suppressed = len(raw) - len(kept)
+    return kept, n_suppressed
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(
+                    d for d in dirs if d != "__pycache__" and not d.startswith(".")
+                )
+                for name in sorted(files):
+                    if name.endswith(".py"):
+                        yield os.path.join(root, name)
+
+
+def lint_paths(
+    paths: Sequence[str], rules: Optional[Sequence[str]] = None
+) -> LintResult:
+    findings: List[Finding] = []
+    suppressed = 0
+    files = 0
+    errors: List[str] = []
+    for path in iter_python_files(paths):
+        files += 1
+        try:
+            with open(path, encoding="utf-8") as fh:
+                source = fh.read()
+            model = FileModel(path, source)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            errors.append(f"{path}: {e}")
+            continue
+        kept, n_sup = _run_rules(model, rules)
+        findings.extend(kept)
+        suppressed += n_sup
+    return LintResult(
+        findings=findings, suppressed=suppressed, files=files, errors=errors
+    )
+
+
+# -- baseline ------------------------------------------------------------
+
+BaselineKey = Tuple[str, str, str]  # (rule, path, context)
+
+
+class Baseline:
+    """Accepted findings as (rule, path, context) multiset counts."""
+
+    VERSION = 1
+
+    def __init__(self, counts: Optional[Counter] = None):
+        self.counts: Counter = counts or Counter()
+
+    @staticmethod
+    def key(f: Finding) -> BaselineKey:
+        return (f.rule, f.path, f.context)
+
+    @classmethod
+    def from_findings(cls, findings: Sequence[Finding]) -> "Baseline":
+        return cls(Counter(cls.key(f) for f in findings))
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path, encoding="utf-8") as fh:
+            data = json.load(fh)
+        counts: Counter = Counter()
+        for entry in data.get("findings", []):
+            key = (entry["rule"], entry["path"], entry["context"])
+            counts[key] = int(entry.get("count", 1))
+        return cls(counts)
+
+    def dump(self, path: str) -> None:
+        entries = [
+            {"rule": r, "path": p, "context": c, "count": n}
+            for (r, p, c), n in sorted(self.counts.items())
+        ]
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(
+                {"version": self.VERSION, "findings": entries}, fh, indent=2
+            )
+            fh.write("\n")
+
+    def new_findings(self, findings: Sequence[Finding]) -> List[Finding]:
+        """Findings beyond the baselined count for their key."""
+        budget = Counter(self.counts)
+        out: List[Finding] = []
+        for f in findings:
+            k = self.key(f)
+            if budget[k] > 0:
+                budget[k] -= 1
+            else:
+                out.append(f)
+        return out
+
+    def stale_entries(self, findings: Sequence[Finding]) -> List[BaselineKey]:
+        """Baseline entries no longer produced (candidates for cleanup)."""
+        seen = Counter(self.key(f) for f in findings)
+        out: List[BaselineKey] = []
+        for k, n in sorted(self.counts.items()):
+            if seen[k] < n:
+                out.append(k)
+        return out

@@ -1,0 +1,208 @@
+"""Runtime retrace guard: steady-state compile-count invariants.
+
+A jitted serving hot path must compile a bounded number of times —
+once per distinct argument signature, with the signature set itself
+bounded (one for the decode step, one per prefill bucket). Anything
+beyond that is a *retrace*: the one-shot compression promise re-smuggled
+in as a per-round compile at serve time. Shape-keyed retraces are
+invisible to throughput asserts on small runs (the compile hides in the
+first round's wall time) — this guard makes them loud.
+
+Usage::
+
+    guard = RetraceGuard()
+    step = guard.wrap("decode", jitted_step, max_sigs=1)
+    ...  # serve
+    guard.compiles()   # {"decode": 1}
+    guard.freeze()     # post-warmup: any further compile raises
+
+Each wrapped call records the argument *signature* — pytree structure +
+per-leaf (shape, dtype, weak_type) — and reads the function's compile
+count (``fn._cache_size()``) before/after. A compile on a
+previously-seen signature, a compile after :meth:`freeze`, or a
+``max_sigs`` overflow raises :class:`RetraceError` naming the function
+and the signature delta against the last accepted signature.
+
+``ContinuousEngine(check_retrace=True)`` wraps prefill / prefix-prefill /
+decode / speculative-round in one guard per run and surfaces the counts
+as ``jit_compiles_*`` / ``jit_retraces`` metrics keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+class RetraceError(AssertionError):
+    """A guarded function recompiled outside its steady-state budget."""
+
+
+def compile_count(fn: Any) -> Optional[int]:
+    """Number of traces cached for a jitted function; None when the
+    object exposes no compile-count API (guard degrades to signature
+    bookkeeping only)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+def _leaf_signature(x: Any) -> Tuple:
+    if isinstance(x, jax.Array):
+        aval = getattr(x, "aval", None)
+        weak = bool(getattr(aval, "weak_type", False))
+        return ("jax", tuple(x.shape), str(x.dtype), weak)
+    if isinstance(x, np.ndarray):
+        return ("np", tuple(x.shape), str(x.dtype))
+    if isinstance(x, (bool, int, float, complex)):
+        # python scalars trace as weak-typed avals; the *type* is the
+        # signature, the value is not (unless marked static, in which
+        # case a retrace per value is exactly what we want to surface —
+        # but static args don't reach here as leaves anyway)
+        return ("py", type(x).__name__)
+    if x is None:
+        return ("none",)
+    return ("obj", type(x).__name__)
+
+
+def arg_signature(args: Tuple, kwargs: Optional[Dict] = None) -> Tuple:
+    """Hashable signature of a call: treedef + per-leaf abstract shape."""
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs or {}))
+    return (str(treedef), tuple(_leaf_signature(x) for x in leaves))
+
+
+def _sig_delta(old: Tuple, new: Tuple) -> str:
+    if old[0] != new[0]:
+        return f"pytree structure changed: {old[0]} -> {new[0]}"
+    diffs: List[str] = []
+    for i, (a, b) in enumerate(zip(old[1], new[1], strict=False)):
+        if a != b:
+            diffs.append(f"leaf {i}: {a} -> {b}")
+    if len(old[1]) != len(new[1]):
+        diffs.append(f"leaf count {len(old[1])} -> {len(new[1])}")
+    return "; ".join(diffs) if diffs else "signatures identical (cache evicted?)"
+
+
+@dataclasses.dataclass
+class _Guarded:
+    fn: Any
+    max_sigs: Optional[int]
+    base_count: Optional[int]
+    sigs: List[Tuple] = dataclasses.field(default_factory=list)
+    compiles: int = 0
+
+
+class RetraceGuard:
+    """Tracks compile counts of wrapped jitted functions and raises
+    :class:`RetraceError` on steady-state violations.
+
+    ``strict=False`` records violations in :attr:`violations` instead of
+    raising (the count still lands in :meth:`retraces`)."""
+
+    def __init__(self, strict: bool = True):
+        self.strict = strict
+        self._fns: Dict[str, _Guarded] = {}
+        self._frozen = False
+        self.violations: List[str] = []
+
+    # -- registration ----------------------------------------------------
+
+    def wrap(
+        self, name: str, fn: Callable, max_sigs: Optional[int] = None
+    ) -> Callable:
+        """Return a call-through wrapper for ``fn`` that enforces the
+        steady-state invariants. ``max_sigs`` bounds the number of
+        distinct argument signatures (1 for a fixed-shape decode step;
+        None for bucket-bounded prefill)."""
+        g = _Guarded(fn=fn, max_sigs=max_sigs, base_count=compile_count(fn))
+        self._fns[name] = g
+
+        def wrapped(*args, **kwargs):
+            sig = arg_signature(args, kwargs)
+            before = compile_count(g.fn)
+            out = g.fn(*args, **kwargs)
+            after = compile_count(g.fn)
+            self._observe(name, g, sig, before, after)
+            return out
+
+        wrapped.__name__ = f"retrace_guard[{name}]"
+        return wrapped
+
+    # -- invariants ------------------------------------------------------
+
+    def _fail(self, msg: str) -> None:
+        self.violations.append(msg)
+        if self.strict:
+            raise RetraceError(msg)
+
+    def _observe(
+        self,
+        name: str,
+        g: _Guarded,
+        sig: Tuple,
+        before: Optional[int],
+        after: Optional[int],
+    ) -> None:
+        compiled = after is not None and before is not None and after > before
+        known = sig in g.sigs
+        if compiled:
+            g.compiles += after - before
+            if known:
+                self._fail(
+                    f"`{name}` retraced on an already-traced signature "
+                    f"(compile #{g.compiles} this run) — non-hashable "
+                    "side input or cache eviction; signature: "
+                    f"{_sig_delta(g.sigs[-1], sig)}"
+                )
+            elif self._frozen:
+                self._fail(
+                    f"`{name}` compiled post-warmup (compile "
+                    f"#{g.compiles} this run) — argument delta vs last "
+                    "warm signature: "
+                    + (_sig_delta(g.sigs[-1], sig) if g.sigs else "first call")
+                )
+        if not known:
+            if (
+                g.max_sigs is not None
+                and len(g.sigs) >= g.max_sigs
+                and compiled
+            ):
+                self._fail(
+                    f"`{name}` exceeded its signature budget "
+                    f"({g.max_sigs}): shape-keyed retrace — delta vs last "
+                    "accepted signature: " + _sig_delta(g.sigs[-1], sig)
+                )
+            g.sigs.append(sig)
+
+    def freeze(self) -> None:
+        """Enter post-warmup mode: from here on every compile (even on a
+        brand-new signature) is a violation."""
+        self._frozen = True
+
+    # -- reporting -------------------------------------------------------
+
+    def compiles(self) -> Dict[str, int]:
+        """Compiles observed through the wrappers this run, per name."""
+        return {name: g.compiles for name, g in self._fns.items()}
+
+    def signatures(self, name: str) -> List[Tuple]:
+        return list(self._fns[name].sigs)
+
+    def retraces(self) -> int:
+        """Steady-state violations observed (0 in a healthy run; can only
+        be nonzero in ``strict=False`` mode, strict mode raises)."""
+        return len(self.violations)
+
+    # -- context manager -------------------------------------------------
+
+    def __enter__(self) -> "RetraceGuard":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        del exc_type, exc, tb

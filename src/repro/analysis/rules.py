@@ -1,0 +1,397 @@
+"""slimcheck rule set SC001–SC005 (catalog: docs/static-analysis.md).
+
+Each rule is a function ``rule(model) -> Iterator[Finding]`` over the
+per-file :class:`~repro.analysis.lint.FileModel`; the registry maps rule
+ids to (summary, function). Rules anchor findings to the offending line
+so suppressions (``# slimcheck: disable=SCnnn``) and the baseline can
+address them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.scopes import FuncInfo, Taint, attr_chain
+
+# jit parameters that select a compiled program variant rather than feed
+# it data: leaving one traced turns every distinct value into a silent
+# retrace (or a tracer leaking into Python control flow). SC003 requires
+# them in static_argnums/static_argnames.
+CONFIG_PARAM_NAMES = {
+    "interpret", "bits", "block_size", "bs", "bm", "bn", "bk", "g",
+    "group_size", "K", "eos", "eos_id", "greedy", "greedy_only",
+    "unroll", "n_blocks", "max_len", "vocab_size", "rank", "sync_every",
+    "levels", "grid", "pattern", "arch", "n_slots", "spec_pad",
+}
+# NOTE: lowercase "k" is deliberately absent — in attention code `k` is
+# the key tensor, not the speculative draft length.
+
+# parameters that name cache-scale device buffers: an un-donated
+# ``.at[].set`` on one doubles its HBM footprint per step (XLA must keep
+# the input alive) — SC005 requires the jit site to donate them.
+CACHE_PARAM_NAMES = {
+    "cache", "kv_cache", "buf", "buffer", "pool", "k_pool", "v_pool",
+}
+
+# host-synchronizing callables by dotted-chain tail
+_SYNC_FUNCS = {
+    ("jax", "device_get"): "jax.device_get",
+    ("jax", "block_until_ready"): "jax.block_until_ready",
+}
+# host-synchronizing methods on array values
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+# numpy materializers (traced-scope only; host lists are legitimate input)
+_NP_FUNCS = {"asarray", "array"}
+# builtins that force a concrete value out of a tracer
+_CONCRETIZERS = {"float", "int", "bool", "complex"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    context: str  # stripped source line — the baseline key
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _finding(model, rule: str, node: ast.AST, message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    col = getattr(node, "col_offset", 0)
+    return Finding(
+        rule=rule,
+        path=model.path,
+        line=line,
+        col=col,
+        message=message,
+        context=model.line_text(line),
+    )
+
+
+def _call_chain(node: ast.Call) -> Tuple[str, ...]:
+    return attr_chain(node.func)
+
+
+def _is_sync_call(node: ast.Call) -> Optional[str]:
+    chain = _call_chain(node)
+    for tail, label in _SYNC_FUNCS.items():
+        if chain[-len(tail):] == tail or chain == tail[-1:]:
+            return label
+    if (
+        isinstance(node.func, ast.Attribute)
+        and node.func.attr in _SYNC_METHODS
+        and not chain  # method on a non-name expression, e.g. buf[i].item()
+    ):
+        return f".{node.func.attr}()"
+    if chain and chain[-1] in _SYNC_METHODS and len(chain) > 1:
+        return f".{chain[-1]}()"
+    return None
+
+
+# -- SC001: Python control flow on traced values -------------------------
+
+
+def _static_safe_test(test: ast.AST) -> bool:
+    """`x is None` / `isinstance(...)` tests are trace-time structural
+    checks, not value branches."""
+    if isinstance(test, ast.Compare) and all(
+        isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops
+    ):
+        return True
+    if isinstance(test, ast.Call):
+        chain = attr_chain(test.func)
+        if chain and chain[-1] == "isinstance":
+            return True
+    return False
+
+
+def sc001(model) -> Iterator[Finding]:
+    for fi in model.scopes.traced_functions():
+        taint = model.taint(fi)
+        for node in model.walk_function(fi):
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+                kind = "if" if isinstance(node, ast.If) else "while"
+            elif isinstance(node, ast.Assert):
+                test, kind = node.test, "assert"
+            elif isinstance(node, ast.IfExp):
+                test, kind = node.test, "conditional expression"
+            else:
+                continue
+            if _static_safe_test(test):
+                continue
+            if not taint.is_tainted(test):
+                continue
+            names = sorted(taint.tainted_names(test))
+            yield _finding(
+                model, "SC001", node,
+                f"Python `{kind}` on traced value(s) {names} inside traced "
+                f"scope `{fi.qualname}` — this concretizes a tracer "
+                "(ConcretizationError at best, a silent retrace per value "
+                "at worst); use jnp.where / lax.cond / lax.while_loop",
+            )
+
+
+# -- SC002: host syncs in traced scope / the serving hot loop ------------
+
+
+def _sc002_traced(model) -> Iterator[Finding]:
+    for fi in model.scopes.traced_functions():
+        taint = model.taint(fi)
+        for node in model.walk_function(fi):
+            if not isinstance(node, ast.Call):
+                continue
+            label = _is_sync_call(node)
+            if label is not None:
+                yield _finding(
+                    model, "SC002", node,
+                    f"host sync `{label}` inside traced scope "
+                    f"`{fi.qualname}` — forces a device round-trip per "
+                    "trace; return the value and sync at a declared site",
+                )
+                continue
+            chain = _call_chain(node)
+            if (
+                len(chain) >= 2
+                and chain[-1] in _NP_FUNCS
+                and chain[-2] in ("np", "numpy")
+                and node.args
+                and taint.is_tainted(node.args[0])
+            ):
+                yield _finding(
+                    model, "SC002", node,
+                    f"`{'.'.join(chain)}` materializes a traced value on "
+                    f"host inside traced scope `{fi.qualname}` — use "
+                    "jnp.asarray or keep it on device",
+                )
+            elif (
+                len(chain) == 1
+                and chain[0] in _CONCRETIZERS
+                and node.args
+                and taint.is_tainted(node.args[0])
+            ):
+                yield _finding(
+                    model, "SC002", node,
+                    f"`{chain[0]}()` concretizes traced value(s) "
+                    f"{sorted(taint.tainted_names(node.args[0]))} inside "
+                    f"traced scope `{fi.qualname}`",
+                )
+
+
+def _is_device_sync_call(node: ast.Call) -> Optional[str]:
+    """Loop-mode matcher: only *explicit* device syncs. `.item()` /
+    `.tolist()` are excluded here — on the host side of the engine they
+    are overwhelmingly numpy idiom, not device round-trips."""
+    chain = _call_chain(node)
+    for tail, label in _SYNC_FUNCS.items():
+        if chain[-len(tail):] == tail or chain == tail[-1:]:
+            return label
+    if (
+        isinstance(node.func, ast.Attribute)
+        and node.func.attr == "block_until_ready"
+    ):
+        return ".block_until_ready()"
+    return None
+
+
+def _walk_no_defs(roots: List[ast.AST]) -> Iterator[ast.AST]:
+    """ast.walk that prunes nested def/lambda subtrees — a definition
+    statement inside a loop body executes nothing by itself."""
+    stack = list(roots)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _loop_sync_calls(
+    model, fi: FuncInfo, body: List[ast.stmt], seen_fns: Set[FuncInfo]
+) -> Iterator[ast.Call]:
+    """Sync calls in ``body``, following simple-name calls into functions
+    defined locally in this module (the engine's `preempt_slot` pattern),
+    but not into nested loops' own reports (dedup happens in the rule)."""
+    for node in _walk_no_defs(list(body)):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_device_sync_call(node) is not None:
+            yield node
+        elif isinstance(node.func, ast.Name):
+            callee = model.scopes.resolve_name(node.func.id, fi)
+            if (
+                callee is not None
+                and not callee.traced
+                and callee not in seen_fns
+                and not isinstance(callee.node, ast.Lambda)
+            ):
+                seen_fns.add(callee)
+                yield from _loop_sync_calls(
+                    model, callee, callee.node.body, seen_fns
+                )
+
+
+def _sc002_engine_loop(model) -> Iterator[Finding]:
+    if "/serving/" not in model.path.replace("\\", "/"):
+        return
+    for fi in model.scopes.functions:
+        if fi.traced or isinstance(fi.node, ast.Lambda):
+            continue
+        for node in ast.walk(fi.node):
+            if not isinstance(node, (ast.While, ast.For)):
+                continue
+            seen: Set[FuncInfo] = set()
+            for call in _loop_sync_calls(
+                model, fi, [*node.body, *node.orelse], seen
+            ):
+                label = _is_device_sync_call(call)
+                yield _finding(
+                    model, "SC002", call,
+                    f"host sync `{label}` inside the serving per-round "
+                    f"loop of `{fi.qualname}` outside a declared sync "
+                    "site — every occurrence stalls the dispatch "
+                    "pipeline; fold into an existing sync or mark the "
+                    "line `# slimcheck: sync-site`",
+                )
+
+
+def sc002(model) -> Iterator[Finding]:
+    seen: Set[Tuple[int, int]] = set()
+    for f in (*_sc002_traced(model), *_sc002_engine_loop(model)):
+        key = (f.line, f.col)
+        if key not in seen:
+            seen.add(key)
+            yield f
+
+
+# -- SC003: config-like jit params that are not static -------------------
+
+
+_ARRAYISH_ANNOTATIONS = {"ndarray", "Array", "ArrayLike", "DeviceArray"}
+
+
+def _array_annotated(fi: FuncInfo, name: str) -> bool:
+    a = fi.node.args
+    for p in (*a.posonlyargs, *a.args, *a.kwonlyargs):
+        if p.arg == name and p.annotation is not None:
+            chain = attr_chain(p.annotation)
+            return bool(chain) and chain[-1] in _ARRAYISH_ANNOTATIONS
+    return False
+
+
+def sc003(model) -> Iterator[Finding]:
+    for fi in model.scopes.traced_functions():
+        site = fi.jit_site
+        if site is None or site.static_unknown:
+            continue
+        static = fi.static_param_names() | fi.partial_static
+        loose = [
+            p
+            for p in fi.param_names()
+            if p in CONFIG_PARAM_NAMES
+            and p not in static
+            and not _array_annotated(fi, p)
+        ]
+        if loose:
+            yield _finding(
+                model, "SC003", fi.node,
+                f"jit of `{fi.qualname}` leaves config-like parameter(s) "
+                f"{loose} traced — each distinct value retraces (or leaks "
+                "a tracer into Python control flow); add to "
+                "static_argnums/static_argnames",
+            )
+
+
+# -- SC004: Pallas entry points bypassing default_interpret --------------
+
+_INTERPRET_RESOLVERS = {"resolve_interpret", "default_interpret"}
+
+
+def sc004(model) -> Iterator[Finding]:
+    for call in model.scopes.pallas_sites:
+        has_interpret = any(kw.arg == "interpret" for kw in call.keywords)
+        encl = model.scopes.enclosing(call)
+        resolver_seen = False
+        search_nodes = [encl.node] if encl is not None else [model.scopes.tree]
+        for root in search_nodes:
+            for node in ast.walk(root):
+                if isinstance(node, ast.Call):
+                    chain = attr_chain(node.func)
+                    if chain and chain[-1] in _INTERPRET_RESOLVERS:
+                        resolver_seen = True
+                        break
+            if resolver_seen:
+                break
+        if not has_interpret or not resolver_seen:
+            where = encl.qualname if encl is not None else "<module>"
+            yield _finding(
+                model, "SC004", call,
+                f"pallas_call in `{where}` bypasses "
+                "kernels/common.default_interpret — pass "
+                "`interpret=resolve_interpret(interpret)` so TPU hosts "
+                "compile and CPU hosts interpret without threading flags",
+            )
+
+
+# -- SC005: un-donated cache mutation in jitted functions ----------------
+
+
+def sc005(model) -> Iterator[Finding]:
+    for fi in model.scopes.traced_functions():
+        site = fi.jit_site
+        if site is None:
+            continue  # pallas kernels mutate Refs in place — not scored
+        if site.donate_unknown:
+            continue  # donation present but not statically readable
+        donated = set(site.donate_names)
+        pos = fi.positional_params()
+        for i in site.donate_nums:
+            if 0 <= i < len(pos):
+                donated.add(pos[i])
+        params = set(fi.param_names())
+        for node in model.walk_function(fi):
+            # <name>.at[...].set(...) / .add(...) on a cache-sized param
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("set", "add")
+                and isinstance(node.func.value, ast.Subscript)
+                and isinstance(node.func.value.value, ast.Attribute)
+                and node.func.value.value.attr == "at"
+                and isinstance(node.func.value.value.value, ast.Name)
+            ):
+                continue
+            name = node.func.value.value.value.id
+            if name in CACHE_PARAM_NAMES and name in params and name not in donated:
+                yield _finding(
+                    model, "SC005", node,
+                    f"`.at[].{node.func.attr}` on cache-sized parameter "
+                    f"`{name}` in jitted `{fi.qualname}` without donation "
+                    "— XLA keeps the input alive, doubling the buffer's "
+                    "HBM footprint per call; add donate_argnums/"
+                    "donate_argnames for it",
+                )
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    func: Callable
+
+
+RULES: Dict[str, Rule] = {
+    r.id: r
+    for r in [
+        Rule("SC001", "Python control flow on traced values", sc001),
+        Rule("SC002", "host sync in traced scope / serving hot loop", sc002),
+        Rule("SC003", "config-like jit parameter not static", sc003),
+        Rule("SC004", "Pallas entry point bypasses default_interpret", sc004),
+        Rule("SC005", "un-donated cache mutation in jitted function", sc005),
+    ]
+}

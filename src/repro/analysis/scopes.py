@@ -1,0 +1,531 @@
+"""Traced-scope resolution and trace-time taint for the slimcheck lint.
+
+A *traced scope* is a function whose body executes under a JAX trace:
+
+* decorated with ``jax.jit`` (bare, factory-call, or via
+  ``functools.partial(jax.jit, ...)``),
+* passed to a ``jax.jit(...)`` call expression — the serving engines'
+  locally-defined closures (``self._step = jax.jit(_step, ...)``) resolve
+  through the enclosing scope chain,
+* passed (possibly through ``functools.partial``) as the kernel body of a
+  ``pl.pallas_call``,
+* or *called from* any of the above **within the same module** (the
+  flash-decode online-softmax helpers, the sampling core). Cross-module
+  propagation is out of scope — rules that need it run where the jit
+  lives.
+
+Inside a traced scope the analysis tracks a coarse forward *taint*: the
+set of names holding traced values. Non-static parameters seed it;
+assignments whose right-hand side touches a tainted name propagate it.
+Trace-time-static projections — ``.shape`` / ``.ndim`` / ``.dtype`` /
+``.size`` attributes and ``len()`` / ``isinstance()`` calls — strip
+taint, so the ubiquitous ``m, k = x.shape`` unpacking stays branchable.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+# attribute projections of a traced array that are static at trace time
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type", "sharding"}
+# calls whose result is always trace-time static, whatever the argument
+STATIC_CALLS = {"len", "isinstance", "type", "id", "repr", "str", "hash"}
+
+
+def attr_chain(node: ast.AST) -> Tuple[str, ...]:
+    """``jax.experimental.pallas.pallas_call`` -> ("jax", "experimental",
+    "pallas", "pallas_call"); non-Name/Attribute roots yield ()."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _is_jit_func(func: ast.AST) -> bool:
+    chain = attr_chain(func)
+    return bool(chain) and chain[-1] == "jit"
+
+
+def _is_partial_func(func: ast.AST) -> bool:
+    chain = attr_chain(func)
+    return bool(chain) and chain[-1] == "partial"
+
+
+def _is_pallas_call_func(func: ast.AST) -> bool:
+    chain = attr_chain(func)
+    return bool(chain) and chain[-1] == "pallas_call"
+
+
+def _literal_int_set(node: ast.AST) -> Optional[Set[int]]:
+    """Evaluate a static_argnums/donate_argnums expression if it is a
+    literal int / tuple / list; None = not statically known."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[int] = set()
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.add(elt.value)
+            else:
+                return None
+        return out
+    return None
+
+
+def _literal_str_set(node: ast.AST) -> Optional[Set[str]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[str] = set()
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.add(elt.value)
+            else:
+                return None
+        return out
+    return None
+
+
+@dataclasses.dataclass
+class JitSite:
+    """One ``jax.jit`` application (decorator or call expression)."""
+
+    node: ast.AST  # the jit (or partial) call / decorator expression
+    lineno: int
+    static_names: Set[str] = dataclasses.field(default_factory=set)
+    static_nums: Set[int] = dataclasses.field(default_factory=set)
+    static_unknown: bool = False  # static_arg* present but not literal
+    donate_nums: Set[int] = dataclasses.field(default_factory=set)
+    donate_names: Set[str] = dataclasses.field(default_factory=set)
+    donate_present: bool = False  # donate_arg* kwarg appears at all
+    donate_unknown: bool = False  # donate_arg* present but not literal
+
+    def absorb_kwargs(self, call: ast.Call) -> None:
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                vals = _literal_str_set(kw.value)
+                if vals is None:
+                    self.static_unknown = True
+                else:
+                    self.static_names |= vals
+            elif kw.arg == "static_argnums":
+                nums = _literal_int_set(kw.value)
+                if nums is None:
+                    self.static_unknown = True
+                else:
+                    self.static_nums |= nums
+            elif kw.arg == "donate_argnums":
+                self.donate_present = True
+                nums = _literal_int_set(kw.value)
+                if nums is None:
+                    self.donate_unknown = True
+                else:
+                    self.donate_nums |= nums
+            elif kw.arg == "donate_argnames":
+                self.donate_present = True
+                vals = _literal_str_set(kw.value)
+                if vals is None:
+                    self.donate_unknown = True
+                else:
+                    self.donate_names |= vals
+
+
+@dataclasses.dataclass(eq=False)  # identity hash: one info per def node
+class FuncInfo:
+    node: FuncNode
+    name: str
+    qualname: str
+    parent: Optional["FuncInfo"]
+    traced: bool = False
+    traced_via: Optional[str] = None  # "jit" | "pallas" | "called-from:X"
+    jit_site: Optional[JitSite] = None
+    # params bound by functools.partial at the jit/pallas site — trace-time
+    # constants (a partial-bound python int stays a python int)
+    partial_static: Set[str] = dataclasses.field(default_factory=set)
+    # for call-propagated scopes: params that receive a *traced* argument
+    # at some call site. None = unknown / trace root — seed every
+    # non-static param.
+    seeded_taint: Optional[Set[str]] = None
+
+    @property
+    def lineno(self) -> int:
+        return self.node.lineno
+
+    def param_names(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+    def positional_params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+    def static_param_names(self) -> Set[str]:
+        """Parameter names pinned static at this function's jit site."""
+        site = self.jit_site
+        if site is None:
+            return set()
+        names = set(site.static_names)
+        pos = self.positional_params()
+        for i in site.static_nums:
+            if 0 <= i < len(pos):
+                names.add(pos[i])
+        return names
+
+
+class ModuleScopes:
+    """Function table, jit/pallas sites, and traced-scope closure for one
+    parsed module."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.functions: List[FuncInfo] = []
+        self.jit_sites: List[JitSite] = []
+        self.pallas_sites: List[ast.Call] = []
+        self._info_of: Dict[FuncNode, FuncInfo] = {}
+        # scope key (None = module, else FuncNode) -> name -> FuncInfo
+        self._defs: Dict[Optional[FuncNode], Dict[str, FuncInfo]] = {None: {}}
+        self._collect(tree.body, parent=None)
+        self._resolve_sites()
+        self._propagate_calls()
+
+    # -- construction ---------------------------------------------------
+
+    def _collect(self, body: Sequence[ast.stmt], parent: Optional[FuncInfo]):
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_func(stmt, stmt.name, parent)
+            elif isinstance(stmt, (ast.ClassDef,)):
+                # methods live in the class namespace; treat the class as
+                # transparent for parent chaining (no closure resolution
+                # through it, which matches Python semantics closely
+                # enough for jit-site resolution)
+                self._collect(stmt.body, parent)
+            else:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.Lambda):
+                        self._add_lambda(node, parent)
+
+    def _add_func(self, node: FuncNode, name: str, parent: Optional[FuncInfo]):
+        qual = f"{parent.qualname}.{name}" if parent else name
+        info = FuncInfo(node=node, name=name, qualname=qual, parent=parent)
+        self.functions.append(info)
+        self._info_of[node] = info
+        self._defs.setdefault(
+            parent.node if parent else None, {}
+        )[name] = info
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._collect(node.body, info)
+
+    def _add_lambda(self, node: ast.Lambda, parent: Optional[FuncInfo]):
+        if node in self._info_of:
+            return
+        qual = f"{parent.qualname}.<lambda>" if parent else "<lambda>"
+        info = FuncInfo(node=node, name="<lambda>", qualname=qual, parent=parent)
+        self.functions.append(info)
+        self._info_of[node] = info
+
+    def info_of(self, node: FuncNode) -> Optional[FuncInfo]:
+        return self._info_of.get(node)
+
+    def resolve_name(
+        self, name: str, scope: Optional[FuncInfo]
+    ) -> Optional[FuncInfo]:
+        """Resolve ``name`` to a function def visible from ``scope`` (the
+        enclosing scope chain, then module level)."""
+        cur = scope
+        while cur is not None:
+            hit = self._defs.get(cur.node, {}).get(name)
+            if hit is not None:
+                return hit
+            cur = cur.parent
+        return self._defs[None].get(name)
+
+    def enclosing(self, node: ast.AST) -> Optional[FuncInfo]:
+        """Innermost FuncInfo whose body contains ``node`` (by position)."""
+        best: Optional[FuncInfo] = None
+        for fi in self.functions:
+            for sub in ast.walk(fi.node):
+                if sub is node:
+                    if best is None or _contains(best.node, fi.node):
+                        best = fi
+                    break
+        return best
+
+    # -- jit / pallas site resolution -----------------------------------
+
+    def _jit_site_from_call(self, call: ast.Call) -> JitSite:
+        site = JitSite(node=call, lineno=call.lineno)
+        site.absorb_kwargs(call)
+        return site
+
+    def _resolve_decorators(self, fi: FuncInfo) -> None:
+        node = fi.node
+        if isinstance(node, ast.Lambda):
+            return
+        for dec in node.decorator_list:
+            site: Optional[JitSite] = None
+            if _is_jit_func(dec):  # bare @jax.jit
+                site = JitSite(node=dec, lineno=dec.lineno)
+            elif isinstance(dec, ast.Call):
+                if _is_jit_func(dec.func):  # @jax.jit(...)
+                    site = self._jit_site_from_call(dec)
+                elif (
+                    _is_partial_func(dec.func)
+                    and dec.args
+                    and _is_jit_func(dec.args[0])
+                ):  # @functools.partial(jax.jit, ...)
+                    site = self._jit_site_from_call(dec)
+            if site is not None:
+                self.jit_sites.append(site)
+                self._mark_traced(fi, "jit", site)
+
+    def _resolve_sites(self) -> None:
+        for fi in list(self.functions):
+            self._resolve_decorators(fi)
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _is_jit_func(node.func) and node.args:
+                site = self._jit_site_from_call(node)
+                self.jit_sites.append(site)
+                statics: Set[str] = set()
+                target = self._resolve_callable(node.args[0], node, statics)
+                if target is not None:
+                    target.partial_static |= statics
+                    self._mark_traced(target, "jit", site)
+            elif _is_pallas_call_func(node.func):
+                self.pallas_sites.append(node)
+                if node.args:
+                    statics = set()
+                    target = self._resolve_callable(node.args[0], node, statics)
+                    if target is not None:
+                        target.partial_static |= statics
+                        self._mark_traced(target, "pallas", None)
+
+    def _resolve_callable(
+        self, expr: ast.AST, at: ast.AST, statics: Optional[Set[str]] = None
+    ) -> Optional[FuncInfo]:
+        """First argument of a jit/pallas_call: Name, Lambda, or
+        (functools.)partial(Name|Lambda, ...). Keyword names bound by the
+        partial land in ``statics`` — they are trace-time constants."""
+        if isinstance(expr, ast.Lambda):
+            return self._info_of.get(expr)
+        if isinstance(expr, ast.Call) and _is_partial_func(expr.func):
+            if statics is not None:
+                statics.update(
+                    kw.arg for kw in expr.keywords if kw.arg is not None
+                )
+            if not expr.args:
+                return None
+            return self._resolve_callable(expr.args[0], at, statics)
+        if isinstance(expr, ast.Name):
+            return self.resolve_name(expr.id, self.enclosing(at))
+        return None
+
+    def _mark_traced(
+        self, fi: FuncInfo, via: str, site: Optional[JitSite]
+    ) -> None:
+        fi.traced = True
+        if fi.traced_via is None:
+            fi.traced_via = via
+        if site is not None and fi.jit_site is None:
+            fi.jit_site = site
+
+    def _propagate_calls(self) -> None:
+        """Functions called (by simple name) from a traced scope, defined
+        in this module, are traced too — transitively. Each call site also
+        records which callee params actually receive a *traced* argument
+        (per the caller's taint), so a helper called with static config
+        (``_quant_error_at(..., bits)`` where ``bits`` is static at the
+        real jit site) is not over-tainted."""
+        frontier = [fi for fi in self.functions if fi.traced]
+        while frontier:
+            fi = frontier.pop()
+            caller_taint = Taint(fi)
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                if not isinstance(node.func, ast.Name):
+                    continue
+                callee = self.resolve_name(node.func.id, fi)
+                if callee is None:
+                    continue
+                seeds = self._call_taint_seeds(node, callee, caller_taint)
+                if not callee.traced:
+                    callee.traced = True
+                    callee.traced_via = f"called-from:{fi.qualname}"
+                    callee.seeded_taint = seeds
+                    frontier.append(callee)
+                elif callee.seeded_taint is not None:
+                    # widen: union taint over every observed call site;
+                    # None (unmappable call) widens to full taint
+                    new = (
+                        None
+                        if seeds is None
+                        else callee.seeded_taint | seeds
+                    )
+                    if new != callee.seeded_taint:
+                        callee.seeded_taint = new
+                        frontier.append(callee)
+
+    def _call_taint_seeds(
+        self, call: ast.Call, callee: FuncInfo, caller_taint: "Taint"
+    ) -> Optional[Set[str]]:
+        """Callee params receiving a tainted argument at this call site;
+        None when the call cannot be mapped onto the signature (starred
+        args, **kwargs, *args overflow) — conservatively full taint."""
+        if any(isinstance(a, ast.Starred) for a in call.args):
+            return None
+        if any(kw.arg is None for kw in call.keywords):
+            return None
+        pos = callee.positional_params()
+        names = set(callee.param_names())
+        seeds: Set[str] = set()
+        for i, arg in enumerate(call.args):
+            if i >= len(pos):
+                return None  # lands in *args — give up on mapping
+            if caller_taint.is_tainted(arg):
+                seeds.add(pos[i])
+        for kw in call.keywords:
+            if kw.arg not in names:
+                return None
+            if caller_taint.is_tainted(kw.value):
+                seeds.add(kw.arg)
+        return seeds
+
+    def traced_functions(self) -> List[FuncInfo]:
+        return [fi for fi in self.functions if fi.traced]
+
+
+def _contains(outer: ast.AST, inner: ast.AST) -> bool:
+    return any(sub is inner for sub in ast.walk(outer))
+
+
+# -- taint --------------------------------------------------------------
+
+
+class Taint:
+    """Coarse forward taint over one traced function body.
+
+    Two passes over the statements reach a fixpoint for the common
+    backward-edge case (a loop body tainting a name read earlier)."""
+
+    def __init__(self, fi: FuncInfo):
+        self.fi = fi
+        static = fi.static_param_names() | fi.partial_static
+        seeds = {p for p in fi.param_names() if p not in static}
+        if fi.seeded_taint is not None:
+            # call-propagated scope: only params shown traced at some
+            # observed call site carry taint
+            seeds &= fi.seeded_taint
+        self.tainted: Set[str] = seeds
+        body = (
+            fi.node.body
+            if isinstance(fi.node.body, list)
+            else [ast.Expr(fi.node.body)]  # lambda body
+        )
+        for _ in range(2):
+            for stmt in body:
+                self._visit(stmt)
+
+    def is_tainted(self, expr: ast.AST) -> bool:
+        return self._expr_tainted(expr)
+
+    def tainted_names(self, expr: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        self._expr_tainted(expr, collect=out)
+        return out
+
+    # -- statement walk -------------------------------------------------
+
+    def _visit(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = stmt.value
+            if value is not None and self._expr_tainted(value):
+                targets = (
+                    stmt.targets
+                    if isinstance(stmt, ast.Assign)
+                    else [stmt.target]
+                )
+                for t in targets:
+                    self._taint_target(t)
+        elif isinstance(stmt, ast.For):
+            if self._expr_tainted(stmt.iter):
+                self._taint_target(stmt.target)
+            for s in (*stmt.body, *stmt.orelse):
+                self._visit(s)
+            return
+        elif isinstance(stmt, (ast.While, ast.If)):
+            for s in (*stmt.body, *stmt.orelse):
+                self._visit(s)
+            return
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                if item.optional_vars is not None and self._expr_tainted(
+                    item.context_expr
+                ):
+                    self._taint_target(item.optional_vars)
+            for s in stmt.body:
+                self._visit(s)
+            return
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs (pl.when bodies) execute at trace time in the
+            # same taint environment; walk them in place
+            for s in stmt.body:
+                self._visit(s)
+            return
+        elif isinstance(stmt, (ast.Try,)):
+            for s in (
+                *stmt.body,
+                *(h for handler in stmt.handlers for h in handler.body),
+                *stmt.orelse,
+                *stmt.finalbody,
+            ):
+                self._visit(s)
+            return
+
+    def _taint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._taint_target(elt)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value)
+        # Attribute/Subscript targets: the base object is already named
+
+    # -- expression taint ------------------------------------------------
+
+    def _expr_tainted(
+        self, expr: ast.AST, collect: Optional[Set[str]] = None
+    ) -> bool:
+        hit = False
+        for node in self._taint_walk(expr):
+            if isinstance(node, ast.Name) and node.id in self.tainted:
+                hit = True
+                if collect is None:
+                    return True
+                collect.add(node.id)
+        return hit
+
+    def _taint_walk(self, expr: ast.AST) -> Iterator[ast.AST]:
+        """ast.walk that does not descend through trace-time-static
+        projections (``x.shape``, ``len(x)``, ``isinstance(x, T)``)."""
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+                continue
+            if isinstance(node, ast.Call):
+                fname = attr_chain(node.func)
+                if fname and fname[-1] in STATIC_CALLS:
+                    continue
+            yield node
+            stack.extend(ast.iter_child_nodes(node))

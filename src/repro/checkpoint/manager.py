@@ -147,7 +147,7 @@ def restore_pytree(
         else [None] * len(leaves)
     )
     out = []
-    for a, proto, sh in zip(leaves, like_leaves, shard_leaves):
+    for a, proto, sh in zip(leaves, like_leaves, shard_leaves, strict=True):
         arr = a.astype(proto.dtype) if hasattr(proto, "dtype") else a
         out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
     return jax.tree.unflatten(treedef, out)

@@ -130,6 +130,14 @@ def main(argv=None):
         help="bracket the run in jax.profiler.start_trace/stop_trace; "
         "the xprof capture lands in DIR (view with TensorBoard)",
     )
+    p.add_argument(
+        "--check-retrace", action="store_true",
+        help="wrap every jitted hot path in the runtime retrace guard "
+        "(repro.analysis.retrace): a steady-state recompile raises with "
+        "the offending function and argument-shape delta; per-path "
+        "compile counts print and land in --metrics-json as "
+        "jit_compiles_* / jit_retraces (continuous workload only)",
+    )
     args = p.parse_args(argv)
 
     if args.block_size > 0 and args.workload != "poisson":
@@ -159,6 +167,9 @@ def main(argv=None):
     if args.metrics_json and args.workload != "poisson":
         p.error("--metrics-json dumps the continuous engine's metrics "
                 "registry; it needs --workload poisson")
+    if args.check_retrace and args.workload != "poisson":
+        p.error("--check-retrace guards the continuous engine's jitted hot "
+                "paths; it needs --workload poisson")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -208,6 +219,7 @@ def main(argv=None):
             prefix_cache_max_entries=args.prefix_index_cap,
             prefix_cache_ttl=args.prefix_index_ttl,
             trace=tracer,
+            check_retrace=args.check_retrace,
         )
         if args.profile_dir:
             jax.profiler.start_trace(args.profile_dir)
@@ -263,6 +275,15 @@ def main(argv=None):
                 f"{m['draft_proposed']:.0f} proposed "
                 f"(acceptance {m['draft_acceptance_rate']:.2f}, K="
                 f"{args.speculative})"
+            )
+        if args.check_retrace:
+            counts = ", ".join(
+                f"{name}={n}"
+                for name, n in engine.retrace_guard.compiles().items()
+            )
+            print(
+                f"[serve/continuous] retrace guard: compiles {counts} | "
+                f"retraces {m['jit_retraces']:.0f}"
             )
         if tracer is not None:
             tracer.export(args.trace_out)

@@ -73,7 +73,7 @@ def compress_model(
 
         # (2) compress each eligible matrix in this period
         new_pp = jax.tree_util.tree_map(lambda a: a, pp)  # shallow-ish copy
-        for li, spec in enumerate(cfg.period):
+        for li, _spec in enumerate(cfg.period):
             lname = f"layer_{li}"
             lp = dict(new_pp[lname])
             for wname in list(lp.keys()):

@@ -46,7 +46,7 @@ def _axis_size(mesh: Mesh, name) -> int:
 def _fit(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
     """Drop spec entries that don't divide their dim (robust fallback)."""
     fitted = []
-    for dim, ax in zip(shape, spec):
+    for dim, ax in zip(shape, spec, strict=False):
         if ax is None:
             fitted.append(None)
         elif dim % _axis_size(mesh, ax) == 0:

@@ -212,8 +212,12 @@ def forward_hidden(
         h, aux = x, jnp.zeros((), jnp.float32)
         caches = []
         for i in range(cfg.n_periods):
-            pp = jax.tree.map(lambda a: a[i], params["blocks"])
-            c = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+            pp = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+            c = (
+                None
+                if cache is None
+                else jax.tree.map(lambda a, i=i: a[i], cache)
+            )
             h, nc, a = period_fn(pp, h, c)
             aux = aux + a
             if nc is not None:
@@ -390,11 +394,13 @@ def decode_step(
     else:
         x = jnp.take(params["embed"], token_or_embed, axis=0).astype(_dtype(cfg))
     scope = "serve/draft_step" if skip_adapters else "serve/decode_step"
-    with jax.named_scope(scope):
-        with L.skip_adapters() if skip_adapters else contextlib.nullcontext():
-            h, cache, _ = forward_hidden(
-                params, cfg, x, cache, pos, None, block_table=block_table
-            )
+    with (
+        jax.named_scope(scope),
+        L.skip_adapters() if skip_adapters else contextlib.nullcontext(),
+    ):
+        h, cache, _ = forward_hidden(
+            params, cfg, x, cache, pos, None, block_table=block_table
+        )
     logits = L.linear(_head_weights(params, cfg), h[:, -1:, :]).astype(jnp.float32)
     return logits[:, 0], cache
 

@@ -140,6 +140,12 @@ class ContinuousEngine:
         # record the request lifecycle as Chrome trace events — see
         # serving/tracing.py and docs/observability.md. None = off, and
         # every trace site reduces to one `is not None` check.
+        check_retrace: bool = False,  # wrap every jitted hot path in a
+        # RetraceGuard: a recompile on an already-traced signature, a
+        # shape-keyed retrace of the decode/speculative step, or any
+        # compile after retrace_guard.freeze() raises RetraceError naming
+        # the function and the argument-shape delta. Per-run compile
+        # counts surface as jit_compiles_* / jit_retraces metrics keys.
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
         if prefix_cache:
@@ -352,6 +358,26 @@ class ContinuousEngine:
 
         self._step = jax.jit(_step, donate_argnums=(1,))
 
+        # the retrace guard persists across run() calls: a second serve on
+        # the same engine must perform ZERO compiles (the post-warmup
+        # invariant tests pin down via guard.freeze())
+        self.check_retrace = check_retrace
+        self.retrace_guard = None
+        if check_retrace:
+            from repro.analysis.retrace import RetraceGuard
+
+            self.retrace_guard = RetraceGuard()
+            # prefill compiles once per bucket shape — bounded but not
+            # statically known here, so no max_sigs; the decode step is
+            # fixed-shape: a second signature IS the bug
+            self._admit = self.retrace_guard.wrap("prefill", self._admit)
+            self._admit_prefix = self.retrace_guard.wrap(
+                "prefill_prefix", self._admit_prefix
+            )
+            self._step = self.retrace_guard.wrap(
+                "decode", self._step, max_sigs=1
+            )
+
         self._eos = eos
         # speculative rounds are built lazily per sampling mode: an
         # all-greedy trace gets the RNG-free round variant (argmax
@@ -368,6 +394,12 @@ class ContinuousEngine:
             fn = build_spec_round(
                 self.cfg, self.speculative, self._eos, greedy=greedy
             )
+            if self.retrace_guard is not None:
+                # fixed-shape like the decode step: one signature, ever
+                fn = self.retrace_guard.wrap(
+                    f"spec_round_{'greedy' if greedy else 'sampled'}",
+                    fn, max_sigs=1,
+                )
             self._spec_rounds[greedy] = fn
         return fn
 
@@ -398,6 +430,11 @@ class ContinuousEngine:
             victim_policy=self.victim_policy,
         )
         metrics = ServingMetrics(b)
+        compiles0 = (
+            self.retrace_guard.compiles()
+            if self.retrace_guard is not None
+            else {}
+        )
         for r in requests:
             sched.submit(r)
             metrics.on_submit(r.rid, r.arrival)
@@ -507,7 +544,9 @@ class ContinuousEngine:
             req = running.pop(victim)
             em = emitted_host.pop(victim)
             toks = (
-                [int(t) for t in jax.device_get(buf[victim])[:em]]
+                # preemption is rare by construction (pool pressure); the
+                # victim's emitted tokens must survive the eviction
+                [int(t) for t in jax.device_get(buf[victim])[:em]]  # slimcheck: sync-site
                 if em > 0
                 else []
             )
@@ -616,7 +655,9 @@ class ContinuousEngine:
                         jnp.float32(req.temperature), table_dev,
                     )
                 with jax.profiler.TraceAnnotation("serve/prefill"):
-                    jax.block_until_ready(logits)
+                    # TTFT is defined at this fence: first token cannot be
+                    # timestamped without waiting for the prefill dispatch
+                    jax.block_until_ready(logits)  # slimcheck: sync-site
                 t_first = now()
                 metrics.on_first_token(req.rid, t_first)
                 if tr is not None:
@@ -728,13 +769,6 @@ class ContinuousEngine:
                             self.params, cache, logits, pos, active, emitted,
                             maxnew, buf, key, temps, table_dev, spec_counters,
                         )
-                    host_active, host_emitted = jax.device_get(
-                        (active, emitted)
-                    )
-                # draft + verify + commit are fused in one dispatch, so the
-                # whole burst's wall time is attributed to "verify" (the
-                # full-model pass dominates it)
-                phase("verify")
             else:
                 metrics.on_decode_steps(sync_every)
                 with jax.profiler.TraceAnnotation("serve/decode_burst"):
@@ -745,10 +779,16 @@ class ContinuousEngine:
                                 emitted, maxnew, buf, key, temps, table_dev,
                             )
                         )
-                    host_active, host_emitted = jax.device_get(
-                        (active, emitted)
-                    )
-                phase("decode")
+            # THE per-burst sync: one fetch feeds both the growth planner
+            # and the completion scan (the burst's dispatches are async, so
+            # the blocking wait lands here and is charged to the burst's
+            # phase — "verify" when speculative, since the fused draft+
+            # verify+commit dispatch is dominated by the full-model pass)
+            with jax.profiler.TraceAnnotation("serve/burst_sync"):
+                host_active, host_emitted = jax.device_get(  # slimcheck: sync-site
+                    (active, emitted)
+                )
+            phase("verify" if self.speculative else "decode")
             if tr is not None:
                 tr.complete(
                     "speculative_burst" if self.speculative else
@@ -763,7 +803,8 @@ class ContinuousEngine:
 
             done_slots = [s for s in running if not host_active[s]]
             if done_slots:
-                host_buf = jax.device_get(buf)
+                # token buffers leave the device only when a slot finishes
+                host_buf = jax.device_get(buf)  # slimcheck: sync-site
                 t_done = now()
                 for slot in done_slots:
                     req = running.pop(slot)
@@ -809,6 +850,14 @@ class ContinuousEngine:
             metrics.on_index_evictions(allocator.index_evictions)
         summary = metrics.summary()
         summary["peak_concurrency"] = float(peak_running)
+        if self.retrace_guard is not None:
+            # this run's compiles per hot path (0 across the board once
+            # the engine is warm) and total guard violations observed
+            for name, n in self.retrace_guard.compiles().items():
+                summary[f"jit_compiles_{name}"] = float(
+                    n - compiles0.get(name, 0)
+                )
+            summary["jit_retraces"] = float(self.retrace_guard.retraces())
         return ContinuousResult(
             requests=list(requests),
             metrics=summary,

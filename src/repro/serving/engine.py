@@ -109,7 +109,8 @@ class ServeEngine:
             if (
                 self.eos_id is not None
                 and steps % sync_every == 0
-                and bool(jax.device_get(jnp.all(done)))
+                # the all-done early-exit probe, rate-limited by sync_every
+                and bool(jax.device_get(jnp.all(done)))  # slimcheck: sync-site
             ):
                 break
         host_buf, host_emitted = jax.device_get((buf, emitted))

@@ -193,7 +193,7 @@ class Histogram:
         track_exact: bool = True,
     ):
         bounds = tuple(float(b) for b in boundaries)
-        if not bounds or any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:])):
+        if not bounds or any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:], strict=False)):
             raise ValueError("boundaries must be non-empty and ascending")
         self.name = name
         self.boundaries = bounds

@@ -81,7 +81,7 @@ class TestCompressModel:
         flat0 = jax.tree_util.tree_flatten_with_path(before)[0]
         flat1 = jax.tree_util.tree_flatten_with_path(cp2)[0]
         moved, frozen_same = 0, True
-        for (p0, a0), (p1, a1) in zip(flat0, flat1):
+        for (p0, a0), (_p1, a1) in zip(flat0, flat1, strict=True):
             names = [str(getattr(x, "name", getattr(x, "key", ""))) for x in p0]
             is_lora = any(n in ("lora_l", "lora_r") for n in names)
             same = bool(jnp.all(a0 == a1)) if a0.size else True

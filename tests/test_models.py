@@ -178,5 +178,5 @@ class TestLoss:
         assert abs(float(l_flat) - float(l_sqrt)) < 1e-4
         g1 = jax.grad(lambda p: T.train_loss(p, cfg, b))(params)
         g2 = jax.grad(lambda p: T.train_loss(p, cfg2, b))(params)
-        for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g2), strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-3, atol=1e-5)

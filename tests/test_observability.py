@@ -198,7 +198,9 @@ class TestInstruments:
             # the bucket containing the exact order statistic
             edges = (0.5,) + bounds + (9.0,)
             width = max(
-                hi - lo for lo, hi in zip(edges, edges[1:]) if lo <= exact <= hi
+                hi - lo
+                for lo, hi in zip(edges, edges[1:], strict=False)
+                if lo <= exact <= hi
             )
             assert abs(est - exact) <= width
         assert h._samples is None  # bounded memory: no raw samples
@@ -234,7 +236,11 @@ class TestInstruments:
         est = h.quantile_est(q)
         assert min(xs) <= est <= max(xs)
         edges = (min(xs),) + bounds + (max(xs),)
-        tol = max(hi - lo for lo, hi in zip(edges, edges[1:]) if lo <= exact <= hi)
+        tol = max(
+            hi - lo
+            for lo, hi in zip(edges, edges[1:], strict=False)
+            if lo <= exact <= hi
+        )
         assert abs(est - exact) <= tol + 1e-12
 
     def test_registry_get_or_create_and_kind_pinning(self):
@@ -395,9 +401,9 @@ class TestEngineTracing:
         # spans start at arrival=ts(queued); latency = finish - arrival
         arr = {r: queued[r]["ts"] / 1e6 for r in queued}
         mean = lambda xs: sum(xs) / len(xs)  # noqa: E731
-        got_lat = mean([lat - arr[r] for lat, r in zip(lats, request)])
+        got_lat = mean([lat - arr[r] for lat, r in zip(lats, request, strict=True)])
         assert got_lat == pytest.approx(m["mean_latency_s"], abs=1e-9)
-        got_ttft = mean([t - arr[r] for t, r in zip(ttfts, prefill)])
+        got_ttft = mean([t - arr[r] for t, r in zip(ttfts, prefill, strict=True)])
         assert got_ttft == pytest.approx(m["mean_ttft_s"], abs=1e-9)
         # the engine lane saw at least one decode burst, and counter
         # tracks sampled the backlog

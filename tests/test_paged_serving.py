@@ -269,3 +269,84 @@ class TestPagedEngine:
             ContinuousEngine(
                 params, cfg, n_slots=1, max_len=MAX_LEN, block_size=7
             )
+
+
+# ---------------------------------------------------------------------------
+# retrace guard: steady-state compile-count invariants (check_retrace=True)
+# ---------------------------------------------------------------------------
+
+
+class TestRetraceGuard:
+    def test_steady_state_paged_decode_compiles_once(self, model):
+        """Bucketed paged decode: one compile per hot path on the cold
+        run, ZERO on a warm re-run — enforced, not just observed (the
+        guard is frozen before the second run, so any compile raises)."""
+        cfg, params = model
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=16,
+            prefill_bucket=16, check_retrace=True,
+        )
+
+        def trace():
+            return synthetic_trace(
+                4, rate=100.0, vocab_size=cfg.vocab_size,
+                prompt_len=(5, 12), max_new_tokens=(3, 6), seed=3,
+            )
+
+        res = eng.run(trace(), sync_every=2, max_new_cap=6)
+        assert res.metrics["completed"] == 4
+        assert res.metrics["jit_compiles_decode"] == 1.0
+        assert res.metrics["jit_compiles_prefill"] == 1.0  # one bucket
+        assert res.metrics["jit_retraces"] == 0.0
+        eng.retrace_guard.freeze()
+        warm = eng.run(trace(), sync_every=2, max_new_cap=6)
+        assert warm.metrics["completed"] == 4
+        assert warm.metrics["jit_compiles_decode"] == 0.0
+        assert warm.metrics["jit_compiles_prefill"] == 0.0
+        assert warm.metrics["jit_retraces"] == 0.0
+
+    def test_slim_compressed_zero_post_warmup_compiles(self, model):
+        cfg, params = model
+        dcfg = SyntheticLMConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0
+        )
+        calib = calibration_batch(dcfg, n_samples=4)
+        cp, _ = compress_model(
+            params, cfg, calib,
+            CompressionConfig(adapter="slim", rank=16, quantize_adapters=True),
+        )
+        prompts = _prompts(cfg, 2, 8)
+        eng = ContinuousEngine(
+            cp, cfg, n_slots=2, max_len=MAX_LEN, block_size=8,
+            check_retrace=True,
+        )
+        eng.run(_as_requests(prompts, max_new=5), sync_every=2, max_new_cap=5)
+        eng.retrace_guard.freeze()
+        warm = eng.run(
+            _as_requests(prompts, max_new=5), sync_every=2, max_new_cap=5
+        )
+        assert warm.metrics["jit_compiles_decode"] == 0.0
+        assert warm.metrics["jit_retraces"] == 0.0
+
+    def test_unbucketed_prefill_compiles_per_shape_not_per_request(
+        self, model
+    ):
+        """Without bucketing, prefill compiles once per distinct prompt
+        length — shape-keyed, never per-request. Two requests per length
+        must share one trace."""
+        cfg, params = model
+        reqs = []
+        for i, plen in enumerate((6, 6, 9, 9)):
+            reqs.append(
+                Request(
+                    rid=i, prompt=list(range(1, plen + 1)), arrival=0.0,
+                    max_new_tokens=3,
+                )
+            )
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=16,
+            check_retrace=True,
+        )
+        res = eng.run(reqs, sync_every=2, max_new_cap=3)
+        assert res.metrics["jit_compiles_prefill"] == 2.0  # lengths, not reqs
+        assert res.metrics["jit_retraces"] == 0.0

@@ -409,3 +409,46 @@ class TestPreemptionEngine:
         cfg, params = model
         with pytest.raises(ValueError):
             ContinuousEngine(params, cfg, n_slots=2, max_len=MAX_LEN, preemption=True)
+
+
+class TestPreemptionRetrace:
+    def test_preemption_resume_never_retraces_decode(self, model):
+        """Forced eviction and resume churn the prefill shapes (resume
+        prompts grow by the emitted tokens) but the decode step must stay
+        on its single trace — and prefill must only ever compile on new
+        shapes, never re-trace a seen one."""
+        cfg, params = model
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=4,
+            n_blocks=10, preemption=True, decode_reserve=0,
+            check_invariants=True, check_retrace=True,
+        )
+        reqs = _requests(cfg, 5, plen=10, max_new=10)
+        res = eng.run(reqs, sync_every=2, max_new_cap=10)
+        assert res.metrics["completed"] == 5
+        assert res.metrics["preemptions"] >= 1
+        assert res.metrics["jit_compiles_decode"] == 1.0
+        assert res.metrics["jit_retraces"] == 0.0
+        _assert_solo_exact(params, cfg, res)
+
+    def test_bucketed_resume_zero_post_warmup_compiles(self, model):
+        """With prefill bucketing the resume shapes collapse onto the
+        bucket grid: a warm engine re-serving the same trace (evictions
+        included) performs zero compiles across every hot path."""
+        cfg, params = model
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=4,
+            n_blocks=10, preemption=True, decode_reserve=0,
+            prefill_bucket=4, check_retrace=True,
+        )
+        eng.run(_requests(cfg, 5, plen=10, max_new=10), sync_every=2,
+                max_new_cap=10)
+        eng.retrace_guard.freeze()
+        warm = eng.run(
+            _requests(cfg, 5, plen=10, max_new=10), sync_every=2,
+            max_new_cap=10,
+        )
+        assert warm.metrics["completed"] == 5
+        assert warm.metrics["jit_compiles_decode"] == 0.0
+        assert warm.metrics["jit_compiles_prefill"] == 0.0
+        assert warm.metrics["jit_retraces"] == 0.0

@@ -1,0 +1,141 @@
+"""RetraceGuard: compile-count invariants on real jitted functions and
+deterministic violation paths via a fake compile-count probe."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.retrace import (
+    RetraceError,
+    RetraceGuard,
+    arg_signature,
+    compile_count,
+)
+
+
+class FakeJit:
+    """Callable with a controllable ``_cache_size`` — lets the tests drive
+    the guard through compile/no-compile transitions deterministically."""
+
+    def __init__(self):
+        self.n = 0
+        self.compile_next = True
+
+    def _cache_size(self):
+        return self.n
+
+    def __call__(self, *args, **kwargs):
+        if self.compile_next:
+            self.n += 1
+        return args
+
+
+class TestSignatures:
+    def test_leaf_kinds(self):
+        x = jnp.zeros((2, 3), jnp.float32)
+        sig = arg_signature((x, np.zeros(4), 3, None, "s"), {"k": 1.0})
+        kinds = [leaf[0] for leaf in sig[1]]
+        # strings are pytree leaves of kind "obj"; python scalars "py"
+        assert kinds == ["jax", "np", "py", "obj", "py"]
+        assert ("none",) not in sig[1]  # None is a treedef node, not a leaf
+
+    def test_shape_change_changes_signature(self):
+        a = arg_signature((jnp.zeros((2, 3)),), None)
+        b = arg_signature((jnp.zeros((2, 4)),), None)
+        assert a != b
+
+    def test_dtype_and_weak_type_in_signature(self):
+        a = arg_signature((jnp.int32(1),), None)
+        b = arg_signature((1,), None)  # python int: not even a jax leaf
+        assert a != b
+
+    def test_compile_count_on_jitted_fn(self):
+        f = jax.jit(lambda x: x * 2)
+        base = compile_count(f) or 0
+        f(jnp.zeros((3,)))
+        assert compile_count(f) == base + 1
+        f(jnp.ones((3,)))  # same shape: cache hit
+        assert compile_count(f) == base + 1
+        f(jnp.zeros((4,)))  # new shape: recompile
+        assert compile_count(f) == base + 2
+
+    def test_compile_count_none_for_plain_callable(self):
+        assert compile_count(lambda x: x) is None
+
+
+class TestGuardHappyPath:
+    def test_real_jit_steady_state(self):
+        guard = RetraceGuard()
+        step = guard.wrap("decode", jax.jit(lambda x: x + 1), max_sigs=1)
+        for _ in range(4):
+            step(jnp.zeros((2,)))
+        assert guard.compiles() == {"decode": 1}
+        assert guard.retraces() == 0
+        guard.freeze()
+        step(jnp.ones((2,)))  # warm signature: fine post-freeze
+        assert guard.compiles() == {"decode": 1}
+
+    def test_prefill_buckets_unbounded_sigs(self):
+        guard = RetraceGuard()
+        prefill = guard.wrap("prefill", jax.jit(lambda x: x.sum()))
+        for n in (8, 16, 32):
+            prefill(jnp.zeros((n,)))
+        assert guard.compiles() == {"prefill": 3}
+        assert len(guard.signatures("prefill")) == 3
+        assert guard.retraces() == 0
+
+
+class TestGuardViolations:
+    def test_shape_keyed_retrace_over_budget(self):
+        guard = RetraceGuard()
+        step = guard.wrap("decode", jax.jit(lambda x: x * 2), max_sigs=1)
+        step(jnp.zeros((2, 3)))
+        with pytest.raises(RetraceError, match="signature budget"):
+            step(jnp.zeros((2, 4)))
+        # the error names the offending leaf delta
+        assert "(2, 3)" in guard.violations[0]
+        assert "(2, 4)" in guard.violations[0]
+
+    def test_post_freeze_compile_raises(self):
+        guard = RetraceGuard()
+        prefill = guard.wrap("prefill", jax.jit(lambda x: x.sum()))
+        prefill(jnp.zeros((8,)))
+        guard.freeze()
+        with pytest.raises(RetraceError, match="post-warmup"):
+            prefill(jnp.zeros((16,)))
+
+    def test_recompile_on_seen_signature_raises(self):
+        fake = FakeJit()
+        guard = RetraceGuard()
+        f = guard.wrap("decode", fake)
+        fake.compile_next = True
+        f(1)
+        fake.compile_next = False
+        f(1)  # cache hit
+        fake.compile_next = True  # simulated eviction / unstable side input
+        with pytest.raises(RetraceError, match="already-traced signature"):
+            f(1)
+
+    def test_strict_false_records_instead_of_raising(self):
+        fake = FakeJit()
+        guard = RetraceGuard(strict=False)
+        f = guard.wrap("decode", fake)
+        f(1)
+        f(1)  # compile_next still True: recompile on the seen signature
+        assert guard.retraces() == 1
+        assert guard.compiles() == {"decode": 2}
+
+    def test_plain_callable_degrades_to_bookkeeping(self):
+        # no _cache_size: compiles can't be observed, nothing ever raises
+        guard = RetraceGuard()
+        f = guard.wrap("step", lambda x: x, max_sigs=1)
+        f(jnp.zeros((2,)))
+        f(jnp.zeros((3,)))
+        assert guard.compiles() == {"step": 0}
+        assert guard.retraces() == 0
+
+    def test_context_manager_passthrough(self):
+        with RetraceGuard() as guard:
+            f = guard.wrap("g", jax.jit(lambda x: x))
+            f(jnp.zeros((1,)))
+        assert guard.compiles() == {"g": 1}

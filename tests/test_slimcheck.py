@@ -1,0 +1,735 @@
+"""slimcheck static analysis: seeded-bug self-tests per rule, traced-scope
+resolution (decorators, call-form jit on local closures, pallas partials),
+taint precision, suppression syntax, baseline machinery — and the gate:
+``src/`` lints clean against the checked-in baseline.
+
+Pure stdlib on the lint side (no jax import), mirroring the CI lint job.
+"""
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (
+    Baseline,
+    FileModel,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.rules import RULES
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def lint(src, path="<test>", rules=None):
+    return lint_source(textwrap.dedent(src), path=path, rules=rules)
+
+
+def codes(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# SC001: Python control flow on traced values
+# ---------------------------------------------------------------------------
+
+
+class TestSC001:
+    def test_if_on_traced_param(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+            """
+        )
+        assert codes(out) == ["SC001"]
+        assert "['x']" in out[0].message
+
+    def test_while_and_assert_and_ifexp(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x, n):
+                assert x.sum() > 0
+                y = x if n > 2 else -x
+                while n > 0:
+                    n = n - 1
+                return y
+            """
+        )
+        assert sorted(codes(out)) == ["SC001", "SC001", "SC001"]
+
+    def test_static_projections_are_branchable(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                m, k = x.shape
+                if m > k and len(x) > 1 and x.ndim == 2:
+                    return x * 2
+                return x
+            """
+        )
+        assert out == []
+
+    def test_static_argnames_param_is_branchable(self):
+        out = lint(
+            """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("greedy",))
+            def f(x, greedy):
+                if greedy:
+                    return x
+                return -x
+            """
+        )
+        assert out == []
+
+    def test_is_none_test_is_structural(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x, table):
+                if table is None:
+                    return x
+                return x + table
+            """
+        )
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# SC002: host syncs in traced scope / the serving loop
+# ---------------------------------------------------------------------------
+
+
+class TestSC002:
+    def test_device_get_in_traced_scope(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                y = jax.device_get(x)
+                return y
+            """
+        )
+        assert codes(out) == ["SC002"]
+
+    def test_item_and_float_on_tracer(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                a = x.sum().item()
+                b = float(x[0])
+                return a + b
+            """
+        )
+        assert sorted(codes(out)) == ["SC002", "SC002"]
+
+    def test_np_asarray_on_traced_value(self):
+        out = lint(
+            """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                return np.asarray(x)
+            """
+        )
+        assert codes(out) == ["SC002"]
+
+    def test_np_asarray_on_host_list_ok(self):
+        out = lint(
+            """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def f(x):
+                mask = np.asarray([1, 0, 1])
+                return x * mask
+            """
+        )
+        assert out == []
+
+    def test_serving_loop_sync_flagged(self):
+        out = lint(
+            """
+            import jax
+
+            def run(reqs):
+                while reqs:
+                    state = step(state)
+                    flags = jax.device_get(state)
+                return state
+            """,
+            path="src/repro/serving/fake.py",
+        )
+        assert codes(out) == ["SC002"]
+        assert "per-round loop" in out[0].message
+
+    def test_serving_loop_sync_through_local_helper(self):
+        # the engine's `preempt_slot` pattern: the sync hides in a local
+        # (non-traced) helper called from the loop
+        out = lint(
+            """
+            import jax
+
+            def run(reqs):
+                def fetch(state):
+                    return jax.device_get(state)
+
+                while reqs:
+                    flags = fetch(reqs)
+                return flags
+            """,
+            path="src/repro/serving/fake.py",
+        )
+        assert codes(out) == ["SC002"]
+
+    def test_loop_outside_serving_not_scored(self):
+        out = lint(
+            """
+            import jax
+
+            def run(reqs):
+                while reqs:
+                    flags = jax.device_get(reqs)
+                return flags
+            """,
+            path="src/repro/bench/fake.py",
+        )
+        assert out == []
+
+    def test_host_numpy_tolist_in_loop_not_scored(self):
+        # .tolist() on host numpy is idiom, not a device sync — loop mode
+        # only flags explicit jax.device_get / block_until_ready
+        out = lint(
+            """
+            import numpy as np
+
+            def make(n):
+                out = []
+                for i in range(n):
+                    out.append(np.arange(i).tolist())
+                return out
+            """,
+            path="src/repro/serving/fake.py",
+        )
+        assert out == []
+
+    def test_sync_site_annotation_suppresses(self):
+        out = lint(
+            """
+            import jax
+
+            def run(reqs):
+                while reqs:
+                    flags = jax.device_get(reqs)  # slimcheck: sync-site
+                return flags
+            """,
+            path="src/repro/serving/fake.py",
+        )
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# SC003: config-like jit params not static
+# ---------------------------------------------------------------------------
+
+
+class TestSC003:
+    def test_loose_config_param(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x, block_size):
+                return x.reshape(-1, block_size)
+            """
+        )
+        assert codes(out) == ["SC003"]
+        assert "block_size" in out[0].message
+
+    def test_static_argnums_clears(self):
+        out = lint(
+            """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnums=(1,))
+            def f(x, block_size):
+                return x.reshape(-1, block_size)
+            """
+        )
+        assert out == []
+
+    def test_static_argnames_clears(self):
+        out = lint(
+            """
+            import jax
+
+            def g(x, bits):
+                return x * bits
+
+            h = jax.jit(g, static_argnames=("bits",))
+            """
+        )
+        assert out == []
+
+    def test_array_annotated_k_not_config(self):
+        # in attention code `k` is the key tensor; annotation marks it
+        out = lint(
+            """
+            import jax
+            import jax.numpy as jnp
+
+            @jax.jit
+            def attn(q: jnp.ndarray, K: jnp.ndarray):
+                return q @ K.T
+            """
+        )
+        assert out == []
+
+    def test_non_literal_static_argnums_skipped(self):
+        out = lint(
+            """
+            import jax
+
+            nums = (1,)
+
+            def f(x, block_size):
+                return x.reshape(-1, block_size)
+
+            g = jax.jit(f, static_argnums=nums)
+            """
+        )
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# SC004: pallas entry points bypassing default_interpret
+# ---------------------------------------------------------------------------
+
+
+class TestSC004:
+    def test_bare_pallas_call_flagged(self):
+        out = lint(
+            """
+            from jax.experimental import pallas as pl
+
+            def op(x):
+                return pl.pallas_call(kernel, out_shape=x)(x)
+            """
+        )
+        assert codes(out) == ["SC004"]
+
+    def test_resolver_plus_kwarg_clears(self):
+        out = lint(
+            """
+            from jax.experimental import pallas as pl
+
+            from repro.kernels.common import resolve_interpret
+
+            def op(x, interpret=None):
+                return pl.pallas_call(
+                    kernel,
+                    out_shape=x,
+                    interpret=resolve_interpret(interpret),
+                )(x)
+            """
+        )
+        assert out == []
+
+    def test_interpret_kwarg_without_resolver_flagged(self):
+        out = lint(
+            """
+            from jax.experimental import pallas as pl
+
+            def op(x):
+                return pl.pallas_call(kernel, out_shape=x, interpret=True)(x)
+            """
+        )
+        assert codes(out) == ["SC004"]
+
+
+# ---------------------------------------------------------------------------
+# SC005: un-donated cache mutation in jitted functions
+# ---------------------------------------------------------------------------
+
+
+class TestSC005:
+    def test_undonated_cache_set(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def step(params, cache, x):
+                cache = cache.at[0].set(x)
+                return cache
+            """
+        )
+        assert codes(out) == ["SC005"]
+
+    def test_donate_argnums_clears(self):
+        out = lint(
+            """
+            import jax
+
+            def step(params, cache, x):
+                cache = cache.at[0].set(x)
+                return cache
+
+            step_j = jax.jit(step, donate_argnums=(1,))
+            """
+        )
+        assert out == []
+
+    def test_non_literal_donation_skipped(self):
+        # `donate_argnums=(1,) if flag else ()` is not statically readable
+        out = lint(
+            """
+            import jax
+
+            flag = True
+
+            def step(params, cache, x):
+                cache = cache.at[0].set(x)
+                return cache
+
+            step_j = jax.jit(step, donate_argnums=(1,) if flag else ())
+            """
+        )
+        assert out == []
+
+    def test_non_cache_param_not_scored(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def step(params, logits, x):
+                logits = logits.at[0].set(x)
+                return logits
+            """
+        )
+        assert out == []
+
+
+# ---------------------------------------------------------------------------
+# traced-scope resolution and taint seeding
+# ---------------------------------------------------------------------------
+
+
+class TestScopeResolution:
+    def test_call_form_jit_on_local_closure(self):
+        # the ContinuousEngine idiom: `self._step = jax.jit(_step, ...)`
+        # where _step is a closure defined inside __init__
+        out = lint(
+            """
+            import jax
+
+            class Engine:
+                def __init__(self):
+                    def _step(params, cache, x):
+                        if x > 0:
+                            return cache
+                        return cache * 2
+
+                    self._step = jax.jit(_step, donate_argnums=(1,))
+            """
+        )
+        assert codes(out) == ["SC001"]
+
+    def test_call_propagation_taints_helpers(self):
+        out = lint(
+            """
+            import jax
+
+            def helper(y):
+                if y > 0:
+                    return y
+                return -y
+
+            @jax.jit
+            def f(x):
+                return helper(x)
+            """
+        )
+        assert codes(out) == ["SC001"]
+
+    def test_call_propagation_static_args_stay_static(self):
+        # bits is static at the real jit site; the helper receiving it
+        # must not be over-tainted (the slim_quant _quant_error_at case)
+        out = lint(
+            """
+            import functools
+            import jax
+
+            def helper(y, bits):
+                half = float(2 ** (bits - 1))
+                if bits > 4:
+                    return y * half
+                return y
+
+            @functools.partial(jax.jit, static_argnames=("bits",))
+            def f(x, bits):
+                return helper(x, bits)
+            """
+        )
+        assert out == []
+
+    def test_pallas_partial_kwargs_are_static(self):
+        # the group_quant idiom: partial-bound kernel config is a python
+        # int at trace time, not a Ref
+        out = lint(
+            """
+            import functools
+
+            from jax.experimental import pallas as pl
+
+            from repro.kernels.common import resolve_interpret
+
+            def _kernel(x_ref, o_ref, *, g, bits):
+                half = float(2 ** (bits - 1))
+                if g > 1:
+                    o_ref[...] = x_ref[...] * half
+
+            def op(x, g, bits, interpret=None):
+                return pl.pallas_call(
+                    functools.partial(_kernel, g=g, bits=bits),
+                    out_shape=x,
+                    interpret=resolve_interpret(interpret),
+                )(x)
+            """
+        )
+        assert out == []
+
+    def test_pallas_kernel_ref_taint_still_scored(self):
+        out = lint(
+            """
+            from jax.experimental import pallas as pl
+
+            from repro.kernels.common import resolve_interpret
+
+            def _kernel(x_ref, o_ref):
+                v = x_ref[0, 0]
+                if v > 0:
+                    o_ref[...] = v
+
+            def op(x, interpret=None):
+                return pl.pallas_call(
+                    _kernel,
+                    out_shape=x,
+                    interpret=resolve_interpret(interpret),
+                )(x)
+            """
+        )
+        assert codes(out) == ["SC001"]
+
+
+# ---------------------------------------------------------------------------
+# suppressions / baseline / runner
+# ---------------------------------------------------------------------------
+
+
+SC001_SRC = """
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+"""
+
+
+class TestSuppression:
+    def test_same_line_disable(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:  # slimcheck: disable=SC001
+                    return x
+                return -x
+            """
+        )
+        assert out == []
+
+    def test_preceding_comment_line_disable(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                # slimcheck: disable=SC001
+                if x > 0:
+                    return x
+                return -x
+            """
+        )
+        assert out == []
+
+    def test_wrong_code_does_not_suppress(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:  # slimcheck: disable=SC002
+                    return x
+                return -x
+            """
+        )
+        assert codes(out) == ["SC001"]
+
+    def test_bare_disable_suppresses_all(self):
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:  # slimcheck: disable
+                    return x
+                return -x
+            """
+        )
+        assert out == []
+
+    def test_preceding_code_line_comment_does_not_leak_down(self):
+        # a disable on a *code* line only covers that line, not the next
+        out = lint(
+            """
+            import jax
+
+            @jax.jit
+            def f(x):
+                y = x * 2  # slimcheck: disable=SC001
+                if y > 0:
+                    return y
+                return -y
+            """
+        )
+        assert codes(out) == ["SC001"]
+
+
+class TestBaseline:
+    def test_roundtrip_and_budget(self, tmp_path):
+        findings = lint(SC001_SRC, path="pkg/mod.py")
+        assert len(findings) == 1
+        base = Baseline.from_findings(findings)
+        p = tmp_path / "base.json"
+        base.dump(str(p))
+        loaded = Baseline.load(str(p))
+        assert loaded.new_findings(findings) == []
+
+    def test_new_finding_beyond_budget(self):
+        findings = lint(SC001_SRC, path="pkg/mod.py")
+        base = Baseline.from_findings(findings)
+        # the same finding twice: one covered, one new
+        assert len(base.new_findings(findings * 2)) == 1
+
+    def test_line_number_changes_do_not_churn(self):
+        base = Baseline.from_findings(lint(SC001_SRC, path="pkg/mod.py"))
+        shifted = "\n\n\n" + SC001_SRC  # same code, different line numbers
+        moved = lint(shifted, path="pkg/mod.py")
+        assert base.new_findings(moved) == []
+
+    def test_stale_entries_reported(self):
+        base = Baseline.from_findings(lint(SC001_SRC, path="pkg/mod.py"))
+        assert base.stale_entries([]) == [
+            ("SC001", "pkg/mod.py", "if x > 0:")
+        ]
+
+
+class TestRunner:
+    def test_rule_registry_complete(self):
+        assert sorted(RULES) == ["SC001", "SC002", "SC003", "SC004", "SC005"]
+
+    def test_rule_subset_selection(self):
+        out = lint(SC001_SRC, rules=["SC002"])
+        assert out == []
+
+    def test_file_model_windows_paths_normalized(self):
+        m = FileModel("src\\repro\\serving\\x.py", "x = 1\n")
+        assert m.path == "src/repro/serving/x.py"
+
+    def test_syntax_error_collected_not_raised(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(:\n")
+        res = lint_paths([str(tmp_path)])
+        assert res.findings == [] and len(res.errors) == 1
+
+
+# ---------------------------------------------------------------------------
+# the gate: src/ lints clean against the checked-in baseline
+# ---------------------------------------------------------------------------
+
+
+class TestRepoClean:
+    def test_src_lints_clean(self):
+        res = lint_paths([os.path.join(REPO, "src")])
+        base_path = os.path.join(REPO, "slimcheck-baseline.json")
+        base = Baseline.load(base_path)
+        new = base.new_findings(res.findings)
+        assert new == [], "\n".join(f.render() for f in new)
+        assert res.errors == []
+        # the engine's declared sync sites stay annotated, not silently
+        # dropped: the suppression count is the contract
+        assert res.suppressed >= 5
+
+    def test_cli_module_entrypoint(self, tmp_path):
+        import subprocess
+        import sys
+
+        clean = tmp_path / "ok.py"
+        clean.write_text("x = 1\n")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        proc = subprocess.run(
+            [
+                sys.executable, "-m", "repro.analysis",
+                str(clean), "--no-baseline",
+            ],
+            capture_output=True, text=True, env=env, cwd=str(tmp_path),
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+        seeded = tmp_path / "bug.py"
+        seeded.write_text(SC001_SRC)
+        proc = subprocess.run(
+            [
+                sys.executable, "-m", "repro.analysis",
+                str(seeded), "--no-baseline", "--stats",
+            ],
+            capture_output=True, text=True, env=env, cwd=str(tmp_path),
+        )
+        assert proc.returncode == 1
+        assert "SC001" in proc.stdout

@@ -281,7 +281,7 @@ class TestSpeculativeSampling:
         drf = jnp.tile(drf_logits, (1, 1, 1))  # [B=1, K-1=1, V]
         counts = np.zeros(v)
         trials = 3000
-        for i in range(trials):
+        for _ in range(trials):
             key, k1, k2 = jax.random.split(key, 3)
             prop = draw_tokens(drf[:, 0], temps, k1)
             fed = jnp.stack([jnp.zeros((1,), jnp.int32), prop], axis=1)
@@ -467,3 +467,49 @@ class TestSpeculativeEngine:
         req = Request(0, [1] * 8, arrival=0.0, max_new_tokens=8)
         # 8 + 8 positions -> 4 blocks, plus 4 scratch positions -> 1 more
         assert sched.block_need(req) == 5
+
+
+# ---------------------------------------------------------------------------
+# retrace guard: the speculative round is fixed-shape (check_retrace=True)
+# ---------------------------------------------------------------------------
+
+
+class TestSpeculativeRetrace:
+    @pytest.mark.parametrize("k", [2, 4])
+    def test_spec_round_compiles_once_and_never_retraces(self, model, k):
+        """The fused draft+verify+commit round must compile exactly once
+        per serve (max_sigs=1 in the guard: a second signature raises) and
+        zero times on a warm re-run."""
+        cfg, params = model
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=4,
+            speculative=k, check_retrace=True,
+        )
+        reqs = _requests(cfg, 4, plen=10, max_new=10)
+        res = eng.run(reqs, sync_every=2, max_new_cap=10)
+        assert res.metrics["completed"] == 4
+        assert res.metrics["jit_compiles_spec_round_greedy"] == 1.0
+        # the plain decode step never runs in speculative mode
+        assert res.metrics["jit_compiles_decode"] == 0.0
+        assert res.metrics["jit_retraces"] == 0.0
+        eng.retrace_guard.freeze()
+        warm = eng.run(
+            _requests(cfg, 4, plen=10, max_new=10), sync_every=2,
+            max_new_cap=10,
+        )
+        assert warm.metrics["jit_compiles_spec_round_greedy"] == 0.0
+        assert warm.metrics["jit_compiles_prefill"] == 0.0
+        assert warm.metrics["jit_retraces"] == 0.0
+
+    def test_sampled_round_guarded_separately(self, model):
+        cfg, params = model
+        eng = ContinuousEngine(
+            params, cfg, n_slots=2, max_len=MAX_LEN, block_size=4,
+            speculative=2, check_retrace=True,
+        )
+        reqs = _requests(cfg, 2, plen=8, max_new=6)
+        for r in reqs:
+            r.temperature = 0.8
+        res = eng.run(reqs, sync_every=2, max_new_cap=6)
+        assert res.metrics["jit_compiles_spec_round_sampled"] == 1.0
+        assert res.metrics["jit_retraces"] == 0.0

@@ -94,7 +94,7 @@ class TestData:
         a = [next(synthetic_batches(cfg, start_step=i))["tokens"] for i in range(3)]
         it = synthetic_batches(cfg)
         b = [next(it)["tokens"] for _ in range(3)]
-        for x, y in zip(a, b):
+        for x, y in zip(a, b, strict=True):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
     def test_host_sharding_disjoint(self):
@@ -118,7 +118,7 @@ class TestData:
         # count distinct successors per token: banded chain -> small
         succ = {}
         for row in toks:
-            for a, bb in zip(row[:-1], row[1:]):
+            for a, bb in zip(row[:-1], row[1:], strict=True):
                 succ.setdefault(int(a), set()).add(int(bb))
         avg = np.mean([len(v) for v in succ.values()])
         assert avg <= 8 + 1
@@ -139,7 +139,7 @@ class TestCheckpoint:
         t = self._tree()
         save_pytree(str(tmp_path), 3, t)
         out = restore_pytree(str(tmp_path), 3, t)
-        for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(out), strict=True):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
     def test_latest_skips_corrupt(self, tmp_path):
@@ -185,7 +185,7 @@ class TestDistributed:
         total_true = np.zeros(64)
         total_comp = np.zeros(64)
         residual = None
-        for i in range(50):
+        for _ in range(50):
             g = jnp.asarray(rng.normal(0, 1, (64,)) * 0.01, jnp.float32)
             total_true += np.asarray(g)
             cg, residual = ef_compress_grads({"g": g}, residual)

@@ -33,7 +33,7 @@ def trained():
 
     it = synthetic_batches(dcfg)
     l0 = None
-    for i in range(60):
+    for _ in range(60):
         params, state, loss = step(params, state, next(it))
         if l0 is None:
             l0 = float(loss)
