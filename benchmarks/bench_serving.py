@@ -59,6 +59,17 @@ tracer off and on (interleaved best-of-3): recording is a tuple append into a
 ring buffer, and the VERDICT holds the tracer to <= 5% throughput cost —
 the contract that makes always-on tracing viable in production.
 
+The *overload* cells flood the slim speculative engine with a 2x
+oversubscribed Poisson burst (twice the request count at several times
+the arrival rate, bounded queue of ``N_SLOTS``) with the degradation
+ladder off and on (docs/robustness.md). Both runs record shed rate and
+the surviving requests' p95 TTFT; the VERDICT requires both runs to
+account for every request (completed + shed == submitted, nothing hung
+or lost), genuine load shedding on both sides, the ladder run to
+actually degrade (``degraded_rounds >= 1``, the spec->plain fallback
+riding a pre-registered hot path), and zero steady-state recompiles
+under fire on both sides.
+
 All cells land in ``BENCH_serving.json`` (tok/s, TTFT p50/p95, TPOT
 p50/p95, per-phase host wall time, hit rate, peak blocks in use) so the
 perf trajectory is tracked across PRs.
@@ -78,8 +89,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import Table, compress_with, trained_model
 from repro.core.pipeline import CompressionConfig
-from repro.serving import ContinuousEngine, ServeEngine, ServingMetrics
-from repro.serving import synthetic_trace
+from repro.serving import ContinuousEngine, GuardConfig, ServeEngine
+from repro.serving import ServingMetrics, synthetic_trace
 from repro.serving.block_pool import RESERVED_BLOCKS
 
 # Heavy-traffic regime: arrivals fast enough that a backlog forms (the
@@ -117,6 +128,15 @@ PREFIX_MAX_NEW = (4, 16)
 PREFIX_MAX_LEN = PREFIX_LEN + PREFIX_TAIL + PREFIX_MAX_NEW[1] + 8
 PREFIX_MAX_LEN = -(-PREFIX_MAX_LEN // BLOCK_SIZE) * BLOCK_SIZE
 PREFIX_BLOCKS = N_SLOTS * (PREFIX_MAX_LEN // BLOCK_SIZE) + RESERVED_BLOCKS
+
+# overload cells: a 2x oversubscribed Poisson flood (twice the trace at
+# several times the arrival rate) against a bounded queue, ladder off/on
+N_OVERLOAD = int(os.environ.get("BENCH_SERVE_OVERLOAD_REQUESTS",
+                                str(2 * N_REQUESTS)))
+OVERLOAD_RATE = float(os.environ.get("BENCH_SERVE_OVERLOAD_RATE",
+                                     str(8 * RATE)))
+OVERLOAD_MAX_NEW = (4, 16)
+OVERLOAD_MAX_QUEUE = N_SLOTS
 
 BENCH_JSON = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_serving.json"
@@ -262,6 +282,37 @@ def shared_prefix_runner(params, cfg, vocab, prefix_cache):
     return one
 
 
+def overload_trace(vocab, seed=13):
+    return synthetic_trace(
+        N_OVERLOAD, rate=OVERLOAD_RATE, vocab_size=vocab,
+        prompt_len=(PROMPT_LEN, PROMPT_LEN),
+        max_new_tokens=OVERLOAD_MAX_NEW, seed=seed,
+    )
+
+
+def run_overload(params, cfg, vocab, degrade):
+    """Replay the oversubscribed flood through the slim speculative
+    engine behind a bounded queue, with the degradation ladder off or
+    on. Shed requests end ABORTED; survivors' TTFT lands in the
+    histogram the summary reports (a shed request never gets a first
+    token, so the p95 is over survivors by construction)."""
+    engine = ContinuousEngine(
+        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
+        prefill_bucket=PROMPT_LEN, block_size=BLOCK_SIZE,
+        n_blocks=PAGED_BLOCKS, speculative=2,
+        guard=GuardConfig(max_queue=OVERLOAD_MAX_QUEUE, degradation=degrade),
+        check_retrace=True,
+    )
+    warm = synthetic_trace(
+        2, rate=1e6, vocab_size=vocab,
+        prompt_len=(PROMPT_LEN, PROMPT_LEN), max_new_tokens=(2, 2), seed=99,
+    )
+    engine.run(warm, sync_every=4, max_new_cap=OVERLOAD_MAX_NEW[1])
+    res = engine.run(overload_trace(vocab), sync_every=4,
+                     max_new_cap=OVERLOAD_MAX_NEW[1])
+    return res.metrics
+
+
 def run(table: Table):
     cfg, dcfg, dense = trained_model()
     vocab = cfg.vocab_size
@@ -298,6 +349,15 @@ def run(table: Table):
             "phase_decode_s": round(m["phase_decode_s"], 4),
             "phase_verify_s": round(m["phase_verify_s"], 4),
         }
+        # robustness accounting (docs/robustness.md), recorded only when
+        # the cell actually shed/expired/failed/degraded so the existing
+        # cell schemas stay unchanged
+        for k in (
+            "shed_requests", "expired_requests", "failed_requests",
+            "degraded_rounds", "watchdog_trips",
+        ):
+            if m.get(k):
+                row[k] = int(m[k])
         # retrace-guard compile counts for the recorded (best) rep —
         # engines warm outside the timed replay, so every hot path should
         # read 0 here; a nonzero value names the path that recompiled
@@ -529,6 +589,41 @@ def run(table: Table):
         f"{t_off['tokens_per_s']:.1f} off)"
     )
 
+    # overload: 2x oversubscribed Poisson flood against the bounded
+    # queue, degradation ladder off vs on (docs/robustness.md). Not a
+    # timing race — the gate is accounting and survival: every request
+    # ends FINISHED or shed-ABORTED (nothing hangs or vanishes), both
+    # sides genuinely shed, the ladder run actually degrades, and the
+    # steady state stays retrace-free under fire. Shed rate and the
+    # survivors' p95 TTFT are recorded for the trajectory.
+    nl = run_overload(slim, cfg, vocab, degrade=False)
+    ld = run_overload(slim, cfg, vocab, degrade=True)
+    record("slim/overload_noladder", nl)
+    record("slim/overload_ladder", ld)
+    overload_ok = (
+        nl["completed"] + nl["shed_requests"] == N_OVERLOAD
+        and ld["completed"] + ld["shed_requests"] == N_OVERLOAD
+        and nl["shed_requests"] > 0
+        and ld["shed_requests"] > 0
+        and ld["degraded_rounds"] >= 1
+        and nl["jit_retraces"] == 0
+        and ld["jit_retraces"] == 0
+    )
+    verdicts.append(overload_ok)
+    verdict_log["slim/overload_survives_with_ladder"] = overload_ok
+    print(
+        f"VERDICT[slim]: overload flood ({N_OVERLOAD} requests, queue "
+        f"bound {OVERLOAD_MAX_QUEUE}) "
+        f"{'SURVIVES' if overload_ok else 'DOES NOT SURVIVE'} "
+        "with full accounting (ladder off: "
+        f"shed {int(nl['shed_requests'])}/{N_OVERLOAD}, surviving p95 "
+        f"TTFT {nl['p95_ttft_s']:.3f}s; ladder on: "
+        f"shed {int(ld['shed_requests'])}/{N_OVERLOAD}, surviving p95 "
+        f"TTFT {ld['p95_ttft_s']:.3f}s, "
+        f"{int(ld['degraded_rounds'])} degraded rounds, peak level "
+        f"{int(ld['peak_degradation_level'])}; retraces 0/0)"
+    )
+
     with open(BENCH_JSON, "w") as f:
         json.dump(
             {
@@ -546,6 +641,9 @@ def run(table: Table):
                     "prefix_max_len": PREFIX_MAX_LEN,
                     "prefix_blocks": PREFIX_BLOCKS,
                     "speculative_k": [2, 4],
+                    "overload_requests": N_OVERLOAD,
+                    "overload_rate": OVERLOAD_RATE,
+                    "overload_max_queue": OVERLOAD_MAX_QUEUE,
                 },
                 "cells": cells,
                 "verdicts": verdict_log,
@@ -566,7 +664,8 @@ def run(table: Table):
             "charging on the oversubscribed pool, or self-speculative "
             "decoding failed its cells (slim: tok/s win + token-exact at "
             "K in {2, 4}; dense: exact lookahead at acceptance 1.0), or "
-            "span tracing cost more than 5% throughput"
+            "span tracing cost more than 5% throughput, or the overload "
+            "flood broke accounting / never degraded / retraced"
         )
 
 

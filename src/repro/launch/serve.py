@@ -31,6 +31,8 @@ from repro.models import transformer as T
 from repro.models.compress import compress_model, summarize_reports
 from repro.serving import (
     ContinuousEngine,
+    FaultPlan,
+    GuardConfig,
     ServeEngine,
     SpanTracer,
     synthetic_trace,
@@ -130,6 +132,40 @@ def main(argv=None):
         help="bracket the run in jax.profiler.start_trace/stop_trace; "
         "the xprof capture lands in DIR (view with TensorBoard)",
     )
+    # robustness (docs/robustness.md)
+    p.add_argument(
+        "--deadline", type=float, default=0.0, metavar="SECONDS",
+        help="default per-request TTL: a request still queued or running "
+        "this long after its arrival lands in the EXPIRED terminal state "
+        "(0 = no deadlines; continuous workload only)",
+    )
+    p.add_argument(
+        "--max-queue", type=int, default=0, metavar="N",
+        help="bounded admission queue: when more than N arrived requests "
+        "are waiting, the newest are shed (terminal ABORTED) instead of "
+        "queueing without bound (0 = unbounded)",
+    )
+    p.add_argument(
+        "--watchdog", type=float, default=0.0, metavar="SECONDS",
+        help="burst watchdog: a decode/speculative burst whose dispatch-"
+        "to-sync wall time exceeds SECONDS is counted, traced, and fed "
+        "into the degradation ladder as pressure (0 = off)",
+    )
+    p.add_argument(
+        "--degrade", action="store_true",
+        help="enable the graceful-degradation ladder: under queue/deadline "
+        "pressure the engine pauses prefix-cache growth, falls back from "
+        "speculative to plain decode, and tightens the admission reserve "
+        "— with hysteresis on recovery (docs/robustness.md)",
+    )
+    p.add_argument(
+        "--chaos", default=None, metavar="SPEC",
+        help="deterministic fault injection: semicolon-separated clauses "
+        "'site[@nth][:key=val,...]' over sites "
+        "admit_shortfall, extend_shortfall, kv_corrupt, nan_logits, "
+        "burst_stall, queue_flood — e.g. 'nan_logits@1;burst_stall@2:"
+        "arg=40'. Keys: nth, every, prob, count, arg. Seeded by --seed.",
+    )
     p.add_argument(
         "--check-retrace", action="store_true",
         help="wrap every jitted hot path in the runtime retrace guard "
@@ -170,6 +206,13 @@ def main(argv=None):
     if args.check_retrace and args.workload != "poisson":
         p.error("--check-retrace guards the continuous engine's jitted hot "
                 "paths; it needs --workload poisson")
+    if (
+        args.deadline or args.max_queue or args.watchdog or args.degrade
+        or args.chaos
+    ) and args.workload != "poisson":
+        p.error("--deadline/--max-queue/--watchdog/--degrade/--chaos "
+                "configure the continuous engine's robustness layer; they "
+                "need --workload poisson")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -208,6 +251,19 @@ def main(argv=None):
             shared_prefix_len=args.shared_prefix,
         )
         tracer = SpanTracer() if args.trace_out else None
+        guard = None
+        if args.deadline or args.max_queue or args.watchdog or args.degrade:
+            guard = GuardConfig(
+                max_queue=args.max_queue,
+                default_ttl=args.deadline,
+                watchdog_s=args.watchdog,
+                degradation=args.degrade,
+            )
+        faults = (
+            FaultPlan.parse(args.chaos, seed=args.seed)
+            if args.chaos
+            else None
+        )
         engine = ContinuousEngine(
             params, cfg, n_slots=args.slots, max_len=max_len,
             prefill_bucket=bucket, seed=args.seed,
@@ -220,6 +276,8 @@ def main(argv=None):
             prefix_cache_ttl=args.prefix_index_ttl,
             trace=tracer,
             check_retrace=args.check_retrace,
+            guard=guard,
+            faults=faults,
         )
         if args.profile_dir:
             jax.profiler.start_trace(args.profile_dir)
@@ -276,6 +334,24 @@ def main(argv=None):
                 f"(acceptance {m['draft_acceptance_rate']:.2f}, K="
                 f"{args.speculative})"
             )
+        if guard is not None:
+            print(
+                "[serve/continuous] robustness: "
+                f"shed={m['shed_requests']:.0f} "
+                f"expired={m['expired_requests']:.0f} "
+                f"failed={m['failed_requests']:.0f} "
+                f"quarantined={m['quarantined_slots']:.0f} "
+                f"watchdog_trips={m['watchdog_trips']:.0f} "
+                f"degraded_rounds={m['degraded_rounds']:.0f} "
+                f"(peak level {m['peak_degradation_level']:.0f})"
+            )
+        if faults is not None:
+            fired = ", ".join(
+                f"{k.removeprefix('fault_')}={v:.0f}"
+                for k, v in sorted(m.items())
+                if k.startswith("fault_")
+            )
+            print(f"[serve/continuous] chaos: fired {fired}")
         if args.check_retrace:
             counts = ", ".join(
                 f"{name}={n}"
@@ -297,7 +373,15 @@ def main(argv=None):
                 fh.write("\n")
             print(f"[serve/continuous] metrics -> {args.metrics_json}")
         first = res.requests[0]
-        print("[serve/continuous] first request:", first.output[:16])
+        if first.output is not None:
+            print("[serve/continuous] first request:", first.output[:16])
+        else:
+            # chaos/deadlines can leave request 0 in a non-FINISHED
+            # terminal state with no trusted output
+            print(
+                f"[serve/continuous] first request: {first.state.value}"
+                f" ({first.error})"
+            )
         return
 
     engine = ServeEngine(

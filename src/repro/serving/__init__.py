@@ -6,6 +6,8 @@ from repro.serving.block_pool import (
     chain_hashes,
 )
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
+from repro.serving.faults import FAULT_SITES, FaultPlan, FaultSpec
+from repro.serving.guard import DegradationLadder, GuardConfig
 from repro.serving.metrics import (
     Counter,
     Gauge,
@@ -22,4 +24,4 @@ from repro.serving.request import (
     RequestState,
     synthetic_trace,
 )
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import NeverAdmittable, Scheduler

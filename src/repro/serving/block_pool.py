@@ -127,6 +127,11 @@ class BlockAllocator:
         self.prefix_cache = prefix_cache
         self.prefix_cache_max_entries = prefix_cache_max_entries
         self.index_evictions = 0  # entries dropped by cap/TTL (metrics)
+        # degradation-ladder valve (serving/guard.py level 1): False
+        # pauses registration of *new* chains in the hash index — lookups
+        # against already-cached chains still hit, so shared-prefix
+        # traffic keeps its wins while churn stops growing the index
+        self.register_new_chains = True
         # optional telemetry hook: called as on_event(name, args_dict) at
         # point occurrences deep inside the allocator (clock-hand block
         # reclaim, index subtree drops); the engine wires it to its span
@@ -337,7 +342,7 @@ class BlockAllocator:
         follow-up whose prompt extends a finished request's
         prompt + output rides the earlier turn's blocks. With the prefix
         cache off (or ``tokens=None``) this is a plain ``release``."""
-        if self.prefix_cache and tokens is not None:
+        if self.prefix_cache and tokens is not None and self.register_new_chains:
             table = self._owned.get(slot, [])
             hashes = chain_hashes(tokens, self.block_size)
             for j, h in enumerate(hashes):
@@ -444,11 +449,15 @@ class BlockAllocator:
             )
         # register this prompt's fresh full blocks so later admissions can
         # share them (their content is written by the prefill the engine
-        # dispatches before any subsequent admission's reads)
-        for j in range(len(matched), len(hashes)):
-            h = hashes[j]
-            if h not in self._block_of:
-                self._register(h, table[j], parent=hashes[j - 1] if j else 0)
+        # dispatches before any subsequent admission's reads); paused at
+        # degradation level >= 1 — matching above still served the hit
+        if self.register_new_chains:
+            for j in range(len(matched), len(hashes)):
+                h = hashes[j]
+                if h not in self._block_of:
+                    self._register(
+                        h, table[j], parent=hashes[j - 1] if j else 0
+                    )
         self._owned[slot] = table
         self._info[slot] = info
         return info
@@ -460,6 +469,26 @@ class BlockAllocator:
 
     def blocks_of(self, slot: int) -> List[int]:
         return list(self._owned.get(slot, ()))
+
+    def refcount(self, blk: int) -> int:
+        """How many slot tables hold ``blk`` (0 for free/evictable)."""
+        return self._ref.get(blk, 0)
+
+    def purge_slot_index(self, slot: int) -> int:
+        """Drop every hash-index entry held by ``slot``'s blocks (each
+        with its stranded descendants). Quarantine path: a slot whose KV
+        produced non-finite logits may hold corrupted block payloads, and
+        a corrupted block that stays matchable would poison every later
+        admission that rides it. Returns the number of entries dropped.
+        Call *before* ``release`` — afterwards the slot owns nothing."""
+        dropped = 0
+        for blk in self._owned.get(slot, ()):
+            h = self._hash_of.get(blk)
+            if h is not None:
+                before = self.index_evictions
+                self._drop_entry(h)
+                dropped += self.index_evictions - before
+        return dropped
 
     def release(self, slot: int) -> None:
         self._info.pop(slot, None)

@@ -83,10 +83,12 @@ from repro.serving.block_pool import (
     BlockAllocator,
     blocks_needed,
 )
+from repro.serving.faults import FaultPlan
+from repro.serving.guard import DegradationLadder, GuardConfig
 from repro.serving.metrics import ServingMetrics
-from repro.serving.request import Request
-from repro.serving.sampling import sample_and_emit
-from repro.serving.scheduler import Scheduler
+from repro.serving.request import Request, RequestState
+from repro.serving.sampling import degenerate_rows, sample_and_emit
+from repro.serving.scheduler import NeverAdmittable, Scheduler
 from repro.serving.tracing import ENGINE_TID, QUEUE_TID, SpanTracer, slot_tid
 
 Params = Dict[str, Any]
@@ -146,6 +148,14 @@ class ContinuousEngine:
         # compile after retrace_guard.freeze() raises RetraceError naming
         # the function and the argument-shape delta. Per-run compile
         # counts surface as jit_compiles_* / jit_retraces metrics keys.
+        guard: Optional[GuardConfig] = None,  # robustness policy: request
+        # deadlines/TTLs, bounded-queue load shedding, burst watchdog,
+        # and the degradation ladder — see serving/guard.py and
+        # docs/robustness.md. None = all guards off.
+        faults: Optional[FaultPlan] = None,  # chaos fail-point plan: the
+        # engine consults it at each fault site (serving/faults.py) and
+        # folds fired counts into the metrics summary as fault_* keys.
+        # None = no injection, one `is not None` check per site.
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
         if prefix_cache:
@@ -239,6 +249,8 @@ class ContinuousEngine:
         self.victim_policy = victim_policy
         self.prefix_cache_max_entries = prefix_cache_max_entries
         self.prefix_cache_ttl = prefix_cache_ttl
+        self.guard = guard
+        self.faults = faults
         # True -> a fresh default tracer; a SpanTracer -> used as-is
         # (an *empty* tracer is falsy via __len__, so no truthiness
         # shortcuts here); anything else (None, False) -> disabled
@@ -340,13 +352,22 @@ class ContinuousEngine:
 
         def _step(
             params, cache, logits, pos, active, emitted, maxnew, buf, key,
-            temps, table,
+            temps, table, poisoned,
         ):
+            # quarantine carry: a row whose logits are degenerate (any
+            # NaN/Inf, or all -inf — injected chaos, or real corruption
+            # surfacing through attention) emits nothing, leaves the
+            # active set, and is latched into `poisoned` for the per-
+            # burst host sync. Only the offending row: rows never mix in
+            # sampling or attention, so co-batched requests are untouched.
+            bad = degenerate_rows(logits) & active
+            poisoned = poisoned | bad
+            live = active & ~bad
             nxt, buf, emitted, hit_eos, key = sample_and_emit(
-                logits, temps, key, buf, active, emitted, eos
+                logits, temps, key, buf, live, emitted, eos
             )
-            finished = active & (hit_eos | (emitted >= maxnew))
-            still = active & ~finished
+            finished = live & (hit_eos | (emitted >= maxnew))
+            still = live & ~finished
             logits, cache = T.decode_step(
                 params, self.cfg, cache, nxt[:, None], pos, block_table=table
             )
@@ -354,7 +375,7 @@ class ContinuousEngine:
             # next prefill_slot replaces it wholesale (paged: their writes
             # land in the trash block once the host retires the table row)
             pos = pos + still.astype(jnp.int32)
-            return cache, logits, pos, still, emitted, buf, key
+            return cache, logits, pos, still, emitted, buf, key, poisoned
 
         self._step = jax.jit(_step, donate_argnums=(1,))
 
@@ -435,9 +456,38 @@ class ContinuousEngine:
             if self.retrace_guard is not None
             else {}
         )
-        for r in requests:
-            sched.submit(r)
+        guard = self.guard
+        faults = self.faults
+        tr0 = self.tracer
+
+        def submit(r: Request) -> bool:
+            """Submit one request; a never-admittable one (block need
+            beyond the whole pool, prompt+budget beyond max_len) fails
+            fast — terminal FAILED for *that request only*, instead of
+            an exception killing the run or an eternal FIFO defer."""
+            if (
+                guard is not None
+                and guard.default_ttl
+                and r.deadline is None
+            ):
+                r.deadline = r.arrival + guard.default_ttl
             metrics.on_submit(r.rid, r.arrival)
+            try:
+                sched.submit(r)
+            except NeverAdmittable as e:
+                r.state = RequestState.FAILED
+                r.error = str(e)
+                metrics.on_failed(r.rid, r.arrival)
+                if tr0 is not None:
+                    tr0.instant(
+                        "failed_submit", QUEUE_TID, r.arrival, {"rid": r.rid}
+                    )
+                return False
+            return True
+
+        for r in requests:
+            submit(r)
+        flood_extra: List[Request] = []  # queue_flood synthetic arrivals
         spec_fn = (
             self._spec_round_for(all(r.temperature == 0 for r in requests))
             if self.speculative
@@ -450,6 +500,16 @@ class ContinuousEngine:
                 f"requests {over} exceed max_new_cap={cap}; outputs would be "
                 "silently truncated"
             )
+        use_deadlines = bool(
+            guard is not None and guard.default_ttl
+        ) or any(r.deadline is not None for r in requests)
+        ladder = (
+            DegradationLadder(guard.ladder_enter, guard.ladder_exit)
+            if guard is not None and guard.degradation
+            else None
+        )
+        base_reserve = sched.decode_reserve
+        wd_pressure = 0.0  # decaying pressure bump from watchdog trips
 
         cache = T.init_cache(
             cfg, b, self.max_len, self.block_size, self.n_blocks
@@ -474,6 +534,10 @@ class ContinuousEngine:
         # cumulative (accepted, proposed) draft counts, device-resident so
         # speculative rounds never force an extra host sync
         spec_counters = jnp.zeros((2,), jnp.int32)
+        # quarantine latch: set inside the decode/verify step when a row's
+        # logits go degenerate, fetched with the regular burst sync, and
+        # cleared host-side when the slot is quarantined or recycled
+        poisoned = jnp.zeros((b,), bool)
 
         running: Dict[int, Request] = {}  # slot -> request
         emitted_host: Dict[int, int] = {}  # slot -> emitted as of last sync
@@ -534,6 +598,27 @@ class ContinuousEngine:
                 for lk, lv in cache.items()
             }
 
+        def corrupt_block(cache, blk: int):
+            """Chaos helper (``kv_corrupt``): overwrite one physical
+            block's payload with NaN in every float-dtype leaf. The
+            "pos" leaf is left intact so attention keeps gathering the
+            corrupted payload — the failure must surface through the
+            real read path, not vanish behind a mask. Quantized (int8)
+            k/v leaves cannot hold NaN; there the per-block scales are
+            float and carry the poison instead."""
+            return {
+                lk: {
+                    name: (
+                        leaf.at[:, blk].set(jnp.nan)
+                        if name != "pos"
+                        and jnp.issubdtype(leaf.dtype, jnp.floating)
+                        else leaf
+                    )
+                    for name, leaf in lv.items()
+                }
+                for lk, lv in cache.items()
+            }
+
         def preempt_slot(victim: int) -> None:
             """Evict ``victim``: stitch its emitted-so-far tokens into its
             resume prompt (the scheduler re-queues it), return its blocks
@@ -566,18 +651,180 @@ class ContinuousEngine:
                     {"rid": req.rid, "preempted": True},
                 )
 
+        def cancel_slot(
+            slot: int,
+            state: RequestState,
+            err: str,
+            keep_tokens: bool,
+        ) -> Request:
+            """Host-side cancellation: terminate the request running in
+            ``slot`` without waiting for its decode to finish. The device
+            row is silenced (active off, table row to trash) and the
+            blocks released; ``keep_tokens=False`` (quarantine) discards
+            the output entirely — a poisoned slot's tokens are untrusted
+            — and keeps its blocks out of the prefix cache."""
+            nonlocal active, poisoned
+            req = running.pop(slot)
+            em = emitted_host.pop(slot)
+            if keep_tokens and em > 0:
+                # cancellations are rare (deadline/quarantine events);
+                # the partial output must survive the slot teardown
+                toks = [int(t) for t in jax.device_get(buf[slot])[:em]]  # slimcheck: sync-site
+            else:
+                toks = []
+            req.output = req.generated + toks if keep_tokens else None
+            req.error = err
+            if (
+                not keep_tokens
+                and allocator is not None
+                and allocator.prefix_cache
+            ):
+                # a quarantined slot's blocks may hold corrupted KV; they
+                # must never be matchable from the hash index again
+                allocator.purge_slot_index(slot)
+            sched.release(slot, tokens=None, state=state)
+            if paged:
+                table_np[slot] = TRASH_BLOCK
+            active = active.at[slot].set(False)
+            poisoned = poisoned.at[slot].set(False)
+            t_ev = now()
+            if tr is not None:
+                name = (
+                    "quarantine"
+                    if state is RequestState.FAILED
+                    else "expire"
+                )
+                tr.instant(
+                    name, slot_tid(slot), t_ev,
+                    {"rid": req.rid, "emitted": em},
+                )
+                tr.complete(
+                    "request", slot_tid(slot),
+                    span_start.pop(slot, t_ev), t_ev,
+                    {"rid": req.rid, "state": state.value},
+                )
+            return req
+
+        flood_rid = -1  # synthetic queue_flood rids count down from -1
+
         while sched.pending() or running:
+            t_round = now()
             if allocator is not None and allocator.prefix_cache:
                 # keep the allocator's clock current (stamps registrations)
                 # and sweep TTL-expired index entries before matching
-                t_round = now()
                 allocator.tick(t_round)
                 if self.prefix_cache_ttl > 0:
                     allocator.expire_index(t_round - self.prefix_cache_ttl)
-            admits = sched.admit(now())
+
+            # -- robustness guard pass (serving/guard.py) ---------------
+            if use_deadlines:
+                # reap-before-admit: an expired queued request (a
+                # preemption victim past its deadline included) never
+                # wastes a prefill and never re-admits
+                for req in sched.reap_expired(t_round):
+                    req.error = (
+                        f"deadline {req.deadline:.3f}s passed at "
+                        f"t={t_round:.3f}s (queued)"
+                    )
+                    req.output = list(req.generated) if req.generated else None
+                    metrics.on_expired(req.rid, t_round)
+                    if tr is not None:
+                        tr.instant(
+                            "expire", QUEUE_TID, t_round, {"rid": req.rid}
+                        )
+                # host-side cancellation of running slots past deadline
+                expired_slots = sched.expired_running(t_round)
+                for slot in expired_slots:
+                    req = cancel_slot(
+                        slot,
+                        RequestState.EXPIRED,
+                        f"deadline passed at t={t_round:.3f}s (running)",
+                        keep_tokens=True,
+                    )
+                    metrics.on_expired(req.rid, t_round)
+                if paged and expired_slots:
+                    push_rows(expired_slots)
+            # -- chaos fail points (serving/faults.py) ------------------
+            if faults is not None:
+                n_flood = faults.should_fire("queue_flood", 2 * b)
+                for _ in range(n_flood):
+                    fr = Request(
+                        rid=flood_rid,
+                        prompt=[(-flood_rid + j) % cfg.vocab_size
+                                for j in range(4)],
+                        arrival=t_round,
+                        max_new_tokens=min(4, cap),
+                    )
+                    flood_rid -= 1
+                    if submit(fr):
+                        flood_extra.append(fr)
+                if n_flood and tr is not None:
+                    tr.instant(
+                        "fault_queue_flood", QUEUE_TID, t_round,
+                        {"n": n_flood},
+                    )
+
+            if ladder is not None:
+                # pressure: arrived-and-waiting backlog per slot, plus
+                # running requests close to their deadline, plus a
+                # decaying bump per recent watchdog trip
+                urgent = sum(
+                    1
+                    for r2 in running.values()
+                    if r2.deadline is not None
+                    and r2.deadline - t_round < guard.urgency_horizon
+                )
+                pressure = (
+                    sched.queue.ready_count(t_round) / b
+                    + urgent / b
+                    + wd_pressure
+                )
+                wd_pressure *= 0.5
+                level = ladder.update(pressure)
+                metrics.on_degraded(level, t_round)
+                if tr is not None:
+                    tr.counter(
+                        "degradation", t_round,
+                        level=level, pressure=round(pressure, 3),
+                    )
+                if allocator is not None and allocator.prefix_cache:
+                    # level >= 1: stop growing the prefix index under
+                    # pressure (existing chains keep serving hits)
+                    allocator.register_new_chains = level < 1
+                # level >= 3: tighten admission so running slots keep
+                # more growth headroom (fewer preemption storms)
+                sched.decode_reserve = (
+                    base_reserve * 2 if level >= 3 else base_reserve
+                )
+
+            if faults is not None and faults.should_fire("admit_shortfall"):
+                # simulate the allocator coming up empty at admission:
+                # nothing admits this round; queued requests defer (and
+                # age toward their deadlines) exactly as under real
+                # pool exhaustion
+                admits = []
+                if tr is not None:
+                    tr.instant("fault_admit_shortfall", ENGINE_TID, t_round)
+            else:
+                admits = sched.admit(now())
+            if guard is not None and guard.max_queue:
+                # shed AFTER admission: the bound caps the backlog that
+                # free slots could not absorb this round — a request
+                # arriving while a slot is idle is never dropped
+                for req in sched.shed_overflow(t_round, guard.max_queue):
+                    req.error = "shed: queue full"
+                    metrics.on_shed(req.rid, t_round)
+                    if tr is not None:
+                        tr.instant(
+                            "shed", QUEUE_TID, t_round, {"rid": req.rid}
+                        )
             if not admits and not running:
                 nxt_arrival = sched.next_arrival()
-                assert nxt_arrival is not None
+                if nxt_arrival is None:
+                    # the guard pass drained everything this round
+                    # (expiry/shedding emptied both the queue and the
+                    # running set): the run is over
+                    break
                 t_idle = now()
                 self._sleep(max(nxt_arrival - now(), 0.0) + 1e-4)
                 if tr is not None:
@@ -707,7 +954,20 @@ class ContinuousEngine:
                         need = blocks_needed(target, self.block_size) - owned
                         if need <= 0:
                             break
-                        got = allocator.extend(slot, need)
+                        if faults is not None and faults.should_fire(
+                            "extend_shortfall"
+                        ):
+                            # simulate the pool coming up empty mid-run;
+                            # the normal preemption path must absorb it
+                            # without corrupting any surviving slot
+                            got = None
+                            if tr is not None:
+                                tr.instant(
+                                    "fault_extend_shortfall",
+                                    slot_tid(slot), now(), {"rid": req.rid},
+                                )
+                        else:
+                            got = allocator.extend(slot, need)
                         if got is not None:
                             table_np[slot, owned : owned + need] = got
                             grow_dirty.append(slot)
@@ -754,8 +1014,53 @@ class ContinuousEngine:
                     allocator.check()
 
             phase("schedule")
+
+            # -- chaos: pre-burst device-state injections ---------------
+            if faults is not None and running:
+                victim = min(running, key=sched.slot_seq.__getitem__)
+                if faults.should_fire("nan_logits"):
+                    # poison the oldest running slot's carry logits; the
+                    # in-step quarantine latch must catch it before a
+                    # single token emits from the bad distribution
+                    logits = logits.at[victim].set(jnp.nan)
+                    if tr is not None:
+                        tr.instant(
+                            "fault_nan_logits", slot_tid(victim), now(),
+                            {"rid": running[victim].rid},
+                        )
+                if paged and faults.should_fire("kv_corrupt"):
+                    # corrupt an exclusively-owned (refcount-1) block so
+                    # the blast radius is provably one slot: CoW already
+                    # guarantees shared blocks are never written, so a
+                    # single-owner block is what real corruption hits
+                    hit = next(
+                        (
+                            (s2, b2)
+                            for s2 in sorted(
+                                running, key=sched.slot_seq.__getitem__
+                            )
+                            for b2 in allocator.blocks_of(s2)
+                            if allocator.refcount(b2) == 1
+                        ),
+                        None,
+                    )
+                    if hit is not None:
+                        cache = corrupt_block(cache, hit[1])
+                        if tr is not None:
+                            tr.instant(
+                                "fault_kv_corrupt", slot_tid(hit[0]), now(),
+                                {"rid": running[hit[0]].rid, "block": hit[1]},
+                            )
+
+            # degradation level >= 2 swaps the speculative round for the
+            # plain paged decode step: strictly cheaper per dispatch, and
+            # already a registered hot path (compiles once under the
+            # retrace guard's max_sigs=1 — a mode switch, not a retrace)
+            use_spec = bool(self.speculative) and not (
+                ladder is not None and ladder.level >= 2
+            )
             t_burst = now()
-            if self.speculative:
+            if use_spec:
                 # each round is one dispatch: K-1 backbone draft steps,
                 # a batched full-model verify of every slot's window, and
                 # the rejection-sampled bulk commit
@@ -764,42 +1069,90 @@ class ContinuousEngine:
                     for _ in range(sync_every):
                         (
                             cache, logits, pos, active, emitted, buf, key,
-                            spec_counters,
+                            spec_counters, poisoned,
                         ) = spec_fn(
                             self.params, cache, logits, pos, active, emitted,
                             maxnew, buf, key, temps, table_dev, spec_counters,
+                            poisoned,
                         )
             else:
                 metrics.on_decode_steps(sync_every)
                 with jax.profiler.TraceAnnotation("serve/decode_burst"):
                     for _ in range(sync_every):
-                        cache, logits, pos, active, emitted, buf, key = (
-                            self._step(
-                                self.params, cache, logits, pos, active,
-                                emitted, maxnew, buf, key, temps, table_dev,
-                            )
+                        (
+                            cache, logits, pos, active, emitted, buf, key,
+                            poisoned,
+                        ) = self._step(
+                            self.params, cache, logits, pos, active,
+                            emitted, maxnew, buf, key, temps, table_dev,
+                            poisoned,
                         )
-            # THE per-burst sync: one fetch feeds both the growth planner
-            # and the completion scan (the burst's dispatches are async, so
-            # the blocking wait lands here and is charged to the burst's
-            # phase — "verify" when speculative, since the fused draft+
-            # verify+commit dispatch is dominated by the full-model pass)
+            if faults is not None:
+                stall_ms = faults.should_fire("burst_stall", 50)
+                if stall_ms:
+                    # artificial stall between dispatch and sync: latency
+                    # accounting and the watchdog must see it; token
+                    # outputs must not change
+                    self._sleep(stall_ms / 1000.0)
+                    if tr is not None:
+                        tr.instant(
+                            "fault_burst_stall", ENGINE_TID, now(),
+                            {"ms": stall_ms},
+                        )
+            # THE per-burst sync: one fetch feeds the growth planner, the
+            # completion scan, and the quarantine pass (the burst's
+            # dispatches are async, so the blocking wait lands here and is
+            # charged to the burst's phase — "verify" when speculative,
+            # since the fused draft+verify+commit dispatch is dominated by
+            # the full-model pass)
             with jax.profiler.TraceAnnotation("serve/burst_sync"):
-                host_active, host_emitted = jax.device_get(  # slimcheck: sync-site
-                    (active, emitted)
+                (
+                    host_active, host_emitted, host_poisoned,
+                ) = jax.device_get(  # slimcheck: sync-site
+                    (active, emitted, poisoned)
                 )
-            phase("verify" if self.speculative else "decode")
+            phase("verify" if use_spec else "decode")
             if tr is not None:
                 tr.complete(
-                    "speculative_burst" if self.speculative else
-                    "decode_burst",
+                    "speculative_burst" if use_spec else "decode_burst",
                     ENGINE_TID, t_burst, now(),
                     {"rounds": sync_every, "running": len(running)},
                 )
+            if guard is not None and guard.watchdog_s:
+                dt_burst = now() - t_burst
+                if dt_burst > guard.watchdog_s:
+                    # a stalled burst (device hiccup, injected stall)
+                    # trips the watchdog: counted, traced, and fed into
+                    # the degradation ladder as decaying pressure
+                    t_trip = now()
+                    metrics.on_watchdog(t_trip)
+                    wd_pressure += 1.0
+                    if tr is not None:
+                        tr.instant(
+                            "watchdog_trip", ENGINE_TID, t_trip,
+                            {"burst_s": round(dt_burst, 4)},
+                        )
             for s in running:
                 # host mirror of each slot's position (plen + emitted) —
                 # what the on-demand growth pass plans the next burst from
                 emitted_host[s] = int(host_emitted[s])
+
+            # quarantine pass MUST precede the completion scan: a
+            # poisoned row went inactive in-step without emitting, so the
+            # done_slots scan below would misread it as a normal finish
+            bad_slots = [s for s in list(running) if host_poisoned[s]]
+            for slot in bad_slots:
+                req = cancel_slot(
+                    slot,
+                    RequestState.FAILED,
+                    "non-finite logits: slot quarantined",
+                    keep_tokens=False,
+                )
+                t_q = now()
+                metrics.on_quarantine(req.rid, t_q)
+                metrics.on_failed(req.rid, t_q)
+            if paged and bad_slots:
+                push_rows(bad_slots)
 
             done_slots = [s for s in running if not host_active[s]]
             if done_slots:
@@ -858,8 +1211,17 @@ class ContinuousEngine:
                     n - compiles0.get(name, 0)
                 )
             summary["jit_retraces"] = float(self.retrace_guard.retraces())
+        if faults is not None:
+            # per-site fired counts under "fault_<site>" keys — the chaos
+            # smoke jobs assert these are nonzero for the planned sites
+            summary.update(faults.summary())
+        if ladder is not None and allocator is not None:
+            # leave the allocator as we found it for the next run
+            allocator.register_new_chains = True
+        if guard is not None:
+            sched.decode_reserve = base_reserve
         return ContinuousResult(
-            requests=list(requests),
+            requests=list(requests) + flood_extra,
             metrics=summary,
             slot_of=dict(sched.assignments),
         )

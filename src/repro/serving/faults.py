@@ -1,0 +1,164 @@
+"""Deterministic fault injection for the serving engine (chaos testing).
+
+A ``FaultPlan`` is a registry of named *fail points* — places in the
+continuous engine where a real deployment can lose: the allocator coming
+up short at admission or mid-decode growth, a KV pool block whose
+contents were corrupted in memory, a decode or verify burst producing
+NaN/Inf logits, a burst that stalls on a wedged device call, or a flood
+of arrivals swamping the queue. The engine consults the plan at each
+site (``should_fire``); a disabled plan is ``None`` at every call site,
+so chaos off costs one ``is not None`` check per site.
+
+Firing is **deterministic and seeded**: a spec triggers on an explicit
+nth check (``site@N``), on a fixed period (``every=K``), or on a seeded
+Bernoulli draw (``prob=P`` — the RNG is seeded from ``(seed, site)``, so
+the same plan replays the same firing sequence run after run). Each spec
+carries a firing budget (``count``, default 1) so a chaos run recovers
+by construction, and a site-specific integer knob (``arg``: stall
+milliseconds for ``burst_stall``, flood size for ``queue_flood``,
+victim slot for the corruption sites).
+
+The plan keeps per-site ``checks`` and ``fired`` tallies; the engine
+folds ``fired`` into its metrics summary as ``fault_<site>`` keys, which
+is what the chaos CI smoke asserts against.
+
+Spec strings (the ``--chaos`` flag) are semicolon-separated clauses::
+
+    nan_logits@3                 fire on the 3rd check of that site, once
+    kv_corrupt@5:count=2         fire on checks 5 and 6
+    burst_stall:every=4,arg=50   every 4th check, 50 ms stall, once
+    queue_flood:prob=0.25,arg=8  seeded coin per check, flood of 8
+
+A clause with no trigger fires on the first check (``site`` ==
+``site@0``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence
+
+# the engine's fail-point sites, in hook order around the serve loop
+FAULT_SITES = (
+    "admit_shortfall",  # admission sees an empty pool: no admits this round
+    "extend_shortfall",  # on-demand growth fails: forces the preempt path
+    "kv_corrupt",  # NaN payload written into a victim slot's pool block
+    "nan_logits",  # a victim slot's carry logits become NaN pre-burst
+    "burst_stall",  # the burst wedges for `arg` ms (watchdog territory)
+    "queue_flood",  # `arg` synthetic arrivals dumped on the queue at once
+)
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One fail-point trigger: where, when, how often, and a knob."""
+
+    site: str
+    nth: Optional[int] = None  # fire on the nth check of this site (0-based)
+    every: int = 0  # fire on every `every`-th check (0 = off)
+    prob: float = 0.0  # seeded Bernoulli per check (0 = off)
+    count: int = 1  # firing budget (0 = unlimited)
+    arg: int = 0  # site-specific knob (0 = the site's default)
+
+    def __post_init__(self):
+        if self.site not in FAULT_SITES:
+            raise ValueError(
+                f"unknown fault site {self.site!r} "
+                f"(expected one of {', '.join(FAULT_SITES)})"
+            )
+        if self.nth is not None and self.nth < 0:
+            raise ValueError(f"{self.site}: nth must be >= 0")
+        if self.every < 0:
+            raise ValueError(f"{self.site}: every must be >= 0")
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"{self.site}: prob must be in [0, 1]")
+        if self.count < 0:
+            raise ValueError(f"{self.site}: count must be >= 0")
+        if self.nth is None and self.every == 0 and self.prob == 0.0:
+            self.nth = 0  # bare clause: fire on the first check
+
+
+class FaultPlan:
+    """A seeded set of ``FaultSpec``s the engine consults at each site."""
+
+    def __init__(self, specs: Sequence[FaultSpec] = (), seed: int = 0):
+        self.seed = seed
+        self.specs: Dict[str, List[FaultSpec]] = {}
+        for spec in specs:
+            self.specs.setdefault(spec.site, []).append(spec)
+        self.checks: Dict[str, int] = {s: 0 for s in FAULT_SITES}
+        self.fired: Dict[str, int] = {s: 0 for s in FAULT_SITES}
+        self._fired_of: Dict[int, int] = {}  # id(spec) -> times fired
+        # one deterministic RNG stream per site: string seeds hash stably
+        # (unlike tuple seeds, which go through PYTHONHASHSEED)
+        self._rng: Dict[str, random.Random] = {
+            site: random.Random(f"{seed}:{site}") for site in self.specs
+        }
+
+    def should_fire(self, site: str, arg_default: int = 0) -> int:
+        """Check the fail point ``site``. Returns 0 when no spec fires;
+        on a firing, returns the spec's ``arg`` knob (``arg_default``
+        when the spec left it 0), floored at 1 so a knob-less firing is
+        still truthy — call sites treat the result as both the fire/no-
+        fire signal and the site parameter."""
+        n = self.checks[site]
+        self.checks[site] = n + 1
+        for spec in self.specs.get(site, ()):
+            fired = self._fired_of.get(id(spec), 0)
+            if spec.count and fired >= spec.count:
+                continue
+            hit = (
+                (spec.nth is not None and n >= spec.nth)
+                or (spec.every and n > 0 and n % spec.every == 0)
+                or (spec.prob and self._rng[site].random() < spec.prob)
+            )
+            if not hit:
+                continue
+            self._fired_of[id(spec)] = fired + 1
+            self.fired[site] += 1
+            return max(spec.arg or arg_default, 1)
+        return 0
+
+    def active_sites(self) -> List[str]:
+        return sorted(self.specs)
+
+    def summary(self) -> Dict[str, float]:
+        """Per-site fired counts, keyed for the metrics summary."""
+        return {f"fault_{site}": float(n) for site, n in self.fired.items()}
+
+    # -- spec-string parsing ------------------------------------------------
+
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "FaultPlan":
+        """Build a plan from a ``--chaos`` spec string (see module doc)."""
+        specs: List[FaultSpec] = []
+        for clause in text.split(";"):
+            clause = clause.strip()
+            if not clause:
+                continue
+            head, _, opts = clause.partition(":")
+            site, _, nth = head.partition("@")
+            kw: Dict[str, object] = {"site": site.strip()}
+            if nth:
+                kw["nth"] = int(nth)
+            for opt in filter(None, (o.strip() for o in opts.split(","))):
+                key, eq, val = opt.partition("=")
+                if not eq:
+                    raise ValueError(
+                        f"chaos clause {clause!r}: option {opt!r} is not "
+                        "key=value"
+                    )
+                key = key.strip()
+                if key == "prob":
+                    kw[key] = float(val)
+                elif key in ("nth", "every", "count", "arg"):
+                    kw[key] = int(val)
+                else:
+                    raise ValueError(
+                        f"chaos clause {clause!r}: unknown option {key!r}"
+                    )
+            specs.append(FaultSpec(**kw))  # type: ignore[arg-type]
+        if not specs:
+            raise ValueError(f"chaos spec {text!r} names no fault sites")
+        return cls(specs, seed=seed)

@@ -1,0 +1,124 @@
+"""Graceful-degradation guard for the serving engine.
+
+``GuardConfig`` bundles the robustness policy the continuous engine
+threads through its serve loop (docs/robustness.md):
+
+* **deadlines** — every request gets a time-to-live (its own
+  ``Request.deadline`` or ``default_ttl`` seconds past arrival). A
+  queued request past its deadline is reaped to ``EXPIRED`` before it
+  can waste a prefill; a *running* request past its deadline is
+  host-cancelled — its slot is silenced, its blocks released, its
+  partial output kept. A preempted request re-enters the queue with its
+  original deadline, so preemption can never launder an expired request
+  back into service.
+* **bounded queue** — when more than ``max_queue`` arrived requests are
+  waiting for a slot, the newest arrivals are shed (``ABORTED``) until
+  the backlog fits. Preemption re-queues are exempt by construction:
+  shedding picks victims newest-arrival-first and a preempted request
+  keeps its original (old) arrival.
+* **burst watchdog** — a decode/verify burst whose host wall time
+  exceeds ``watchdog_s`` trips the watchdog: counted, traced, and fed
+  into the degradation pressure signal. The engine cannot kill a wedged
+  device call, but it can refuse to stay at full service around one.
+* **degradation ladder** — see ``DegradationLadder``.
+
+``DegradationLadder`` maps a scalar *pressure* signal (queue backlog per
+slot + deadline urgency + recent watchdog trips) to a service level with
+hysteresis: the ladder steps up when pressure crosses ``enter[level]``
+and back down only when it falls below ``exit[level]``, so the engine
+does not flap at a threshold. Levels are cumulative:
+
+    0  full service
+    1  prefix-cache registration of new chains pauses (lookups still hit)
+    2  speculative decoding falls back to plain paged decode
+    3  the admission decode-reserve doubles (admission tightens)
+
+Every effect is reversible — when pressure clears, the ladder walks back
+to level 0 and full service resumes. Level changes are deterministic in
+the pressure sequence (no RNG, no wall clock), which is what makes the
+chaos tests' recovery assertions exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+
+@dataclasses.dataclass
+class GuardConfig:
+    """Robustness policy knobs for ``ContinuousEngine``."""
+
+    max_queue: int = 0  # arrived-and-waiting cap; 0 = unbounded
+    default_ttl: float = 0.0  # seconds from arrival to deadline; 0 = none
+    watchdog_s: float = 0.0  # burst wall-time trip threshold; 0 = off
+    degradation: bool = False  # enable the ladder
+    ladder_enter: Tuple[float, ...] = (1.0, 2.0, 3.0)  # pressure to step up
+    ladder_exit: Tuple[float, ...] = (0.5, 1.0, 1.5)  # pressure to step down
+    urgency_horizon: float = 0.25  # a running request within this many
+    # seconds of its deadline counts as urgent (pressure term)
+
+    def __post_init__(self):
+        if self.max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
+        if self.default_ttl < 0:
+            raise ValueError("default_ttl must be >= 0 (0 = no deadline)")
+        if self.watchdog_s < 0:
+            raise ValueError("watchdog_s must be >= 0 (0 = off)")
+        if len(self.ladder_enter) != len(self.ladder_exit):
+            raise ValueError("ladder_enter and ladder_exit must pair up")
+        for lo, hi in zip(self.ladder_exit, self.ladder_enter, strict=True):
+            if lo >= hi:
+                raise ValueError(
+                    f"ladder hysteresis needs exit < enter per level "
+                    f"(got exit {lo} >= enter {hi})"
+                )
+        if any(
+            b <= a
+            for a, b in zip(self.ladder_enter, self.ladder_enter[1:], strict=False)
+        ):
+            raise ValueError("ladder_enter thresholds must be ascending")
+
+    @property
+    def active(self) -> bool:
+        """Whether any guard mechanism is on (the engine skips the whole
+        guard pass otherwise)."""
+        return bool(
+            self.max_queue
+            or self.default_ttl
+            or self.watchdog_s
+            or self.degradation
+        )
+
+
+class DegradationLadder:
+    """Hysteresis state machine from pressure to service level.
+
+    ``update(pressure)`` moves the level at most one step per call:
+    up when ``pressure >= enter[level]`` (the next level's threshold),
+    down when ``pressure < exit[level - 1]``. One step per round keeps
+    the engine's reaction smooth under a pressure spike and makes the
+    recovery trajectory testable round by round.
+    """
+
+    def __init__(
+        self,
+        enter: Sequence[float] = (1.0, 2.0, 3.0),
+        exit: Sequence[float] = (0.5, 1.0, 1.5),
+    ):
+        if len(enter) != len(exit):
+            raise ValueError("enter and exit must pair up")
+        self.enter = tuple(float(x) for x in enter)
+        self.exit = tuple(float(x) for x in exit)
+        self.level = 0
+        self.max_level = len(self.enter)
+        self.transitions = 0  # level changes (both directions)
+
+    def update(self, pressure: float) -> int:
+        if self.level < self.max_level and pressure >= self.enter[self.level]:
+            self.level += 1
+            self.transitions += 1
+        elif self.level > 0 and pressure < self.exit[self.level - 1]:
+            self.level -= 1
+            self.transitions += 1
+        return self.level

@@ -329,10 +329,21 @@ class ServingMetrics:
         self._draft_proposed = r.counter("draft_proposed")
         self._prefix_index_evictions = r.counter("prefix_index_evictions")
         self._phase = {p: r.counter(f"phase_{p}_s") for p in PHASES}
+        # robustness accounting (serving/guard.py, docs/robustness.md):
+        # every terminal outcome that is not FINISHED has its own counter,
+        # so shed + expired + failed + completed partitions the requests
+        # that left the system
+        self._shed = r.counter("shed_requests")
+        self._expired = r.counter("expired_requests")
+        self._failed = r.counter("failed_requests")
+        self._quarantined = r.counter("quarantined_slots")
+        self._degraded_rounds = r.counter("degraded_rounds")
+        self._watchdog_trips = r.counter("watchdog_trips")
         # gauges (time series; peak/mean land in summary)
         self._occupancy = r.gauge("slot_occupancy")
         self._blocks_in_use = r.gauge("blocks_in_use")
         self._queue_depth = r.gauge("queue_depth")
+        self._degradation_level = r.gauge("degradation_level")
         # histograms (exact quantiles per run, streaming buckets for free)
         self._ttft = r.histogram("ttft_s")
         self._latency = r.histogram("latency_s")
@@ -435,6 +446,47 @@ class ServingMetrics:
         """Record the allocator's cumulative prefix-index cap evictions."""
         self._prefix_index_evictions.set(int(n))
 
+    # -- robustness hooks (serving/guard.py) -------------------------------
+
+    def on_shed(self, rid: int, t: float) -> None:
+        """A queued request was dropped by bounded-queue load shedding
+        (terminal state ABORTED; it never ran)."""
+        self._shed.inc()
+        self._touch(t)
+
+    def on_expired(self, rid: int, t: float) -> None:
+        """A request outlived its deadline — reaped from the queue or
+        host-cancelled mid-decode (terminal state EXPIRED)."""
+        self._expired.inc()
+        self._touch(t)
+
+    def on_failed(self, rid: int, t: float) -> None:
+        """The engine gave up on a request (terminal state FAILED):
+        never-admittable at submit, or its slot was quarantined."""
+        self._failed.inc()
+        self._touch(t)
+
+    def on_quarantine(self, rid: int, t: float) -> None:
+        """A running slot produced non-finite logits and was quarantined;
+        counts the slot event on top of the request's ``on_failed``."""
+        self._quarantined.inc()
+        self._touch(t)
+
+    def on_degraded(self, level: int, t: Optional[float] = None) -> None:
+        """Sample the degradation ladder's level this round; rounds at a
+        level above 0 also count into ``degraded_rounds``."""
+        self._degradation_level.set(float(level), t)
+        if level > 0:
+            self._degraded_rounds.inc()
+        if t is not None:
+            self._touch(t)
+
+    def on_watchdog(self, t: float) -> None:
+        """A decode/verify burst exceeded the watchdog's wall-time
+        threshold."""
+        self._watchdog_trips.inc()
+        self._touch(t)
+
     def on_blocks_in_use(self, n: int, t: Optional[float] = None) -> None:
         self._blocks_in_use.set(int(n), t)
         if t is not None:
@@ -528,6 +580,14 @@ class ServingMetrics:
             # arrival-queue backlog time series
             "mean_queue_depth": self._queue_depth.mean(),
             "peak_queue_depth": self._queue_depth.peak,
+            # robustness: non-FINISHED terminal outcomes + guard activity
+            "shed_requests": self._shed.value,
+            "expired_requests": self._expired.value,
+            "failed_requests": self._failed.value,
+            "quarantined_slots": self._quarantined.value,
+            "degraded_rounds": self._degraded_rounds.value,
+            "watchdog_trips": self._watchdog_trips.value,
+            "peak_degradation_level": self._degradation_level.peak,
         }
         # host wall-time attribution (schedule / prefill / decode / verify)
         for p in PHASES:

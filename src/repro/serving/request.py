@@ -18,6 +18,21 @@ A preempted request keeps everything it already generated in
 ``serving_prompt`` (= prompt + generated) with the *remaining* budget, so
 the resumed decode continues token-exactly where the evicted one stopped
 (greedy decoding is deterministic in the prefix).
+
+The robustness layer (serving/guard.py, docs/robustness.md) adds three
+more *terminal* states reachable from anywhere pre-terminal:
+
+* ``EXPIRED`` — the request outlived its deadline (queued past its TTL,
+  or host-cancelled mid-decode). Partial output is kept; ``error`` says
+  when it expired.
+* ``ABORTED`` — shed by bounded-queue admission before ever running.
+* ``FAILED`` — the engine gave up on the request itself: it could never
+  be admitted (block need exceeds the whole pool), or its slot was
+  quarantined after producing non-finite logits.
+
+Terminal states never transition again (``RequestState.is_terminal``);
+``Request.error`` carries the human-readable reason for every
+non-FINISHED terminal state.
 """
 
 from __future__ import annotations
@@ -38,6 +53,20 @@ class RequestState(str, enum.Enum):
     PREEMPTED = "preempted"  # evicted under memory pressure (transient:
     # the scheduler immediately re-queues, moving it back to QUEUED)
     FINISHED = "finished"  # EOS or budget exhausted; ``output`` is final
+    EXPIRED = "expired"  # deadline passed (queued or host-cancelled)
+    ABORTED = "aborted"  # shed by bounded-queue admission, never ran
+    FAILED = "failed"  # never-admittable, or quarantined (NaN/Inf logits)
+
+    @property
+    def is_terminal(self) -> bool:
+        """Terminal states never transition again; the engine's drain
+        loop only waits on non-terminal requests."""
+        return self in (
+            RequestState.FINISHED,
+            RequestState.EXPIRED,
+            RequestState.ABORTED,
+            RequestState.FAILED,
+        )
 
 
 @dataclasses.dataclass
@@ -47,12 +76,16 @@ class Request:
     arrival: float = 0.0  # seconds since trace start
     max_new_tokens: int = 32
     temperature: float = 0.0  # per-request sampling (0 = greedy)
+    deadline: Optional[float] = None  # absolute engine-clock time past
+    # which the request expires (None = no deadline; the engine fills in
+    # arrival + GuardConfig.default_ttl when a default TTL is set)
 
     # filled in by the engine
     output: Optional[List[int]] = None
     state: RequestState = RequestState.QUEUED
     generated: List[int] = dataclasses.field(default_factory=list)
     n_preemptions: int = 0
+    error: Optional[str] = None  # reason for a non-FINISHED terminal state
 
     @property
     def prompt_len(self) -> int:
@@ -116,6 +149,45 @@ class RequestQueue:
 
     def next_arrival(self) -> Optional[float]:
         return self._q[0][0] if self._q else None
+
+    def ready_count(self, now: float) -> int:
+        """Requests whose arrival has passed — the *live* backlog (the
+        bounded-queue cap applies to these, not to future arrivals a
+        replayed trace holds)."""
+        return sum(arr <= now for arr, _, _ in self._q)
+
+    def drain_expired(self, now: float) -> List[Request]:
+        """Remove and return every queued request whose deadline has
+        passed. O(n) rebuild — called once per scheduling round, and the
+        heap is small (the backlog)."""
+        expired = [
+            req
+            for _, _, req in self._q
+            if req.deadline is not None and now > req.deadline
+        ]
+        if expired:
+            gone = {id(r) for r in expired}
+            self._q = [e for e in self._q if id(e[2]) not in gone]
+            heapq.heapify(self._q)
+        return expired
+
+    def shed_newest(self, now: float, max_ready: int) -> List[Request]:
+        """Remove and return newest-arrival ready requests until at most
+        ``max_ready`` remain ready — bounded-queue load shedding. Newest
+        first means preemption re-queues (which keep their original, old
+        arrival) are never shed before fresh arrivals."""
+        ready = sorted(
+            (e for e in self._q if e[0] <= now),
+            key=lambda e: (e[0], e[1]),
+            reverse=True,
+        )
+        if len(ready) <= max_ready:
+            return []
+        drop = ready[: len(ready) - max_ready]
+        gone = {id(e[2]) for e in drop}
+        self._q = [e for e in self._q if id(e[2]) not in gone]
+        heapq.heapify(self._q)
+        return [e[2] for e in drop]
 
     def __len__(self) -> int:
         return len(self._q)

@@ -21,12 +21,44 @@ import jax
 import jax.numpy as jnp
 
 
+def degenerate_rows(logits):
+    """Rows of ``logits`` [B, V] with no well-defined sampling outcome:
+    any NaN, any +inf, or all -inf (an empty distribution). Returns [B]
+    bool. ``max`` over the row catches all three at once — NaN and +inf
+    propagate into it, and an all--inf row's max is -inf — while a row
+    that is merely *partially* masked with -inf keeps a finite max and
+    passes.
+
+    This is the quarantine signal: the serving engine checks it every
+    decode/verify step and fails the offending slot (docs/robustness.md)
+    rather than letting a poisoned distribution emit tokens. ``draw_
+    tokens`` additionally pins the drawn token for such rows to 0, so
+    even a caller that ignores the signal never sees an out-of-support
+    garbage draw."""
+    return ~jnp.isfinite(jnp.max(logits, axis=-1))
+
+
+def _sanitize(logits, bad):
+    """Replace ``bad`` rows with a one-hot distribution on token 0 —
+    the defined outcome for a degenerate row under both the greedy and
+    the categorical path (-1e9 never survives gumbel noise)."""
+    v = logits.shape[-1]
+    pinned = jnp.where(jnp.arange(v) == 0, 0.0, -1e9)
+    return jnp.where(bad[:, None], pinned, logits)
+
+
 def draw_tokens(logits, temps, key, greedy_only: bool = False):
     """Draw one token per row from ``logits`` [B, V]: argmax where the
     row's temperature is 0, temperature-scaled categorical otherwise.
     Returns [B] int32. ``greedy_only`` is a static fast path that skips
-    the categorical draw (and therefore all RNG work) entirely."""
+    the categorical draw (and therefore all RNG work) entirely.
+
+    Degenerate rows (``degenerate_rows``) deterministically draw token
+    0 on both paths — a *defined* outcome, never a silent garbage token.
+    The draw alone does not signal the problem; engines that must
+    quarantine check ``degenerate_rows`` themselves."""
     b = logits.shape[0]
+    logits = _sanitize(logits, degenerate_rows(logits))
     greedy = jnp.argmax(logits, axis=-1)
     if greedy_only:
         return greedy.astype(jnp.int32)

@@ -58,6 +58,14 @@ from repro.serving.block_pool import BlockAllocator, blocks_needed
 from repro.serving.request import Request, RequestQueue, RequestState
 
 
+class NeverAdmittable(ValueError):
+    """The request could not be served by this engine under *any* pool
+    state — its worst-case block need exceeds the whole allocatable pool
+    (or it fails a static validity check). Raised at ``submit`` so the
+    FIFO admission loop can never defer on it forever; the engine
+    catches it and fails just that request instead of the whole run."""
+
+
 class Scheduler:
     def __init__(
         self,
@@ -107,9 +115,10 @@ class Scheduler:
         req.generated = []
         req.n_preemptions = 0
         req.output = None
+        req.error = None
         need = req.prompt_len + req.max_new_tokens
         if need > self.max_len:
-            raise ValueError(
+            raise NeverAdmittable(
                 f"request {req.rid}: prompt+budget {need} exceeds max_len "
                 f"{self.max_len}"
             )
@@ -123,7 +132,9 @@ class Scheduler:
         if self.allocator is not None:
             nb = self.block_need(req)
             if nb > self.allocator.capacity:
-                raise ValueError(
+                # fail fast: deferral could never help — FIFO admission
+                # would wedge the whole queue behind this request forever
+                raise NeverAdmittable(
                     f"request {req.rid}: needs {nb} cache blocks but the "
                     f"pool only holds {self.allocator.capacity} — it could "
                     "never be admitted"
@@ -205,15 +216,26 @@ class Scheduler:
             admitted.append((slot, req))
         return admitted
 
-    def release(self, slot: int, tokens: Optional[Sequence[int]] = None) -> None:
+    def release(
+        self,
+        slot: int,
+        tokens: Optional[Sequence[int]] = None,
+        state: RequestState = RequestState.FINISHED,
+    ) -> None:
         """Free a finished slot. With the prefix cache and ``tokens`` (the
         request's committed chain: prompt + output), the slot's full
         blocks demote to cached index entries instead of free blocks, so
         a multi-turn follow-up whose prompt extends this conversation
-        re-prefills only its new suffix."""
+        re-prefills only its new suffix.
+
+        ``state`` is the terminal state the released request lands in:
+        ``FINISHED`` by default, ``EXPIRED`` for a deadline cancellation,
+        ``FAILED`` for a quarantined slot (those callers pass
+        ``tokens=None`` — a quarantined slot's KV must never demote into
+        the prefix cache)."""
         req = self.slots[slot]
         if req is not None:
-            req.state = RequestState.FINISHED
+            req.state = state
         self.slots[slot] = None
         self.slot_seq.pop(slot, None)
         if self.allocator is not None:
@@ -221,6 +243,39 @@ class Scheduler:
                 self.allocator.release_cached(slot, tokens)
             else:
                 self.allocator.release(slot)
+
+    # -- robustness: expiry + load shedding --------------------------------
+
+    def reap_expired(self, now: float) -> List[Request]:
+        """Drain queued requests whose deadline has passed (state ->
+        ``EXPIRED``). Runs before admission each round so an expired
+        request never wastes a prefill."""
+        expired = self.queue.drain_expired(now)
+        for req in expired:
+            req.state = RequestState.EXPIRED
+        return expired
+
+    def expired_running(self, now: float) -> List[int]:
+        """Slots whose running request is past its deadline — the
+        engine's host-side cancellation candidates."""
+        return [
+            slot
+            for slot, req in enumerate(self.slots)
+            if req is not None
+            and req.deadline is not None
+            and now > req.deadline
+        ]
+
+    def shed_overflow(self, now: float, max_ready: int) -> List[Request]:
+        """Bounded-queue load shedding: drop newest-arrival ready
+        requests (state -> ``ABORTED``) until at most ``max_ready``
+        remain waiting. Future arrivals in a replayed trace don't count
+        against the bound, and preemption re-queues (old arrivals) are
+        shed last."""
+        shed = self.queue.shed_newest(now, max_ready)
+        for req in shed:
+            req.state = RequestState.ABORTED
+        return shed
 
     # -- preemption -------------------------------------------------------
 

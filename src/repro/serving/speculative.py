@@ -58,6 +58,7 @@ from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.sampling import (
+    degenerate_rows,
     draw_tokens,
     emit_speculative,
     speculative_accept,
@@ -94,11 +95,21 @@ def build_spec_round(
 
     The returned function maps
     ``(params, cache, logits, pos, active, emitted, maxnew, buf, key,
-    temps, table, counters)`` to
-    ``(cache, logits, pos, active, emitted, buf, key, counters)`` with the
-    same carry conventions as the non-speculative ``_step``; ``counters``
-    is a length-2 int32 vector accumulating (accepted, proposed) draft
-    counts for the acceptance-rate metric.
+    temps, table, counters, poisoned)`` to
+    ``(cache, logits, pos, active, emitted, buf, key, counters,
+    poisoned)`` with the same carry conventions as the non-speculative
+    ``_step``; ``counters`` is a length-2 int32 vector accumulating
+    (accepted, proposed) draft counts for the acceptance-rate metric.
+
+    ``poisoned`` [B] bool is the quarantine carry (docs/robustness.md):
+    a row whose carry logits are degenerate (NaN/Inf — see
+    ``sampling.degenerate_rows``) or whose verify pass produces a
+    degenerate distribution at *any* window position commits nothing
+    this round, leaves the active set, and is latched into ``poisoned``
+    for the engine's per-burst host sync to quarantine. Only the
+    offending row is affected — acceptance, commits, and draft counters
+    for co-batched rows are untouched (rows never mix in attention or
+    sampling, so a poisoned row cannot corrupt its neighbours' state).
 
     ``greedy=True`` builds the all-greedy variant the engine selects when
     every request in a trace is temperature-0: argmax drafting and
@@ -113,8 +124,12 @@ def build_spec_round(
 
     def round_fn(
         params, cache, logits, pos, active, emitted, maxnew, buf, key,
-        temps, table, counters,
+        temps, table, counters, poisoned,
     ):
+        # quarantine check on the way in: a degenerate carry (NaN logits
+        # injected, or poisoned KV from the previous round's writes)
+        # means nothing this row drafts or verifies can be trusted
+        bad = degenerate_rows(logits) & active
         # window token 0: drawn from the carry logits — full-model, so it
         # is the token the non-speculative engine would emit next
         if greedy:
@@ -147,23 +162,30 @@ def build_spec_round(
         # one full-model pass scores the whole window for every slot and
         # overwrites the drafts' provisional K/V with full-model values
         tgt, cache = T.verify_step(params, cfg, cache, fed, pos, table)
+        # a degenerate verify distribution at any window position (NaN
+        # from corrupted KV the verify attention gathered) poisons the
+        # row: nothing from this window may commit
+        bad = bad | (
+            ~jnp.all(jnp.isfinite(jnp.max(tgt, axis=-1)), axis=-1) & active
+        )
+        ok = active & ~bad
         with jax.named_scope("spec/commit"):
             n_acc, carry, key = speculative_accept(
                 fed, dstack, tgt, temps, key, greedy=greedy
             )
             buf, emitted, committed, still = emit_speculative(
-                fed, n_acc, buf, active, emitted, maxnew, eos
+                fed, n_acc, buf, ok, emitted, maxnew, eos
             )
         # pos advances by the committed count for every row — finished
         # rows freeze at their committed length, so any later (ignored)
         # writes they make stay strictly beyond their committed chain
+        # (a poisoned row commits nothing and freezes where it was)
         pos = pos + committed
-        logits = jnp.where(active[:, None], carry, logits)
-        counters = counters.at[0].add(jnp.sum(jnp.where(active, n_acc - 1, 0)))
-        counters = counters.at[1].add(
-            jnp.sum(active.astype(jnp.int32)) * (k - 1)
-        )
-        return cache, logits, pos, still, emitted, buf, key, counters
+        logits = jnp.where(ok[:, None], carry, logits)
+        counters = counters.at[0].add(jnp.sum(jnp.where(ok, n_acc - 1, 0)))
+        counters = counters.at[1].add(jnp.sum(ok.astype(jnp.int32)) * (k - 1))
+        poisoned = poisoned | bad
+        return cache, logits, pos, still, emitted, buf, key, counters, poisoned
 
     return jax.jit(round_fn, donate_argnums=(1,))
 

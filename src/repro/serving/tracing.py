@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import json
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 ENGINE_TID = 0  # engine-wide lane: scheduling, bursts, idle
 QUEUE_TID = 1_000_000  # pre-admission lane: queued->admitted spans
@@ -176,10 +176,15 @@ class SpanTracer:
         return len(self._buf)
 
 
-def validate_trace(trace: Dict[str, Any]) -> List[str]:
+def validate_trace(
+    trace: Dict[str, Any], require: Sequence[str] = ()
+) -> List[str]:
     """Schema check for an exported trace (CI gate): every event carries
     the required ``ph``/``ts``/``pid`` keys, complete events carry
     ``dur``, and the trace holds at least one span per lifecycle phase.
+    ``require`` names extra events (any phase — spans or instants) that
+    must appear at least once; the chaos tests use it to assert fault
+    markers like ``quarantine`` or ``shed`` were actually emitted.
     Returns a list of problems (empty = valid)."""
     problems: List[str] = []
     events = trace.get("traceEvents")
@@ -198,4 +203,8 @@ def validate_trace(trace: Dict[str, Any]) -> List[str]:
             problems.append(f"no {phase!r} span in trace")
     if not ({"decode_burst", "speculative_burst"} & names):
         problems.append("no decode_burst/speculative_burst span in trace")
+    all_names = {ev.get("name") for ev in events}
+    for name in require:
+        if name not in all_names:
+            problems.append(f"required event {name!r} not in trace")
     return problems

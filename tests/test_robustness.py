@@ -1,0 +1,713 @@
+"""Fault injection + graceful degradation for the continuous engine.
+
+Three layers, mirroring docs/robustness.md:
+
+* host-only units — ``FaultPlan`` trigger semantics and ``--chaos``
+  parsing, ``DegradationLadder`` hysteresis, ``GuardConfig`` validation,
+  the ``RequestQueue`` deadline/shedding primitives, the allocator's
+  quarantine hooks, and the never-admittable fail-fast in the scheduler;
+* sampling properties — degenerate logits rows (all ``-inf``, NaN)
+  have a *defined* outcome (token 0) on both the greedy and the
+  temperature path, and ``degenerate_rows`` flags exactly them;
+* chaos suite — every fault family runs through a real
+  ``ContinuousEngine``: the run never crashes or hangs, surviving
+  requests stay token-exact against solo static runs, faulted requests
+  land in the right terminal state with the right counter and trace
+  event, and the retrace guard stays at zero steady-state recompiles
+  with chaos enabled.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import (
+    BlockAllocator,
+    ContinuousEngine,
+    DegradationLadder,
+    FaultPlan,
+    FaultSpec,
+    GuardConfig,
+    NeverAdmittable,
+    Request,
+    RequestQueue,
+    RequestState,
+    Scheduler,
+    ServeEngine,
+    SpanTracer,
+    validate_trace,
+)
+from repro.serving.sampling import degenerate_rows, draw_tokens
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("slim-tiny")
+    cfg = dataclasses.replace(
+        cfg, n_layers=2, d_model=128, d_ff=384, vocab_size=256
+    )
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def solo(model):
+    """Token-exact oracle: the static engine run one request at a time."""
+    cfg, params = model
+    static = ServeEngine(params, cfg, max_len=MAX_LEN)
+
+    def gen(r):
+        return static.generate(
+            {"tokens": jnp.asarray([r.prompt], jnp.int32)},
+            max_new_tokens=r.max_new_tokens,
+        ).tokens[0]
+
+    return gen
+
+
+def _requests(cfg, n, plen=8, max_new=8, seed=7):
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed), (n, plen), 0, cfg.vocab_size
+    )
+    return [
+        Request(
+            rid=i,
+            prompt=[int(t) for t in prompts[i]],
+            arrival=0.0,
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def _engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("check_retrace", True)
+    return ContinuousEngine(params, cfg, **kw)
+
+
+def _assert_survivors_exact(res, solo):
+    for r in res.requests:
+        if r.rid >= 0 and r.state is RequestState.FINISHED:
+            assert r.output == solo(r), f"survivor rid {r.rid} diverged"
+
+
+class StepClock:
+    """Deterministic virtual clock: each read advances a tick, sleeps
+    advance their full duration. Lets deadline tests script time instead
+    of racing the wall clock."""
+
+    def __init__(self, tick=1e-4):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: trigger semantics + --chaos parsing (host-only)
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_bare_clause_fires_first_check_once(self):
+        plan = FaultPlan([FaultSpec("nan_logits")])
+        assert plan.should_fire("nan_logits") == 1
+        assert plan.should_fire("nan_logits") == 0  # budget spent
+        assert plan.fired["nan_logits"] == 1
+        assert plan.checks["nan_logits"] == 2
+
+    def test_nth_waits_then_fires(self):
+        plan = FaultPlan([FaultSpec("kv_corrupt", nth=2)])
+        assert [plan.should_fire("kv_corrupt") for _ in range(4)] == [
+            0, 0, 1, 0,
+        ]
+
+    def test_count_budget_extends_firing(self):
+        plan = FaultPlan([FaultSpec("admit_shortfall", nth=1, count=2)])
+        assert [plan.should_fire("admit_shortfall") for _ in range(4)] == [
+            0, 1, 1, 0,
+        ]
+
+    def test_every_period(self):
+        plan = FaultPlan([FaultSpec("burst_stall", every=2, count=0)])
+        # every=2 fires on checks 2, 4, ... (check 0 is exempt)
+        assert [plan.should_fire("burst_stall") for _ in range(5)] == [
+            0, 0, 1, 0, 1,
+        ]
+
+    def test_arg_knob_and_default(self):
+        plan = FaultPlan([
+            FaultSpec("burst_stall", nth=0, arg=40),
+            FaultSpec("queue_flood", nth=0),
+        ])
+        assert plan.should_fire("burst_stall", arg_default=99) == 40
+        assert plan.should_fire("queue_flood", arg_default=8) == 8
+
+    def test_prob_is_deterministic_per_seed(self):
+        mk = lambda s: FaultPlan(
+            [FaultSpec("nan_logits", prob=0.3, count=0)], seed=s
+        )
+        a, b = mk(5), mk(5)
+        seq_a = [a.should_fire("nan_logits") for _ in range(200)]
+        seq_b = [b.should_fire("nan_logits") for _ in range(200)]
+        assert seq_a == seq_b
+        assert 0 < sum(seq_a) < 200  # actually Bernoulli, not const
+
+    def test_inactive_site_never_fires(self):
+        plan = FaultPlan([FaultSpec("nan_logits")])
+        assert plan.should_fire("kv_corrupt") == 0
+        assert plan.active_sites() == ["nan_logits"]
+
+    def test_summary_keys(self):
+        plan = FaultPlan([FaultSpec("nan_logits")])
+        plan.should_fire("nan_logits")
+        s = plan.summary()
+        assert s["fault_nan_logits"] == 1.0
+        assert s["fault_kv_corrupt"] == 0.0
+
+    def test_unknown_site_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultSpec("bad_site")
+
+    def test_parse_round_trip(self):
+        plan = FaultPlan.parse(
+            "nan_logits@3; burst_stall:every=4,arg=50,count=2;"
+            "queue_flood:prob=0.25,arg=8"
+        )
+        nl = plan.specs["nan_logits"][0]
+        assert (nl.nth, nl.count) == (3, 1)
+        bs = plan.specs["burst_stall"][0]
+        assert (bs.every, bs.arg, bs.count) == (4, 50, 2)
+        qf = plan.specs["queue_flood"][0]
+        assert (qf.prob, qf.arg) == (0.25, 8)
+
+    def test_parse_rejects_garbage(self):
+        with pytest.raises(ValueError):
+            FaultPlan.parse("nan_logits:wat=1")
+        with pytest.raises(ValueError):
+            FaultPlan.parse("nan_logits:count")
+        with pytest.raises(ValueError):
+            FaultPlan.parse(";;")
+
+
+# ---------------------------------------------------------------------------
+# DegradationLadder + GuardConfig (host-only)
+# ---------------------------------------------------------------------------
+
+
+class TestLadder:
+    def test_one_step_per_update_even_under_spike(self):
+        lad = DegradationLadder()
+        assert lad.update(100.0) == 1  # not straight to 3
+        assert lad.update(100.0) == 2
+        assert lad.update(100.0) == 3
+        assert lad.update(100.0) == 3  # saturates at max_level
+
+    def test_hysteresis_band_holds_level(self):
+        lad = DegradationLadder(enter=(1.0, 2.0), exit=(0.5, 1.0))
+        lad.update(1.5)  # -> 1
+        # 0.7 is below enter[1]=2.0 but above exit[0]=0.5: hold
+        assert lad.update(0.7) == 1
+        assert lad.update(0.7) == 1
+        assert lad.update(0.4) == 0  # below exit[0]: step down
+
+    def test_recovery_walks_down_one_per_round(self):
+        lad = DegradationLadder()
+        for _ in range(3):
+            lad.update(10.0)
+        assert lad.level == 3
+        levels = [lad.update(0.0) for _ in range(4)]
+        assert levels == [2, 1, 0, 0]
+        assert lad.transitions == 6
+
+    def test_guard_config_validates(self):
+        with pytest.raises(ValueError, match="exit < enter"):
+            GuardConfig(ladder_enter=(1.0,), ladder_exit=(1.0,))
+        with pytest.raises(ValueError, match="ascending"):
+            GuardConfig(ladder_enter=(2.0, 1.0), ladder_exit=(0.1, 0.2))
+        with pytest.raises(ValueError, match="pair up"):
+            GuardConfig(ladder_enter=(1.0, 2.0), ladder_exit=(0.5,))
+        with pytest.raises(ValueError):
+            GuardConfig(max_queue=-1)
+        assert not GuardConfig().active
+        assert GuardConfig(default_ttl=5.0).active
+        assert GuardConfig(degradation=True).active
+
+
+# ---------------------------------------------------------------------------
+# degenerate logits: property tests (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+class TestDegenerateSampling:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 3), st.floats(0.0, 1.5))
+    def test_all_neg_inf_row_draws_token_zero(self, row, temp):
+        logits = jnp.zeros((4, 32), jnp.float32)
+        logits = logits.at[row].set(-jnp.inf)
+        bad = degenerate_rows(logits)
+        assert bool(bad[row]) and int(jnp.sum(bad)) == 1
+        toks = draw_tokens(logits, jnp.full((4,), temp), jax.random.PRNGKey(0))
+        assert int(toks[row]) == 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 3), st.integers(0, 31), st.floats(0.0, 1.5))
+    def test_nan_anywhere_in_row_draws_token_zero(self, row, col, temp):
+        logits = jnp.ones((4, 32), jnp.float32)
+        logits = logits.at[row, col].set(jnp.nan)
+        bad = degenerate_rows(logits)
+        assert bool(bad[row]) and int(jnp.sum(bad)) == 1
+        toks = draw_tokens(logits, jnp.full((4,), temp), jax.random.PRNGKey(1))
+        assert int(toks[row]) == 0
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 3))
+    def test_pos_inf_row_flagged(self, row):
+        logits = jnp.zeros((4, 32), jnp.float32)
+        logits = logits.at[row, 5].set(jnp.inf)
+        assert bool(degenerate_rows(logits)[row])
+
+    def test_partial_neg_inf_mask_is_fine(self):
+        # a top-k style mask (-inf on most entries) is NOT degenerate
+        logits = jnp.full((2, 32), -jnp.inf)
+        logits = logits.at[:, 7].set(1.0)
+        assert not bool(jnp.any(degenerate_rows(logits)))
+        toks = draw_tokens(logits, 0.0, jax.random.PRNGKey(2))
+        assert [int(t) for t in toks] == [7, 7]
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue deadline/shedding primitives (host-only)
+# ---------------------------------------------------------------------------
+
+
+class TestQueueGuards:
+    def test_drain_expired_removes_only_past_deadline(self):
+        a = Request(rid=0, prompt=[1], arrival=0.0, deadline=1.0)
+        b = Request(rid=1, prompt=[1], arrival=0.0, deadline=9.0)
+        c = Request(rid=2, prompt=[1], arrival=0.0)  # no deadline
+        q = RequestQueue([a, b, c])
+        gone = q.drain_expired(now=2.0)
+        assert [r.rid for r in gone] == [0]
+        assert len(q) == 2
+        assert q.drain_expired(now=2.0) == []
+
+    def test_shed_newest_spares_old_arrivals(self):
+        old = Request(rid=0, prompt=[1], arrival=0.0)
+        mid = Request(rid=1, prompt=[1], arrival=1.0)
+        new = Request(rid=2, prompt=[1], arrival=2.0)
+        q = RequestQueue([old, mid, new])
+        shed = q.shed_newest(now=5.0, max_ready=1)
+        assert sorted(r.rid for r in shed) == [1, 2]
+        assert q.pop_ready(5.0).rid == 0
+
+    def test_shed_ignores_future_arrivals(self):
+        here = Request(rid=0, prompt=[1], arrival=0.0)
+        later = Request(rid=1, prompt=[1], arrival=100.0)
+        q = RequestQueue([here, later])
+        assert q.shed_newest(now=1.0, max_ready=1) == []
+        assert len(q) == 2
+
+    def test_preemption_requeue_outlives_shedding(self):
+        # the preemption victim keeps its original (old) arrival, so a
+        # flood of fresh arrivals is shed before it ever is
+        victim = Request(rid=0, prompt=[1], arrival=0.0)
+        q = RequestQueue()
+        for i in range(1, 4):
+            q.push(Request(rid=i, prompt=[1], arrival=3.0))
+        q.push(victim, front=True)
+        shed = q.shed_newest(now=5.0, max_ready=1)
+        assert victim not in shed and len(shed) == 3
+
+
+# ---------------------------------------------------------------------------
+# allocator quarantine hooks (host-only)
+# ---------------------------------------------------------------------------
+
+
+class TestAllocatorQuarantine:
+    def test_register_new_chains_gate(self):
+        a = BlockAllocator(n_blocks=12, block_size=4, prefix_cache=True)
+        a.register_new_chains = False
+        a.admit_request(0, list(range(8)), 8)
+        a.release_cached(0, list(range(8)))
+        assert a.n_evictable() == 0  # nothing registered, nothing demoted
+        a.register_new_chains = True
+        a.admit_request(1, list(range(8)), 8)
+        a.release_cached(1, list(range(8)))
+        assert a.n_evictable() > 0
+        a.check()
+
+    def test_purge_slot_index_makes_blocks_unmatchable(self):
+        a = BlockAllocator(n_blocks=12, block_size=4, prefix_cache=True)
+        toks = list(range(100, 108))  # 2 full blocks
+        a.admit_request(0, toks, 8)
+        assert a.purge_slot_index(0) > 0
+        a.release(0)
+        # matching must come up empty: a fresh admission re-prefills all
+        info = a.admit_request(1, toks, 8)
+        assert info is not None and not info.hit and info.cached_len == 0
+        a.check()
+
+
+# ---------------------------------------------------------------------------
+# never-admittable fail-fast (satellite 1: regression for infinite defer)
+# ---------------------------------------------------------------------------
+
+
+class TestNeverAdmittable:
+    def test_scheduler_rejects_oversize_prompt(self):
+        sched = Scheduler(n_slots=2, max_len=16)
+        with pytest.raises(NeverAdmittable, match="exceeds max_len"):
+            sched.submit(Request(rid=0, prompt=[1] * 20, max_new_tokens=4))
+
+    def test_scheduler_rejects_block_need_beyond_pool(self):
+        alloc = BlockAllocator(n_blocks=6, block_size=4)  # 4 usable
+        sched = Scheduler(
+            n_slots=2, max_len=64, allocator=alloc, on_demand=True
+        )
+        with pytest.raises(NeverAdmittable, match="pool only holds"):
+            sched.submit(Request(rid=0, prompt=[1] * 30, max_new_tokens=8))
+
+    def test_engine_fails_fast_and_serves_the_rest(self, model, solo):
+        """The regression: a prompt larger than the whole pool used to
+        defer forever at the head of the FIFO, starving the run. Now it
+        lands in FAILED at submit and co-batched requests complete."""
+        cfg, _ = model
+        # 7 blocks - 2 reserved = 5 usable = 40 positions: the whale's
+        # 44-token prompt could never fit even with the pool to itself
+        eng = _engine(model, n_slots=2, preemption=True, n_blocks=7)
+        reqs = _requests(cfg, 2, plen=8, max_new=6)
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(3), (1, 44), 0, cfg.vocab_size
+        )
+        whale = Request(
+            rid=99,
+            prompt=[int(t) for t in prompts[0]],
+            arrival=0.0,
+            max_new_tokens=4,
+        )
+        res = eng.run(reqs + [whale])
+        by_rid = {r.rid: r for r in res.requests}
+        assert by_rid[99].state is RequestState.FAILED
+        assert by_rid[99].error and "pool only holds" in by_rid[99].error
+        assert res.metrics["failed_requests"] == 1.0
+        for i in range(2):
+            assert by_rid[i].state is RequestState.FINISHED
+        _assert_survivors_exact(res, solo)
+
+
+# ---------------------------------------------------------------------------
+# chaos suite: every fault family through a real engine
+# ---------------------------------------------------------------------------
+
+
+class TestChaosEngine:
+    def test_inert_guard_changes_nothing(self, model, solo):
+        eng = _engine(model, guard=GuardConfig())
+        res = eng.run(_requests(model[0], 4))
+        assert all(
+            r.state is RequestState.FINISHED for r in res.requests
+        )
+        _assert_survivors_exact(res, solo)
+        assert res.metrics["shed_requests"] == 0.0
+        assert res.metrics["expired_requests"] == 0.0
+        assert res.metrics["failed_requests"] == 0.0
+
+    def test_nan_logits_quarantines_only_the_victim(self, model, solo):
+        eng = _engine(
+            model,
+            faults=FaultPlan([FaultSpec("nan_logits", nth=1)]),
+            trace=True,
+        )
+        res = eng.run(_requests(model[0], 4))
+        failed = [r for r in res.requests if r.state is RequestState.FAILED]
+        assert len(failed) == 1
+        assert failed[0].output is None  # poisoned tokens are untrusted
+        assert "quarantined" in failed[0].error
+        assert res.metrics["quarantined_slots"] == 1.0
+        assert res.metrics["failed_requests"] == 1.0
+        assert res.metrics["fault_nan_logits"] == 1.0
+        assert sum(
+            r.state is RequestState.FINISHED for r in res.requests
+        ) == 3
+        _assert_survivors_exact(res, solo)
+        assert res.metrics["jit_retraces"] == 0.0
+        problems = validate_trace(
+            eng.tracer.to_dict(), require=("quarantine", "fault_nan_logits")
+        )
+        assert problems == []
+
+    def test_kv_corrupt_never_poisons_neighbours(self, model, solo):
+        eng = _engine(
+            model,
+            prefix_cache=True,
+            faults=FaultPlan([FaultSpec("kv_corrupt", nth=1)]),
+        )
+        res = eng.run(_requests(model[0], 4))
+        assert res.metrics["fault_kv_corrupt"] == 1.0
+        # blast radius: at most the single owning slot fails; everyone
+        # else must be token-exact (CoW means shared blocks are never
+        # the corruption target)
+        failed = [r for r in res.requests if r.state is RequestState.FAILED]
+        assert len(failed) <= 1
+        assert len(failed) + sum(
+            r.state is RequestState.FINISHED for r in res.requests
+        ) == 4
+        _assert_survivors_exact(res, solo)
+        assert res.metrics["jit_retraces"] == 0.0
+
+    def test_allocator_shortfalls_are_absorbed(self, model, solo):
+        eng = _engine(
+            model,
+            preemption=True,
+            faults=FaultPlan([
+                FaultSpec("admit_shortfall", nth=0, count=2),
+                FaultSpec("extend_shortfall", nth=1, count=2),
+            ]),
+        )
+        res = eng.run(_requests(model[0], 4))
+        assert all(r.state is RequestState.FINISHED for r in res.requests)
+        _assert_survivors_exact(res, solo)
+        assert res.metrics["fault_admit_shortfall"] == 2.0
+        assert res.metrics["fault_extend_shortfall"] >= 1.0
+        assert res.metrics["preemptions"] >= 1.0  # the forced evictions
+        assert res.metrics["jit_retraces"] == 0.0
+
+    def test_burst_stall_trips_watchdog_not_outputs(self, model, solo):
+        eng = _engine(
+            model,
+            faults=FaultPlan([FaultSpec("burst_stall", nth=0, arg=30)]),
+            guard=GuardConfig(watchdog_s=0.005),
+            trace=True,
+        )
+        res = eng.run(_requests(model[0], 3))
+        assert all(r.state is RequestState.FINISHED for r in res.requests)
+        _assert_survivors_exact(res, solo)
+        assert res.metrics["watchdog_trips"] >= 1.0
+        assert res.metrics["fault_burst_stall"] == 1.0
+        problems = validate_trace(
+            eng.tracer.to_dict(), require=("watchdog_trip",)
+        )
+        assert problems == []
+
+    def test_queue_flood_sheds_newest_first(self, model, solo):
+        eng = _engine(
+            model,
+            faults=FaultPlan([FaultSpec("queue_flood", nth=0, arg=8)]),
+            guard=GuardConfig(max_queue=2),
+            trace=True,
+        )
+        res = eng.run(_requests(model[0], 4))
+        assert len(res.requests) == 12  # 4 real + 8 synthetic flood
+        shed = [r for r in res.requests if r.state is RequestState.ABORTED]
+        assert res.metrics["shed_requests"] == float(len(shed)) > 0
+        # the flood arrives later than the real trace, so shedding takes
+        # the synthetic arrivals and every real request completes
+        assert all(r.rid < 0 for r in shed)
+        for r in res.requests:
+            if r.rid >= 0:
+                assert r.state is RequestState.FINISHED
+        _assert_survivors_exact(res, solo)
+        problems = validate_trace(eng.tracer.to_dict(), require=("shed",))
+        assert problems == []
+
+
+# ---------------------------------------------------------------------------
+# deadlines / TTL
+# ---------------------------------------------------------------------------
+
+
+class TestDeadlines:
+    def test_queued_past_deadline_expires_without_prefill(self, model, solo):
+        """A request whose deadline passes while it waits never reaches
+        the device: reaped to EXPIRED before admission."""
+        cfg, _ = model
+        reqs = _requests(cfg, 2, max_new=6)
+        doomed = _requests(cfg, 1, seed=11)[0]
+        doomed.rid = 10
+        doomed.deadline = 1e-6  # passed before the first round
+        eng = _engine(model, n_slots=1, guard=GuardConfig(), trace=True)
+        res = eng.run(reqs + [doomed])
+        by_rid = {r.rid: r for r in res.requests}
+        assert by_rid[10].state is RequestState.EXPIRED
+        assert by_rid[10].output is None
+        assert "queued" in by_rid[10].error
+        assert res.metrics["expired_requests"] == 1.0
+        for i in range(2):
+            assert by_rid[i].state is RequestState.FINISHED
+        _assert_survivors_exact(res, solo)
+        # no prefill span for the doomed rid: it never touched a slot
+        prefills = [
+            ev
+            for ev in eng.tracer.events()
+            if ev.get("name") == "prefill"
+            and ev.get("args", {}).get("rid") == 10
+        ]
+        assert prefills == []
+
+    def test_running_past_deadline_keeps_partial_output(self, model, solo):
+        """Host-side cancellation mid-decode: the slot is silenced, the
+        blocks are freed, and the tokens emitted so far survive — an
+        exact prefix of the solo output (greedy decode)."""
+        cfg, _ = model
+        clk = StepClock()
+        reqs = _requests(cfg, 2, max_new=12)
+        reqs[0].deadline = 0.3  # ~one stalled burst away (the `every`
+        # trigger skips check 0, so the first stall lands on round 1 and
+        # the round-2 reap catches rid 0 mid-decode)
+        eng = _engine(
+            model,
+            n_slots=2,
+            clock=clk,
+            sleep=clk.sleep,
+            guard=GuardConfig(),
+            faults=FaultPlan([
+                FaultSpec("burst_stall", every=1, count=0, arg=400),
+            ]),
+        )
+        res = eng.run(reqs, sync_every=4)
+        by_rid = {r.rid: r for r in res.requests}
+        exp = by_rid[0]
+        assert exp.state is RequestState.EXPIRED
+        assert "running" in exp.error
+        assert exp.output is not None and 0 < len(exp.output) < 12
+        assert exp.output == solo(by_rid[0])[: len(exp.output)]
+        assert by_rid[1].state is RequestState.FINISHED
+        _assert_survivors_exact(res, solo)
+        assert res.metrics["expired_requests"] == 1.0
+
+    def test_preempted_past_deadline_expires_not_readmits(self, model, solo):
+        """Satellite: a preemption victim whose deadline passes while it
+        waits for re-admission lands in EXPIRED at the reap — its blocks
+        are already released and it must NOT re-prefill (reap runs
+        before admission every round)."""
+        cfg, _ = model
+        clk = StepClock()
+        reqs = _requests(cfg, 2, plen=8, max_new=6)
+        reqs[1].deadline = 0.5  # alive through admission, dead after the
+        # stalled burst that follows its forced preemption
+        eng = _engine(
+            model,
+            n_slots=2,
+            preemption=True,
+            clock=clk,
+            sleep=clk.sleep,
+            guard=GuardConfig(),
+            trace=True,
+            faults=FaultPlan([
+                # the growth shortfall forces a youngest-first preemption
+                # of rid 1; the stall pushes the virtual clock past its
+                # deadline before the next scheduling round
+                FaultSpec("extend_shortfall", nth=0),
+                FaultSpec("burst_stall", nth=0, arg=1000),
+            ]),
+        )
+        res = eng.run(reqs, sync_every=4)
+        by_rid = {r.rid: r for r in res.requests}
+        victim = by_rid[1]
+        assert victim.n_preemptions == 1
+        assert victim.state is RequestState.EXPIRED
+        assert res.metrics["expired_requests"] == 1.0
+        assert res.metrics["preemptions"] == 1.0
+        assert by_rid[0].state is RequestState.FINISHED
+        _assert_survivors_exact(res, solo)
+        # exactly ONE prefill span for the victim: admitted once, never
+        # re-prefilled after its deadline passed in the queue
+        prefills = [
+            ev
+            for ev in eng.tracer.events()
+            if ev.get("name") == "prefill"
+            and ev.get("args", {}).get("rid") == 1
+        ]
+        assert len(prefills) == 1
+
+    def test_default_ttl_applies_to_all(self, model):
+        cfg, _ = model
+        clk = StepClock()
+        eng = _engine(
+            model,
+            clock=clk,
+            sleep=clk.sleep,
+            guard=GuardConfig(default_ttl=0.2),
+            faults=FaultPlan([
+                FaultSpec("burst_stall", every=1, count=0, arg=300),
+            ]),
+        )
+        res = eng.run(_requests(cfg, 3, max_new=12), sync_every=4)
+        # every burst overshoots the TTL: every request must expire (not
+        # hang, not finish) and the engine must drain cleanly
+        assert all(r.state is RequestState.EXPIRED for r in res.requests)
+        assert res.metrics["expired_requests"] == 3.0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder through the engine
+# ---------------------------------------------------------------------------
+
+
+class TestDegradationEngine:
+    def test_ladder_degrades_and_recovers(self, model, solo):
+        cfg, _ = model
+        eng = _engine(
+            model,
+            n_slots=2,
+            speculative=2,
+            preemption=True,
+            guard=GuardConfig(
+                degradation=True,
+                ladder_enter=(0.01, 0.02, 0.03),
+                ladder_exit=(0.005, 0.01, 0.015),
+            ),
+        )
+        res = eng.run(_requests(cfg, 6, max_new=12))
+        # the backlog (6 requests, 2 slots) drives the ladder up; the
+        # drain brings it back — and the spec->plain fallback plus the
+        # mode switch back must not cost a single retrace
+        assert res.metrics["degraded_rounds"] > 0
+        assert res.metrics["peak_degradation_level"] >= 2.0
+        assert all(r.state is RequestState.FINISHED for r in res.requests)
+        _assert_survivors_exact(res, solo)
+        assert res.metrics["jit_retraces"] == 0.0
+
+    def test_degraded_run_is_token_exact_vs_undegraded(self, model):
+        """The ladder changes *how* tokens are produced (plain decode vs
+        speculative, paused registration), never *which* tokens."""
+        cfg, _ = model
+        reqs = _requests(cfg, 4, max_new=8)
+        base = _engine(model, n_slots=2, speculative=2, prefix_cache=True)
+        ref = {r.rid: r.output for r in base.run([
+            dataclasses.replace(r) for r in reqs
+        ]).requests}
+        eng = _engine(
+            model,
+            n_slots=2,
+            speculative=2,
+            prefix_cache=True,
+            guard=GuardConfig(
+                degradation=True,
+                ladder_enter=(0.01, 0.02, 0.03),
+                ladder_exit=(0.005, 0.01, 0.015),
+            ),
+        )
+        res = eng.run([dataclasses.replace(r) for r in reqs])
+        assert res.metrics["degraded_rounds"] > 0
+        for r in res.requests:
+            assert r.output == ref[r.rid], f"rid {r.rid} diverged"
