@@ -1,41 +1,107 @@
-"""Production mesh construction.
+"""Device mesh construction (production, serving, tests).
 
-``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+Every builder here is a FUNCTION (never a module-level constant) so
 importing this module touches no jax device state; the dryrun sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import and then asks for the mesh.
 
-Mesh shapes:
+Default mesh shapes:
   single-pod : (16, 16)    axes (data, model)           = 256 chips
   multi-pod  : (2, 16, 16) axes (pod, data, model)      = 512 chips, 2 pods
+  serving    : (1, tp)     axes (data, model)           = one TP replica
+
+Hosts with too few devices raise ``MeshUnavailable`` (a ``RuntimeError``
+subclass) so multi-device tests can skip cleanly instead of erroring.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence, Tuple
+
 import jax
 
+# default axis names by mesh rank
+_AXES_BY_RANK = {2: ("data", "model"), 3: ("pod", "data", "model")}
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+
+class MeshUnavailable(RuntimeError):
+    """The host exposes fewer devices than the requested mesh shape.
+
+    Subclasses ``RuntimeError`` so pre-existing callers that caught the
+    old error keep working; tests catch this type and ``pytest.skip``.
+    """
+
+
+def _build(shape: Tuple[int, ...], axes: Sequence[str], hint: str):
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {tuple(axes)} do not match shape {shape}")
     n = 1
     for s in shape:
         n *= s
     devices = jax.devices()[:n]
     if len(devices) < n:
-        raise RuntimeError(
-            f"need {n} devices for the production mesh, found {len(devices)} — "
-            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
-            "importing jax (launch/dryrun.py does this)"
+        raise MeshUnavailable(
+            f"need {n} devices for mesh {shape}, found {len(devices)} — "
+            + hint
         )
     import numpy as np
 
-    dev_array = np.array(devices).reshape(shape)
-    return jax.sharding.Mesh(dev_array, axes)
+    return jax.sharding.Mesh(np.array(devices).reshape(shape), tuple(axes))
+
+
+def make_production_mesh(
+    shape: Optional[Tuple[int, ...]] = None,
+    axes: Optional[Sequence[str]] = None,
+    *,
+    multi_pod: bool = False,
+):
+    """Build the training/launch mesh.
+
+    ``shape`` defaults to the production topology — ``(16, 16)``, or
+    ``(2, 16, 16)`` with ``multi_pod=True`` — but any shape can be
+    requested. ``axes`` default by rank: 2 -> (data, model),
+    3 -> (pod, data, model).
+    """
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    elif multi_pod:
+        raise ValueError("pass either shape= or multi_pod=True, not both")
+    if axes is None:
+        axes = _AXES_BY_RANK.get(len(shape))
+        if axes is None:
+            raise ValueError(
+                f"no default axis names for a rank-{len(shape)} mesh; "
+                "pass axes="
+            )
+    return _build(
+        tuple(shape), axes,
+        "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+        "importing jax (launch/dryrun.py does this)",
+    )
+
+
+def make_serving_mesh(tp: int):
+    """The one-replica serving mesh: ``(1, tp)`` over (data, model).
+
+    The data axis is size 1 by construction — data parallelism in serving
+    is the Router's job (serving/router.py spreads requests over whole
+    replicas); inside a replica only the model axis is populated, so
+    ``models/sharding.py`` specs shard weights/KV without ever crossing
+    replica boundaries.
+    """
+    if tp < 1:
+        raise ValueError("tp must be >= 1")
+    return _build(
+        (1, tp), ("data", "model"),
+        f"set XLA_FLAGS=--xla_force_host_platform_device_count={tp} before "
+        "importing jax, or lower EngineConfig.parallel.tp",
+    )
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
-    """Small mesh for unit tests (requires enough host devices)."""
-    import numpy as np
-
-    n = int(np.prod(shape))
-    return jax.sharding.Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)
+    """Small mesh for unit tests; raises ``MeshUnavailable`` (skip-able)
+    when the host has too few devices."""
+    return _build(
+        tuple(shape), axes,
+        "set XLA_FLAGS=--xla_force_host_platform_device_count=8 before "
+        "importing jax, or pytest.skip on MeshUnavailable",
+    )

@@ -31,10 +31,16 @@ from repro.models import transformer as T
 from repro.models.compress import compress_model, summarize_reports
 from repro.serving import (
     ContinuousEngine,
+    EngineConfig,
     FaultPlan,
     GuardConfig,
+    PagingConfig,
+    ParallelConfig,
+    PrefixCacheConfig,
+    Router,
     ServeEngine,
     SpanTracer,
+    SpecConfig,
     synthetic_trace,
 )
 from repro.serving.block_pool import RESERVED_BLOCKS
@@ -114,6 +120,31 @@ def main(argv=None):
         "--prefix-index-ttl", type=float, default=0.0,
         help="seconds a prefix-index entry may outlive its registration "
         "(0 = no TTL)",
+    )
+    # topology: engine = one replica; scale out with the router, scale up
+    # with tensor parallelism inside each replica (docs/serving.md)
+    p.add_argument(
+        "--replicas", type=int, default=1,
+        help="data-parallel engine replicas behind the Router (1 = a bare "
+        "engine; continuous workload only)",
+    )
+    p.add_argument(
+        "--placement", choices=["least_loaded", "prefix_affinity"],
+        default="least_loaded",
+        help="router placement policy: least cumulative planned work, or "
+        "sticky routing by block-aligned prompt-prefix identity (keeps a "
+        "shared prefix hot on one replica's prefix cache)",
+    )
+    p.add_argument(
+        "--tp", type=int, default=1,
+        help="tensor-parallel degree inside each replica: shards weights, "
+        "KV pool and attention heads over a (1, tp) device mesh's model "
+        "axis (needs tp visible devices)",
+    )
+    p.add_argument(
+        "--prefix-groups", type=int, default=1,
+        help="number of distinct shared prefixes in the synthetic trace "
+        "(multi-tenant traffic; needs --shared-prefix)",
     )
     # observability (docs/observability.md)
     p.add_argument(
@@ -197,6 +228,15 @@ def main(argv=None):
     if (args.prefix_index_cap or args.prefix_index_ttl) and not args.prefix_cache:
         p.error("--prefix-index-cap/--prefix-index-ttl bound the prefix "
                 "cache's hash index; they need --prefix-cache")
+    if (args.replicas > 1 or args.tp > 1) and args.workload != "poisson":
+        p.error("--replicas/--tp shape the continuous-serving topology; "
+                "they need --workload poisson")
+    if args.placement != "least_loaded" and args.replicas < 2:
+        p.error("--placement chooses between router replicas; it needs "
+                "--replicas >= 2")
+    if args.prefix_groups > 1 and not args.shared_prefix:
+        p.error("--prefix-groups splits the shared prefix into tenant "
+                "populations; it needs --shared-prefix")
     if args.trace_out and args.workload != "poisson":
         p.error("--trace-out records the continuous engine's lifecycle; "
                 "it needs --workload poisson")
@@ -249,8 +289,9 @@ def main(argv=None):
             temperature=args.temperature,
             seed=args.seed,
             shared_prefix_len=args.shared_prefix,
+            shared_prefix_groups=args.prefix_groups,
         )
-        tracer = SpanTracer() if args.trace_out else None
+        tracer = SpanTracer() if args.trace_out and args.replicas == 1 else None
         guard = None
         if args.deadline or args.max_queue or args.watchdog or args.degrade:
             guard = GuardConfig(
@@ -264,25 +305,47 @@ def main(argv=None):
             if args.chaos
             else None
         )
-        engine = ContinuousEngine(
-            params, cfg, n_slots=args.slots, max_len=max_len,
+        # the one front door: every engine (and every router replica) is
+        # built from this config — flat kwargs are the deprecated shim
+        config = EngineConfig(
+            n_slots=args.slots, max_len=max_len,
             prefill_bucket=bucket, seed=args.seed,
-            block_size=args.block_size, n_blocks=args.n_blocks,
-            prefix_cache=args.prefix_cache,
-            preemption=args.preemption, decode_reserve=args.decode_reserve,
-            speculative=args.speculative,
-            victim_policy=args.victim_policy,
-            prefix_cache_max_entries=args.prefix_index_cap,
-            prefix_cache_ttl=args.prefix_index_ttl,
-            trace=tracer,
             check_retrace=args.check_retrace,
+            paging=PagingConfig(
+                block_size=args.block_size,
+                n_blocks=args.n_blocks,
+                preemption=args.preemption,
+                decode_reserve=args.decode_reserve,
+                victim_policy=args.victim_policy,
+            ),
+            prefix_cache=PrefixCacheConfig(
+                enabled=args.prefix_cache,
+                max_entries=args.prefix_index_cap,
+                ttl=args.prefix_index_ttl,
+            ),
+            speculative=SpecConfig(k=args.speculative),
+            parallel=ParallelConfig(tp=args.tp),
             guard=guard,
-            faults=faults,
-        )
+        ).validate(cfg)
+        router = None
+        if args.replicas > 1:
+            router = Router(
+                params, cfg, config, n_replicas=args.replicas,
+                placement=args.placement, trace=bool(args.trace_out),
+                faults=faults,
+            )
+            engine = router.engines[0]  # n_blocks / retrace-guard prints
+        else:
+            engine = ContinuousEngine(
+                params, cfg, config, trace=tracer, faults=faults
+            )
         if args.profile_dir:
             jax.profiler.start_trace(args.profile_dir)
         try:
-            res = engine.run(trace, sync_every=args.sync_every)
+            if router is not None:
+                res = router.run(trace, sync_every=args.sync_every)
+            else:
+                res = engine.run(trace, sync_every=args.sync_every)
         finally:
             if args.profile_dir:
                 jax.profiler.stop_trace()
@@ -303,6 +366,21 @@ def main(argv=None):
             f"{m['total_tokens']:.0f} tokens in "
             f"{m['duration_s']:.2f}s ({m['tokens_per_s']:.1f} tok/s)"
         )
+        if router is not None or args.tp > 1:
+            per_rep = ", ".join(
+                f"replica{i}={m.get(f'replica{i}_tokens_per_s', 0.0):.1f}"
+                for i in range(args.replicas)
+            )
+            print(
+                f"[serve/continuous] topology: replicas={args.replicas} "
+                f"(placement {args.placement}) x tp={args.tp}"
+                + (f" | tok/s {per_rep}" if router is not None else "")
+                + (
+                    f" | shed {m['router_shed']:.0f}"
+                    if router is not None
+                    else ""
+                )
+            )
         print(
             f"[serve/continuous] ttft mean {m['mean_ttft_s']:.3f}s "
             f"p95 {m['p95_ttft_s']:.3f}s | latency mean "
@@ -367,9 +445,19 @@ def main(argv=None):
                 f"[serve/continuous] trace -> {args.trace_out} "
                 f"({len(tracer)} events, {tracer.dropped} dropped)"
             )
+        elif router is not None and args.trace_out:
+            n = router.export_trace(args.trace_out)
+            print(
+                f"[serve/continuous] trace -> {args.trace_out} "
+                f"({n} events over {args.replicas} replica lanes)"
+            )
         if args.metrics_json:
+            # the config rides along under its own key, so every recorded
+            # run carries its provenance; metric keys stay top-level
+            dump = dict(m)
+            dump["config"] = config.to_dict()
             with open(args.metrics_json, "w") as fh:
-                json.dump(m, fh, indent=2, sort_keys=True)
+                json.dump(dump, fh, indent=2, sort_keys=True)
                 fh.write("\n")
             print(f"[serve/continuous] metrics -> {args.metrics_json}")
         first = res.requests[0]

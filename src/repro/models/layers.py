@@ -23,6 +23,7 @@ from repro.core.compressed import (
     dequantize_base,
     slim_linear_apply,
 )
+from repro.models import sharding as Sh
 from repro.models.config import ModelConfig
 
 Params = Dict[str, Any]
@@ -287,6 +288,12 @@ def attention_layer(
     q = linear(p["wq"], h, "wq").reshape(b, s, cfg.n_heads, cfg.d_head)
     k = linear(p["wk"], h, "wk").reshape(b, s, cfg.n_kv_heads, cfg.d_head)
     v = linear(p["wv"], h, "wv").reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    # tensor-parallel serving: pin the heads dim to the mesh's model axis
+    # so attention stays all-local between the QKV and output projections
+    # (exact no-ops without an ambient serving mesh — models/sharding.py)
+    q = Sh.shard_heads(q, 2)
+    k = Sh.shard_heads(k, 2)
+    v = Sh.shard_heads(v, 2)
     q, k = _qk_normalize(q, k, p, cfg)
     pos0 = jnp.asarray(pos0, jnp.int32)
     per_slot = pos0.ndim == 1  # ragged decode: each batch row at its own position

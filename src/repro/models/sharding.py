@@ -19,7 +19,8 @@ shard L on d_in(data), R on d_out(model).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import contextlib
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -27,6 +28,60 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.config import ModelConfig
 
 Pytree = Any
+
+# ambient serving mesh: installed by ContinuousEngine.run() around its
+# serve loop (use_serving_mesh) and consulted at trace time by the
+# activation constraints below. A module global rather than a jax mesh
+# context so the single-device path stays a None-check — and so the
+# constraint helpers are exact no-ops (not just unsharded constraints)
+# when serving without tensor parallelism.
+_SERVING_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def use_serving_mesh(mesh: Optional[Mesh]):
+    """Install ``mesh`` as the ambient serving mesh for the duration."""
+    global _SERVING_MESH
+    prev = _SERVING_MESH
+    _SERVING_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _SERVING_MESH = prev
+
+
+def serving_mesh() -> Optional[Mesh]:
+    """The ambient serving mesh (None outside use_serving_mesh)."""
+    return _SERVING_MESH
+
+
+def shard_heads(x: jax.Array, axis: int) -> jax.Array:
+    """Constrain activation dim ``axis`` (a heads dim) to the serving
+    mesh's 'model' axis. Identity without an ambient mesh or when the
+    dim does not divide — the same fallback rule as ``_fit``, so tiny
+    test configs pass through untouched."""
+    mesh = _SERVING_MESH
+    if mesh is None:
+        return x
+    if x.shape[axis] % _axis_size(mesh, "model") != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )
+
+
+def shard_cache(cache: Pytree, cfg: ModelConfig, batch: int) -> Pytree:
+    """Constrain a decode/prefill cache to its serving layout (kv heads
+    over 'model' per ``cache_specs``). Identity without an ambient mesh."""
+    mesh = _SERVING_MESH
+    if mesh is None:
+        return cache
+    ns = named(mesh, cache_specs(cache, cfg, mesh, batch))
+    return jax.tree.map(
+        lambda leaf, s: jax.lax.with_sharding_constraint(leaf, s), cache, ns
+    )
 
 
 def dp_axes(mesh: Mesh):

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.models import sharding as Sh
 from repro.models.config import LayerSpec, ModelConfig
 
 Params = Dict[str, Any]
@@ -389,6 +390,9 @@ def decode_step(
     of the same weights. Its K/V writes are provisional — the speculative
     engine's verify pass re-writes the same positions with full-model
     values before any of them can be committed."""
+    # tensor-parallel serving: pin the cache to its mesh layout before the
+    # gather/scatter ops below (no-op without an ambient serving mesh)
+    cache = Sh.shard_cache(cache, cfg, token_or_embed.shape[0])
     if cfg.input_mode == "embeddings":
         x = token_or_embed.astype(_dtype(cfg))
     else:
@@ -520,6 +524,10 @@ def prefill_slot(
     overwriting whole blocks, the slot's fresh (non-shared) blocks have
     their ``pos`` wiped to -1 first, so no stale positions from a prior
     owner leak into the attention mask."""
+    # tensor-parallel serving: pin the batched cache to its mesh layout
+    # (the serving mesh's data axis is size 1, so the batch argument only
+    # matters for training meshes — this path never sees one)
+    cache = Sh.shard_cache(cache, cfg, 1)
     if cached_len is not None:
         assert block_table is not None, "prefix-cached prefill is paged-only"
         assert supports_prefix_cache(cfg), (

@@ -1,11 +1,29 @@
-from repro.serving.engine import ServeEngine, GenerationResult
+"""Public serving surface.
+
+The supported API is the curated ``__all__`` below — build engines
+through ``EngineConfig`` (the one front door for engine shape/policy),
+scale them out with ``Router``, and observe them through
+``ServingMetrics`` / ``SpanTracer``. Everything else in the submodules
+(allocators, schedulers, samplers, fault plans) is importable for tests
+and experiments but is not a stability surface.
+"""
+
 from repro.serving.block_pool import (
     BlockAllocator,
     PrefixAdmit,
     blocks_needed,
     chain_hashes,
+    prefix_route_key,
+)
+from repro.serving.config import (
+    EngineConfig,
+    PagingConfig,
+    ParallelConfig,
+    PrefixCacheConfig,
+    SpecConfig,
 )
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
+from repro.serving.engine import GenerationResult, ServeEngine
 from repro.serving.faults import FAULT_SITES, FaultPlan, FaultSpec
 from repro.serving.guard import DegradationLadder, GuardConfig
 from repro.serving.metrics import (
@@ -15,13 +33,60 @@ from repro.serving.metrics import (
     MetricsRegistry,
     RequestTrace,
     ServingMetrics,
+    merge_replica_summaries,
 )
-from repro.serving.tracing import SpanTracer, validate_trace
-from repro.serving.speculative import SpeculativeEngine
 from repro.serving.request import (
     Request,
     RequestQueue,
     RequestState,
     synthetic_trace,
 )
+from repro.serving.router import Router, RouterResult
 from repro.serving.scheduler import NeverAdmittable, Scheduler
+from repro.serving.speculative import SpeculativeEngine
+from repro.serving.tracing import SpanTracer, merge_traces, validate_trace
+
+__all__ = [
+    # the one front door: typed config + engine + data-parallel router
+    "EngineConfig",
+    "PagingConfig",
+    "PrefixCacheConfig",
+    "SpecConfig",
+    "ParallelConfig",
+    "GuardConfig",
+    "ContinuousEngine",
+    "ContinuousResult",
+    "Router",
+    "RouterResult",
+    # requests and workloads
+    "Request",
+    "RequestState",
+    "synthetic_trace",
+    # observability
+    "ServingMetrics",
+    "SpanTracer",
+    "merge_replica_summaries",
+    "merge_traces",
+    "validate_trace",
+    # secondary (kept importable; not the recommended entry points)
+    "ServeEngine",
+    "GenerationResult",
+    "SpeculativeEngine",
+    "Scheduler",
+    "NeverAdmittable",
+    "BlockAllocator",
+    "PrefixAdmit",
+    "blocks_needed",
+    "chain_hashes",
+    "prefix_route_key",
+    "RequestQueue",
+    "RequestTrace",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "DegradationLadder",
+    "FaultPlan",
+    "FaultSpec",
+    "FAULT_SITES",
+]

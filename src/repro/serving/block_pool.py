@@ -86,6 +86,18 @@ def chain_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
     return hashes
 
 
+def prefix_route_key(tokens: Sequence[int], block_size: int) -> Optional[int]:
+    """The routing identity of a prompt's shared prefix: the chain hash
+    of its *first* full block (``None`` when the prompt has no full block
+    or paging is off). Two prompts share a key iff their first
+    ``block_size`` tokens are equal — exactly the granularity at which
+    the prefix cache can share their blocks — so the router's
+    prefix-affinity placement (serving/router.py) keys stickiness on it."""
+    if block_size <= 0 or len(tokens) < block_size:
+        return None
+    return chain_hashes(tokens[:block_size], block_size)[0]
+
+
 @dataclasses.dataclass
 class PrefixAdmit:
     """What the engine needs to prefill an admission with a cached prefix.

@@ -1,0 +1,294 @@
+"""Typed engine configuration: the single front door to ``ContinuousEngine``.
+
+PRs 1-8 grew ``ContinuousEngine.__init__`` to ~20 flat keyword arguments
+whose legality constraints (prefix cache needs paging, speculative decoding
+needs pure-attention periods, ...) were scattered between the constructor
+and the serve loop. ``EngineConfig`` collapses them into one dataclass of
+grouped sub-configs:
+
+* ``PagingConfig``      — paged KV pool: block size, pool size, preemption
+  policy (on-demand growth, eviction, victim selection).
+* ``PrefixCacheConfig`` — shared prompt-prefix blocks: on/off plus the
+  content-hash index bounds (entry cap, TTL).
+* ``SpecConfig``        — self-speculative decoding window K.
+* ``ParallelConfig``    — tensor-parallel degree: ``tp > 1`` shards the
+  weights, KV pool and attention heads over a ``(1, tp)`` device mesh's
+  ``model`` axis (models/sharding.py specs; block tables stay host-side
+  and replica-local).
+* ``GuardConfig``       — the existing robustness policy (serving/guard.py),
+  embedded unchanged.
+
+``validate()`` rejects every incoherent combination **at construction**
+(the checks that used to live in ``ContinuousEngine.__init__``), so a
+``Router`` building N replicas fails before the first replica exists, not
+deep inside replica 3's serve loop. Checks that need the model
+architecture (paged-cache support, pure-attention requirements) run when
+``model_cfg`` is passed — the engine passes it; config-only callers get
+the structural checks.
+
+``to_dict``/``from_dict`` (and the JSON string variants) round-trip the
+config losslessly — ``launch/serve.py --metrics-json`` embeds the config
+in the metrics dump so every recorded run carries its own provenance.
+
+The old flat kwargs stay accepted for one release through
+``EngineConfig.from_legacy_kwargs`` (the engine shim warns once per
+construction and maps them onto a config).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from repro.serving.guard import GuardConfig
+
+# old flat ContinuousEngine kwarg -> (sub-config, field) it maps onto;
+# None means the kwarg is a top-level EngineConfig field of the same name
+LEGACY_KWARGS: Dict[str, Optional[tuple]] = {
+    "n_slots": None,
+    "max_len": None,
+    "eos_id": None,
+    "prefill_bucket": None,
+    "seed": None,
+    "check_invariants": None,
+    "check_retrace": None,
+    "block_size": ("paging", "block_size"),
+    "n_blocks": ("paging", "n_blocks"),
+    "preemption": ("paging", "preemption"),
+    "decode_reserve": ("paging", "decode_reserve"),
+    "victim_policy": ("paging", "victim_policy"),
+    "prefix_cache": ("prefix_cache", "enabled"),
+    "prefix_cache_max_entries": ("prefix_cache", "max_entries"),
+    "prefix_cache_ttl": ("prefix_cache", "ttl"),
+    "speculative": ("speculative", "k"),
+    "guard": None,
+}
+
+
+@dataclasses.dataclass
+class PagingConfig:
+    """Paged KV cache pool (serving/block_pool.py)."""
+
+    block_size: int = 0  # positions per block; 0 = contiguous max_len lanes
+    n_blocks: Optional[int] = None  # pool size (None = equal memory to
+    # n_slots contiguous lanes, plus the reserved blocks)
+    preemption: bool = False  # on-demand growth + eviction under pressure
+    decode_reserve: int = 2  # watermark blocks held back at admission
+    victim_policy: str = "youngest"  # "youngest" | "cost"
+
+    @property
+    def paged(self) -> bool:
+        return self.block_size > 0
+
+
+@dataclasses.dataclass
+class PrefixCacheConfig:
+    """Shared prompt-prefix blocks over the paged pool."""
+
+    enabled: bool = False
+    max_entries: int = 0  # content-hash index cap; 0 = unbounded
+    ttl: float = 0.0  # seconds an index entry may outlive registration
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Self-speculative decoding (serving/speculative.py)."""
+
+    k: int = 0  # window length; K >= 2 drafts K-1 tokens per round, 0 = off
+
+
+@dataclasses.dataclass
+class ParallelConfig:
+    """Tensor parallelism inside one replica (models/sharding.py)."""
+
+    tp: int = 1  # model-axis mesh size; 1 = single device
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Everything that shapes one ``ContinuousEngine`` replica.
+
+    Runtime collaborators (clock/sleep, a live ``SpanTracer``, a chaos
+    ``FaultPlan``) are deliberately NOT here: they are process-local
+    objects, not serializable configuration — the engine takes them as
+    keyword arguments next to the config.
+    """
+
+    n_slots: int = 8
+    max_len: int = 512
+    eos_id: Optional[int] = None
+    prefill_bucket: int = 0
+    seed: int = 0
+    check_invariants: bool = False
+    check_retrace: bool = False
+    trace: bool = False  # True = the engine builds a default SpanTracer
+    paging: PagingConfig = dataclasses.field(default_factory=PagingConfig)
+    prefix_cache: PrefixCacheConfig = dataclasses.field(
+        default_factory=PrefixCacheConfig
+    )
+    speculative: SpecConfig = dataclasses.field(default_factory=SpecConfig)
+    parallel: ParallelConfig = dataclasses.field(default_factory=ParallelConfig)
+    guard: Optional[GuardConfig] = None
+
+    # -- validation --------------------------------------------------------
+
+    def validate(self, model_cfg: Any = None) -> "EngineConfig":
+        """Reject incoherent combinations with ``ValueError``.
+
+        Structural checks always run; architecture-dependent checks
+        (paged-cache exactness, pure-attention requirements for prefix
+        caching / speculative decoding / bucketed prefill, the MoE
+        exclusion) additionally run when ``model_cfg`` is given.
+        Returns ``self`` so construction sites can chain:
+        ``EngineConfig(...).validate(cfg)``.
+        """
+        # local import: transformer capability gates live model-side
+        from repro.models import transformer as T
+
+        pg, pc, sp = self.paging, self.prefix_cache, self.speculative
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if self.max_len < 1:
+            raise ValueError("max_len must be >= 1")
+        if self.prefill_bucket < 0:
+            raise ValueError("prefill_bucket must be >= 0")
+        if pc.enabled:
+            if pg.block_size <= 0:
+                raise ValueError(
+                    "prefix_cache shares pool blocks; it needs block_size > 0"
+                )
+            if model_cfg is not None and not T.supports_prefix_cache(model_cfg):
+                raise ValueError(
+                    f"{model_cfg.name}: prefix caching is exact only for pure-"
+                    "attention periods (shared blocks carry KV, not "
+                    "SSM/MoE state)"
+                )
+        if pg.preemption and pg.block_size <= 0:
+            raise ValueError(
+                "preemption evicts pool blocks; it needs block_size > 0"
+            )
+        if pg.decode_reserve < 0:
+            raise ValueError("decode_reserve must be >= 0")
+        if sp.k:
+            if sp.k < 2:
+                raise ValueError(
+                    "speculative=K drafts K-1 tokens per round; it needs "
+                    "K >= 2"
+                )
+            if pg.block_size <= 0:
+                raise ValueError(
+                    "speculative decoding verifies draft windows against "
+                    "the paged pool; it needs block_size > 0"
+                )
+            if model_cfg is not None and not T.supports_speculative(model_cfg):
+                raise ValueError(
+                    f"{model_cfg.name}: self-speculative decoding is exact only "
+                    "for pure-attention periods (an SSM recurrence cannot "
+                    "roll back a rejected draft, and MoE capacity couples "
+                    "draft rows across slots)"
+                )
+        if pc.max_entries < 0:
+            raise ValueError("prefix_cache_max_entries must be >= 0")
+        if pc.ttl < 0:
+            raise ValueError("prefix_cache_ttl must be >= 0")
+        if (pc.max_entries or pc.ttl) and not pc.enabled:
+            raise ValueError(
+                "prefix_cache_max_entries/prefix_cache_ttl bound the "
+                "prefix cache's hash index; they need prefix_cache=True"
+            )
+        if pg.victim_policy not in ("youngest", "cost"):
+            raise ValueError(
+                f"unknown victim_policy {pg.victim_policy!r} "
+                "(expected 'youngest' or 'cost')"
+            )
+        if pg.victim_policy != "youngest" and not pg.preemption:
+            raise ValueError(
+                "victim_policy selects the preemption victim; it needs "
+                "preemption=True"
+            )
+        if pg.block_size > 0:
+            if model_cfg is not None and not T.supports_paged_cache(model_cfg):
+                raise ValueError(
+                    f"{model_cfg.name}: paged KV cache is inexact for sliding-"
+                    "window ring caches; use block_size=0"
+                )
+            if self.max_len % pg.block_size != 0:
+                raise ValueError(
+                    f"max_len {self.max_len} must be a multiple of block_size "
+                    f"{pg.block_size} (prefill splices whole blocks)"
+                )
+        if model_cfg is not None and any(s.moe for s in model_cfg.period):
+            # MoE expert capacity couples batch rows at decode — see the
+            # exactness discussion in serving/continuous.py; ROADMAP item
+            raise ValueError(
+                f"{model_cfg.name}: continuous batching over MoE periods is "
+                "not exact (expert capacity couples slots); use ServeEngine"
+            )
+        if (
+            self.prefill_bucket > 0
+            and model_cfg is not None
+            and not T.supports_ragged_prefill(model_cfg)
+        ):
+            raise ValueError(
+                f"{model_cfg.name}: prefill bucketing needs ragged prefill "
+                "(pure-attention periods); use prefill_bucket=0"
+            )
+        if self.parallel.tp < 1:
+            raise ValueError("parallel.tp must be >= 1")
+        return self
+
+    # -- legacy kwarg shim -------------------------------------------------
+
+    @classmethod
+    def from_legacy_kwargs(cls, kwargs: Dict[str, Any]) -> "EngineConfig":
+        """Map the pre-config flat ``ContinuousEngine`` kwargs onto a
+        config. Unknown names raise ``TypeError`` (same contract as the
+        old constructor signature)."""
+        unknown = sorted(set(kwargs) - set(LEGACY_KWARGS))
+        if unknown:
+            raise TypeError(
+                f"unknown ContinuousEngine argument(s): {', '.join(unknown)}"
+            )
+        cfg = cls()
+        for name, value in kwargs.items():
+            dest = LEGACY_KWARGS[name]
+            if dest is None:
+                setattr(cfg, name, value)
+            else:
+                sub, field = dest
+                setattr(getattr(cfg, sub), field, value)
+        return cfg
+
+    # -- (de)serialization -------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        """A plain-JSON-types dict (tuples become lists)."""
+        return json.loads(self.to_json())
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EngineConfig":
+        d = dict(d)
+        guard = d.pop("guard", None)
+        if guard is not None:
+            # JSON turned the ladder tuples into lists; restore them so the
+            # round-tripped config compares equal to the original
+            for key in ("ladder_enter", "ladder_exit"):
+                if key in guard:
+                    guard[key] = tuple(guard[key])
+            guard = GuardConfig(**guard)
+        return cls(
+            paging=PagingConfig(**d.pop("paging", {})),
+            prefix_cache=PrefixCacheConfig(**d.pop("prefix_cache", {})),
+            speculative=SpecConfig(**d.pop("speculative", {})),
+            parallel=ParallelConfig(**d.pop("parallel", {})),
+            guard=guard,
+            **d,
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "EngineConfig":
+        return cls.from_dict(json.loads(s))

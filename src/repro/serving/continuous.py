@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -83,8 +84,9 @@ from repro.serving.block_pool import (
     BlockAllocator,
     blocks_needed,
 )
+from repro.serving.config import EngineConfig
 from repro.serving.faults import FaultPlan
-from repro.serving.guard import DegradationLadder, GuardConfig
+from repro.serving.guard import DegradationLadder
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import degenerate_rows, sample_and_emit
@@ -110,156 +112,101 @@ class ContinuousEngine:
         self,
         params: Params,
         cfg: ModelConfig,
-        n_slots: int = 8,
-        max_len: int = 512,
-        eos_id: Optional[int] = None,
-        prefill_bucket: int = 0,
-        seed: int = 0,
+        config: Optional[EngineConfig] = None,  # the one front door for
+        # engine shape and policy — see serving/config.py. None + flat
+        # legacy kwargs builds one through the deprecation shim below.
+        *,
         clock: Optional[Callable[[], float]] = None,
         sleep: Optional[Callable[[float], None]] = None,
-        block_size: int = 0,  # 0 = contiguous max_len lane per slot
-        n_blocks: Optional[int] = None,  # paged pool size (default: equal
-        # memory to n_slots contiguous lanes, plus the 2 reserved blocks)
-        prefix_cache: bool = False,  # share identical prompt-prefix blocks
-        preemption: bool = False,  # on-demand blocks + eviction under
-        # pressure (paged only); off = worst-case charging at admission
-        decode_reserve: int = 2,  # watermark blocks held unallocated at
-        # admission for running slots to grow into (preemption mode only)
-        check_invariants: bool = False,  # assert allocator invariants
-        # every scheduling round (test hook; O(pool) host work per round)
-        speculative: int = 0,  # K >= 2: self-speculative decoding — each
-        # round drafts K-1 tokens with the adapter path disabled, verifies
-        # the whole window in one full-model pass, and bulk-commits the
-        # accepted prefix (paged, pure-attention archs; 0 = off)
-        victim_policy: str = "youngest",  # preemption victim selection:
-        # "youngest" admission, or "cost" (blocks freed per generated
-        # token discarded, oldest slot exempt)
-        prefix_cache_max_entries: int = 0,  # cap on the allocator's
-        # content-hash index (0 = unbounded; evict-oldest on overflow)
-        prefix_cache_ttl: float = 0.0,  # seconds an index entry may
-        # outlive its registration (0 = no TTL; swept each round)
         trace: Any = None,  # SpanTracer (or True for a default one):
         # record the request lifecycle as Chrome trace events — see
-        # serving/tracing.py and docs/observability.md. None = off, and
-        # every trace site reduces to one `is not None` check.
-        check_retrace: bool = False,  # wrap every jitted hot path in a
-        # RetraceGuard: a recompile on an already-traced signature, a
-        # shape-keyed retrace of the decode/speculative step, or any
-        # compile after retrace_guard.freeze() raises RetraceError naming
-        # the function and the argument-shape delta. Per-run compile
-        # counts surface as jit_compiles_* / jit_retraces metrics keys.
-        guard: Optional[GuardConfig] = None,  # robustness policy: request
-        # deadlines/TTLs, bounded-queue load shedding, burst watchdog,
-        # and the degradation ladder — see serving/guard.py and
-        # docs/robustness.md. None = all guards off.
+        # serving/tracing.py and docs/observability.md. None = off
+        # (unless config.trace asks for a default tracer), and every
+        # trace site reduces to one `is not None` check.
         faults: Optional[FaultPlan] = None,  # chaos fail-point plan: the
         # engine consults it at each fault site (serving/faults.py) and
         # folds fired counts into the metrics summary as fault_* keys.
         # None = no injection, one `is not None` check per site.
+        **legacy: Any,  # the pre-config flat kwargs (n_slots=, block_size=,
+        # speculative=, guard=, ...) — deprecated for one release: warns
+        # once per construction and maps onto an EngineConfig.
     ):
         assert cfg.input_mode == "tokens", "continuous engine serves token prompts"
-        if prefix_cache:
-            if block_size <= 0:
-                raise ValueError(
-                    "prefix_cache shares pool blocks; it needs block_size > 0"
+        if config is None:
+            config = EngineConfig.from_legacy_kwargs(legacy)
+            if legacy:
+                warnings.warn(
+                    "flat ContinuousEngine kwargs are deprecated; build an "
+                    "EngineConfig (repro.serving.config) instead — got: "
+                    + ", ".join(sorted(legacy)),
+                    DeprecationWarning,
+                    stacklevel=2,
                 )
-            if not T.supports_prefix_cache(cfg):
-                raise ValueError(
-                    f"{cfg.name}: prefix caching is exact only for pure-"
-                    "attention periods (shared blocks carry KV, not "
-                    "SSM/MoE state)"
-                )
-        if preemption and block_size <= 0:
-            raise ValueError(
-                "preemption evicts pool blocks; it needs block_size > 0"
+        elif legacy:
+            raise TypeError(
+                "pass an EngineConfig or flat legacy kwargs, not both "
+                "(got config= plus: " + ", ".join(sorted(legacy)) + ")"
             )
-        if decode_reserve < 0:
-            raise ValueError("decode_reserve must be >= 0")
-        if speculative:
-            if speculative < 2:
-                raise ValueError(
-                    "speculative=K drafts K-1 tokens per round; it needs "
-                    "K >= 2"
-                )
-            if block_size <= 0:
-                raise ValueError(
-                    "speculative decoding verifies draft windows against "
-                    "the paged pool; it needs block_size > 0"
-                )
-            if not T.supports_speculative(cfg):
-                raise ValueError(
-                    f"{cfg.name}: self-speculative decoding is exact only "
-                    "for pure-attention periods (an SSM recurrence cannot "
-                    "roll back a rejected draft, and MoE capacity couples "
-                    "draft rows across slots)"
-                )
-        if prefix_cache_max_entries < 0:
-            raise ValueError("prefix_cache_max_entries must be >= 0")
-        if prefix_cache_ttl < 0:
-            raise ValueError("prefix_cache_ttl must be >= 0")
-        if (prefix_cache_max_entries or prefix_cache_ttl) and not prefix_cache:
-            raise ValueError(
-                "prefix_cache_max_entries/prefix_cache_ttl bound the "
-                "prefix cache's hash index; they need prefix_cache=True"
-            )
-        if victim_policy != "youngest" and not preemption:
-            raise ValueError(
-                "victim_policy selects the preemption victim; it needs "
-                "preemption=True"
-            )
-        if block_size > 0:
-            if not T.supports_paged_cache(cfg):
-                raise ValueError(
-                    f"{cfg.name}: paged KV cache is inexact for sliding-"
-                    "window ring caches; use block_size=0"
-                )
-            if max_len % block_size != 0:
-                raise ValueError(
-                    f"max_len {max_len} must be a multiple of block_size "
-                    f"{block_size} (prefill splices whole blocks)"
-                )
-        if any(sp.moe for sp in cfg.period):
-            # MoE expert capacity couples batch rows at decode: garbage
-            # tokens in freed/never-filled slots compete for expert queue
-            # positions and can displace live requests' tokens, breaking the
-            # exactness contract. Capacity-masked dispatch is a follow-up
-            # (ROADMAP); until then MoE archs serve via the static engine.
-            raise ValueError(
-                f"{cfg.name}: continuous batching over MoE periods is not "
-                "exact (expert capacity couples slots); use ServeEngine"
-            )
-        if prefill_bucket > 0 and not T.supports_ragged_prefill(cfg):
-            raise ValueError(
-                f"{cfg.name}: prefill bucketing needs ragged prefill "
-                "(pure-attention periods); use prefill_bucket=0"
-            )
+        # every incoherent combination dies here, before any replica state
+        # exists — not deep inside the serve loop
+        config.validate(cfg)
+        self.config = config
         self.params = params
         self.cfg = cfg
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.eos_id = eos_id
-        self.prefill_bucket = prefill_bucket
-        self.seed = seed
-        self.block_size = block_size
-        self.prefix_cache = prefix_cache
-        self.preemption = preemption
-        self.decode_reserve = decode_reserve
-        self.check_invariants = check_invariants
-        self.speculative = speculative
-        self.victim_policy = victim_policy
-        self.prefix_cache_max_entries = prefix_cache_max_entries
-        self.prefix_cache_ttl = prefix_cache_ttl
-        self.guard = guard
+        self.n_slots = config.n_slots
+        self.max_len = config.max_len
+        self.eos_id = config.eos_id
+        self.prefill_bucket = config.prefill_bucket
+        self.seed = config.seed
+        self.block_size = config.paging.block_size
+        self.prefix_cache = config.prefix_cache.enabled
+        self.preemption = config.paging.preemption
+        self.decode_reserve = config.paging.decode_reserve
+        self.check_invariants = config.check_invariants
+        self.speculative = config.speculative.k
+        self.victim_policy = config.paging.victim_policy
+        self.prefix_cache_max_entries = config.prefix_cache.max_entries
+        self.prefix_cache_ttl = config.prefix_cache.ttl
+        self.guard = config.guard
         self.faults = faults
+        n_slots, max_len = config.n_slots, config.max_len
+        eos_id, block_size = config.eos_id, config.paging.block_size
+        speculative = config.speculative.k
         # True -> a fresh default tracer; a SpanTracer -> used as-is
         # (an *empty* tracer is falsy via __len__, so no truthiness
         # shortcuts here); anything else (None, False) -> disabled
+        if trace is None and config.trace:
+            trace = True
         if trace is True:
             self.tracer: Optional[SpanTracer] = SpanTracer()
         elif isinstance(trace, SpanTracer):
             self.tracer = trace
         else:
             self.tracer = None
+        # -- tensor parallelism (config.parallel.tp > 1) ----------------
+        # the SLiM weight tensors (int4 packed + 2:4 sparse + LoRA
+        # adapters) shard over the serving mesh's "model" axis once, at
+        # construction; the KV pool and decode carries follow in run().
+        # Block tables and the allocator stay host-side and replica-local,
+        # so the scheduler never sees the mesh.
+        self.tp = config.parallel.tp
+        self.mesh = None
+        self._repl_ns = None  # fully-replicated NamedSharding for carries
+        self._cache_ns = None  # KV pool leaf shardings, set per run()
+        if self.tp > 1:
+            from jax.sharding import PartitionSpec
+
+            from repro.launch.mesh import make_serving_mesh
+            from repro.models import sharding as shardlib
+
+            self.mesh = make_serving_mesh(self.tp)
+            self._repl_ns = jax.sharding.NamedSharding(
+                self.mesh, PartitionSpec()
+            )
+            specs = shardlib.param_specs(params, cfg, self.mesh, serving=True)
+            self.params = jax.device_put(
+                params, shardlib.named(self.mesh, specs)
+            )
         self.max_blocks = max_len // block_size if block_size > 0 else 0
         # speculative drafting writes up to K positions past a slot's
         # committed budget (the last round's verify window); block tables
@@ -274,8 +221,8 @@ class ContinuousEngine:
         if block_size > 0:
             self.n_blocks = (
                 n_slots * self.table_blocks + RESERVED_BLOCKS
-                if n_blocks is None
-                else n_blocks
+                if config.paging.n_blocks is None
+                else config.paging.n_blocks
             )
         else:
             self.n_blocks = 0
@@ -303,6 +250,7 @@ class ContinuousEngine:
             """Prefill one request into ``slot`` and splice its carry state
             (logits row, position, budget, sampling) in the same jit call —
             one dispatch per admission instead of one per state vector."""
+            cache = self._pin_cache(cache)
             row, cache = T.prefill_slot(
                 params, cfg, cache, {"tokens": toks}, slot, max_len,
                 true_len if ragged else None, block_table=table,
@@ -313,10 +261,11 @@ class ContinuousEngine:
             emitted = emitted.at[slot].set(0)
             maxnew = maxnew.at[slot].set(budget)
             temps = temps.at[slot].set(temp)
-            return cache, logits, pos, active, emitted, maxnew, temps
+            return self._pin_carry(
+                cache, logits, pos, active, emitted, maxnew, temps
+            )
 
-        # one compile per prefill shape (bounded by bucketing); carry donated
-        self._admit = jax.jit(_admit, donate_argnums=(1, 2, 3, 4, 5, 6, 7))
+        self._admit_fn = _admit
 
         def _admit_prefix(
             params, cache, logits, pos, active, emitted, maxnew, temps,
@@ -328,6 +277,7 @@ class ContinuousEngine:
             fully-cached last block if needed (``cow_src == cow_dst ==
             null`` makes it a no-op self-copy), then prefill only the
             uncached suffix at an offset. One dispatch per admission."""
+            cache = self._pin_cache(cache)
             cache = jax.tree.map(
                 lambda a: a.at[:, cow_dst].set(a[:, cow_src]), cache
             )
@@ -341,12 +291,11 @@ class ContinuousEngine:
             emitted = emitted.at[slot].set(0)
             maxnew = maxnew.at[slot].set(budget)
             temps = temps.at[slot].set(temp)
-            return cache, logits, pos, active, emitted, maxnew, temps
+            return self._pin_carry(
+                cache, logits, pos, active, emitted, maxnew, temps
+            )
 
-        # compiles per suffix shape (bounded by bucketing, like _admit)
-        self._admit_prefix = jax.jit(
-            _admit_prefix, donate_argnums=(1, 2, 3, 4, 5, 6, 7)
-        )
+        self._admit_prefix_fn = _admit_prefix
 
         eos = -1 if eos_id is None else int(eos_id)  # -1 never matches a token
 
@@ -360,6 +309,7 @@ class ContinuousEngine:
             # active set, and is latched into `poisoned` for the per-
             # burst host sync. Only the offending row: rows never mix in
             # sampling or attention, so co-batched requests are untouched.
+            cache = self._pin_cache(cache)
             bad = degenerate_rows(logits) & active
             poisoned = poisoned | bad
             live = active & ~bad
@@ -375,29 +325,27 @@ class ContinuousEngine:
             # next prefill_slot replaces it wholesale (paged: their writes
             # land in the trash block once the host retires the table row)
             pos = pos + still.astype(jnp.int32)
-            return cache, logits, pos, still, emitted, buf, key, poisoned
+            return self._pin_carry(
+                cache, logits, pos, still, emitted, buf, key, poisoned
+            )
 
-        self._step = jax.jit(_step, donate_argnums=(1,))
+        self._step_fn = _step
 
         # the retrace guard persists across run() calls: a second serve on
         # the same engine must perform ZERO compiles (the post-warmup
         # invariant tests pin down via guard.freeze())
-        self.check_retrace = check_retrace
+        self.check_retrace = config.check_retrace
         self.retrace_guard = None
-        if check_retrace:
+        if config.check_retrace:
             from repro.analysis.retrace import RetraceGuard
 
             self.retrace_guard = RetraceGuard()
-            # prefill compiles once per bucket shape — bounded but not
-            # statically known here, so no max_sigs; the decode step is
-            # fixed-shape: a second signature IS the bug
-            self._admit = self.retrace_guard.wrap("prefill", self._admit)
-            self._admit_prefix = self.retrace_guard.wrap(
-                "prefill_prefix", self._admit_prefix
-            )
-            self._step = self.retrace_guard.wrap(
-                "decode", self._step, max_sigs=1
-            )
+        self._admit = self._admit_prefix = self._step = None
+        if self.mesh is None:
+            # single-device: jit the hot paths now. Under TP they wait
+            # for the first run(), which knows the KV pool layout and
+            # pins each jit's out_shardings with it (_build_jits).
+            self._build_jits()
 
         self._eos = eos
         # speculative rounds are built lazily per sampling mode: an
@@ -406,14 +354,61 @@ class ContinuousEngine:
         # rejection-sampling one
         self._spec_rounds: Dict[bool, Any] = {}
 
+    def _build_jits(self) -> None:
+        """Jit + (optionally) guard-wrap the hot paths.
+
+        Under tensor parallelism every output sharding is pinned
+        explicitly: the KV pool to its cache specs, carries fully
+        replicated. GSPMD would otherwise hand back *canonicalized*
+        sharding objects that compare unequal to the run() loop's
+        device_put specs, and the second call — same shapes,
+        "different" shardings — would recompile, tripping the retrace
+        guard. With out_shardings the steady-state decode signature is
+        unique from the first call (max_sigs=1 holds under TP)."""
+        kw: Dict[str, Any] = {}
+        if self.mesh is not None:
+            kw = {
+                "out_shardings": (self._cache_ns,) + (self._repl_ns,) * 6
+            }
+        # one compile per prefill shape (bounded by bucketing); carry
+        # donated — and per suffix shape for the prefix variant
+        admit = jax.jit(
+            self._admit_fn, donate_argnums=(1, 2, 3, 4, 5, 6, 7), **kw
+        )
+        admit_prefix = jax.jit(
+            self._admit_prefix_fn, donate_argnums=(1, 2, 3, 4, 5, 6, 7), **kw
+        )
+        if self.mesh is not None:
+            kw = {
+                "out_shardings": (self._cache_ns,) + (self._repl_ns,) * 7
+            }
+        step = jax.jit(self._step_fn, donate_argnums=(1,), **kw)
+        if self.retrace_guard is not None:
+            # prefill compiles once per bucket shape — bounded but not
+            # statically known here, so no max_sigs; the decode step is
+            # fixed-shape: a second signature IS the bug
+            admit = self.retrace_guard.wrap("prefill", admit)
+            admit_prefix = self.retrace_guard.wrap(
+                "prefill_prefix", admit_prefix
+            )
+            step = self.retrace_guard.wrap("decode", step, max_sigs=1)
+        self._admit, self._admit_prefix, self._step = (
+            admit, admit_prefix, step,
+        )
+
     def _spec_round_for(self, greedy: bool):
         fn = self._spec_rounds.get(greedy)
         if fn is None:
             # lazy import: speculative.py imports ContinuousEngine
             from repro.serving.speculative import build_spec_round
 
+            out = None
+            if self.mesh is not None:
+                # pinned like _build_jits: pool + 8 replicated carries
+                out = (self._cache_ns,) + (self._repl_ns,) * 8
             fn = build_spec_round(
-                self.cfg, self.speculative, self._eos, greedy=greedy
+                self.cfg, self.speculative, self._eos, greedy=greedy,
+                out_shardings=out,
             )
             if self.retrace_guard is not None:
                 # fixed-shape like the decode step: one signature, ever
@@ -424,6 +419,37 @@ class ContinuousEngine:
             self._spec_rounds[greedy] = fn
         return fn
 
+    # -- tensor-parallel sharding constraints (trace-time no-ops when ----
+    # -- the engine runs without a mesh) ---------------------------------
+
+    def _pin_cache(self, cache):
+        """Constrain the KV pool to its run()-time layout (kv heads over
+        the mesh's "model" axis, per models/sharding.py cache specs).
+        Identity without a mesh."""
+        if self._cache_ns is None:
+            return cache
+        return jax.tree.map(
+            lambda leaf, ns: jax.lax.with_sharding_constraint(leaf, ns),
+            cache, self._cache_ns,
+        )
+
+    def _pin_carry(self, cache, *carries):
+        """Constrain a hot-path return value: pool to its cache specs,
+        every small carry (logits, positions, masks, token buffer, RNG
+        key) fully replicated. Pinning *outputs* to the same layout the
+        run() loop commits *inputs* with keeps the jit signature of the
+        decode step unique — the retrace guard's max_sigs=1 contract
+        holds under tensor parallelism with zero steady-state compiles
+        and no new sync points."""
+        if self._repl_ns is None:
+            return (cache, *carries)
+        cache = self._pin_cache(cache)
+        carries = tuple(
+            jax.lax.with_sharding_constraint(x, self._repl_ns)
+            for x in carries
+        )
+        return (cache, *carries)
+
     # ------------------------------------------------------------------
 
     def run(
@@ -431,6 +457,22 @@ class ContinuousEngine:
         requests: Sequence[Request],
         sync_every: int = 8,
         max_new_cap: Optional[int] = None,  # pin the buffer width (jit shape)
+    ) -> ContinuousResult:
+        if self.mesh is None:
+            return self._run(requests, sync_every, max_new_cap)
+        # activation constraints inside attention (models/layers.py
+        # shard_heads) and the cache specs inside decode/prefill consult
+        # the ambient serving mesh at trace time
+        from repro.models import sharding as shardlib
+
+        with shardlib.use_serving_mesh(self.mesh):
+            return self._run(requests, sync_every, max_new_cap)
+
+    def _run(
+        self,
+        requests: Sequence[Request],
+        sync_every: int,
+        max_new_cap: Optional[int],
     ) -> ContinuousResult:
         cfg, b = self.cfg, self.n_slots
         paged = self.block_size > 0
@@ -443,13 +485,7 @@ class ContinuousEngine:
             if paged
             else None
         )
-        sched = Scheduler(
-            b, self.max_len, self.prefill_bucket, allocator,
-            on_demand=self.preemption,
-            decode_reserve=self.decode_reserve if self.preemption else 0,
-            spec_pad=self.speculative,
-            victim_policy=self.victim_policy,
-        )
+        sched = Scheduler.from_config(self.config, allocator)
         metrics = ServingMetrics(b)
         compiles0 = (
             self.retrace_guard.compiles()
@@ -488,11 +524,6 @@ class ContinuousEngine:
         for r in requests:
             submit(r)
         flood_extra: List[Request] = []  # queue_flood synthetic arrivals
-        spec_fn = (
-            self._spec_round_for(all(r.temperature == 0 for r in requests))
-            if self.speculative
-            else None
-        )
         cap = max_new_cap or max((r.max_new_tokens for r in requests), default=1)
         over = [r.rid for r in requests if r.max_new_tokens > cap]
         if over:
@@ -538,6 +569,41 @@ class ContinuousEngine:
         # logits go degenerate, fetched with the regular burst sync, and
         # cleared host-side when the slot is quarantined or recycled
         poisoned = jnp.zeros((b,), bool)
+
+        if self.mesh is not None:
+            # commit the device state once, before the first trace: the
+            # pool sharded per models/sharding.py cache specs, everything
+            # else replicated. Committed shardings key the jit cache, and
+            # every hot-path jit pins its out_shardings to the same
+            # layout (_build_jits), so warm runs never see a second
+            # decode signature.
+            from repro.models import sharding as shardlib
+
+            self._cache_ns = shardlib.named(
+                self.mesh, shardlib.cache_specs(cache, cfg, self.mesh, b)
+            )
+            if self._admit is None:
+                self._build_jits()  # first run: layout is now known
+            cache = jax.device_put(cache, self._cache_ns)
+            (
+                logits, pos, active, emitted, maxnew, buf, temps, key,
+                spec_counters, poisoned,
+            ) = (
+                jax.device_put(x, self._repl_ns)
+                for x in (
+                    logits, pos, active, emitted, maxnew, buf, temps, key,
+                    spec_counters, poisoned,
+                )
+            )
+            if table_dev is not None:
+                table_dev = jax.device_put(table_dev, self._repl_ns)
+        # built after the mesh block: under TP the speculative round's
+        # out_shardings need the cache layout committed above
+        spec_fn = (
+            self._spec_round_for(all(r.temperature == 0 for r in requests))
+            if self.speculative
+            else None
+        )
 
         running: Dict[int, Request] = {}  # slot -> request
         emitted_host: Dict[int, int] = {}  # slot -> emitted as of last sync

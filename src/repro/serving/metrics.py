@@ -561,6 +561,7 @@ class ServingMetrics:
                 else 0.0
             ),
             "cached_prompt_tokens": self._cached_prompt_tokens.value,
+            "total_prompt_tokens": self._total_prompt_tokens.value,
             "prefix_hits": self._prefix_hits.value,
             "peak_blocks_in_use": self._blocks_in_use.peak,
             "mean_blocks_in_use": self._blocks_in_use.mean(),
@@ -593,3 +594,88 @@ class ServingMetrics:
         for p in PHASES:
             out[f"phase_{p}_s"] = self._phase[p].value
         return out
+
+
+# ---------------------------------------------------------------------------
+# Fleet aggregation (serving/router.py)
+# ---------------------------------------------------------------------------
+
+# summary keys that take the max across replicas: wall-clock span, peaks,
+# and quantiles (the fleet's p95 is conservatively bounded by the worst
+# replica's — exact fleet quantiles would need the raw samples)
+_MERGE_MAX = {
+    "duration_s",
+    "p50_ttft_s",
+    "p95_ttft_s",
+    "p99_ttft_s",
+    "p50_latency_s",
+    "p95_latency_s",
+    "p99_latency_s",
+    "tpot_p50_s",
+    "tpot_p95_s",
+    "tpot_p99_s",
+}
+
+# weighted means: key -> the summary key whose value weights it
+_MERGE_WEIGHTED = {
+    "mean_ttft_s": "completed",
+    "mean_latency_s": "completed",
+    "mean_tpot_s": "completed",
+    "mean_occupancy": "total_tokens",
+    "mean_blocks_in_use": "duration_s",
+    "mean_queue_depth": "duration_s",
+}
+
+
+def merge_replica_summaries(
+    summaries: Sequence[Dict[str, float]],
+) -> Dict[str, float]:
+    """Fold per-replica ``ServingMetrics.summary()`` dicts into one
+    fleet-level summary (the aggregate half of ``RouterResult.metrics``).
+
+    Each replica runs on its own clock, so ``tokens_per_s`` *sums* — the
+    fleet's aggregate throughput is what N side-by-side replicas deliver
+    — while ``duration_s`` and the peaks/quantiles take the max. Count
+    keys (requests, tokens, preemptions, phase seconds, fault counters,
+    anything not otherwise classified) sum; per-replica means recombine
+    weighted by their natural denominator (completed requests for
+    latency-family means, tokens for occupancy, duration for the backlog
+    gauges). The two hit-rate keys are recomputed from the summed
+    numerators/denominators so the fleet rate is token-weighted, not an
+    average of averages."""
+    keys: List[str] = []
+    for s in summaries:
+        for k in s:
+            if k not in keys:
+                keys.append(k)
+    out: Dict[str, float] = {}
+    for k in keys:
+        vals = [(s[k], s) for s in summaries if k in s]
+        if k in _MERGE_MAX or k.startswith("peak_"):
+            out[k] = max(v for v, _ in vals)
+        elif k in _MERGE_WEIGHTED:
+            wkey = _MERGE_WEIGHTED[k]
+            pairs = [(v, s.get(wkey, 0.0)) for v, s in vals if not math.isnan(v)]
+            wsum = sum(w for _, w in pairs)
+            if not pairs:
+                out[k] = float("nan")
+            elif wsum <= 0:
+                out[k] = sum(v for v, _ in pairs) / len(pairs)
+            else:
+                out[k] = sum(v * w for v, w in pairs) / wsum
+        else:
+            out[k] = sum(v for v, _ in vals)
+    # rates: recompute from the summed counters (token-weighted)
+    if "total_prompt_tokens" in out:
+        out["prefix_cache_hit_rate"] = (
+            out.get("cached_prompt_tokens", 0.0) / out["total_prompt_tokens"]
+            if out["total_prompt_tokens"]
+            else 0.0
+        )
+    if "draft_proposed" in out:
+        out["draft_acceptance_rate"] = (
+            out.get("draft_accepted", 0.0) / out["draft_proposed"]
+            if out["draft_proposed"]
+            else 0.0
+        )
+    return out

@@ -202,6 +202,7 @@ def synthetic_trace(
     temperature: float = 0.0,
     seed: int = 0,
     shared_prefix_len: int = 0,
+    shared_prefix_groups: int = 1,
 ) -> List[Request]:
     """Deterministic Poisson-arrival trace. The first request arrives at
     t=0 so runs start immediately; subsequent gaps are exponential.
@@ -209,14 +210,27 @@ def synthetic_trace(
     ``shared_prefix_len > 0`` models system-prompt / few-shot traffic:
     every request's prompt starts with the same ``shared_prefix_len``
     tokens (truncated for prompts shorter than the prefix), followed by a
-    per-request random tail — the workload the prefix cache serves."""
+    per-request random tail — the workload the prefix cache serves.
+
+    ``shared_prefix_groups > 1`` splits that traffic into several tenant
+    populations, each with its own shared prefix; request ``i`` belongs to
+    group ``i % groups`` (round-robin, so groups interleave in arrival
+    order — the workload where the router's prefix-affinity placement
+    beats least-loaded by keeping each tenant's prefix hot on one
+    replica). ``groups=1`` reproduces the pre-group trace bit-exactly:
+    the extra prefix draws only happen for ``groups > 1``."""
+    if shared_prefix_groups < 1:
+        raise ValueError("shared_prefix_groups must be >= 1")
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / max(rate, 1e-9), n_requests)
     gaps[0] = 0.0
     arrivals = np.cumsum(gaps)
-    shared = rng.integers(0, vocab_size, shared_prefix_len).tolist()
+    prefixes = [rng.integers(0, vocab_size, shared_prefix_len).tolist()]
+    for _ in range(shared_prefix_groups - 1):
+        prefixes.append(rng.integers(0, vocab_size, shared_prefix_len).tolist())
     reqs = []
     for i in range(n_requests):
+        shared = prefixes[i % shared_prefix_groups]
         plen = int(rng.integers(prompt_len[0], prompt_len[1] + 1))
         mnew = int(rng.integers(max_new_tokens[0], max_new_tokens[1] + 1))
         head = shared[: min(plen, shared_prefix_len)]

@@ -1,0 +1,322 @@
+"""Data-parallel router: spread requests over N engine replicas.
+
+The serving topology after the engine-as-replica refactor is two layers:
+
+* **inside** a replica, ``EngineConfig.parallel.tp`` shards the weights,
+  KV pool and attention heads over a ``(1, tp)`` device mesh's ``model``
+  axis (tensor parallelism — models/sharding.py);
+* **above** the replicas, this ``Router`` is the data-parallel layer: it
+  owns N independent ``ContinuousEngine`` replicas built from the *same*
+  ``EngineConfig`` and places each incoming request on exactly one of
+  them. Replicas share nothing at runtime — no KV, no block tables, no
+  prefix-cache index — so the router's only coupling is the placement
+  decision itself.
+
+Placement is **deterministic and upfront**: requests are planned in
+arrival order (ties broken by rid) before any replica runs, so the same
+trace always produces the same per-replica assignment — the property the
+router determinism tests pin. Two policies ship, and ``placement`` also
+accepts any callable with the same signature for experiments:
+
+* ``"least_loaded"`` (default): each request lands on the replica with
+  the smallest cumulative planned cost, where a request's cost is its
+  worst-case token work ``prompt_len + max_new_tokens``; ties go to the
+  lowest replica index.
+* ``"prefix_affinity"``: requests are routed by their prompt's
+  block-aligned prefix identity (``block_pool.prefix_route_key`` — the
+  chain hash of the first full ``block_size`` tokens), sticky to the
+  replica that saw the prefix first. Requests sharing a system prompt or
+  few-shot header therefore land on the same replica and hit its prefix
+  cache, instead of spraying cold prefills across the fleet; prompts with
+  no full block (or with paging off) fall back to least-loaded.
+
+**Bounded queues.** Each replica has an admission queue of capacity
+``queue_capacity`` (0 = unbounded). The router models a replica's
+backlog at planning time: a placed request is estimated to occupy its
+replica until ``arrival + est_tpot * cost`` (``est_tpot`` seconds per
+token; the default 0 makes occupancy instantaneous, i.e. the bound only
+fires under a positive service-time estimate). A request whose preferred
+replica is full spills to the next candidate; when *every* replica is
+full it is shed — terminal state ``ABORTED``, never submitted, counted
+in ``router_shed`` — the same contract as the engine's own bounded-queue
+load shedding (docs/robustness.md), one layer up.
+
+**Observability.** Each replica gets its own metrics and — when
+``trace=True`` — its own ``SpanTracer`` lane (``pid=i``, process name
+``replica{i}``), so a fleet's traces merge into one Perfetto timeline
+(``tracing.merge_traces``). ``RouterResult.metrics`` carries the
+aggregate summary (``metrics.merge_replica_summaries`` — throughput is
+the *sum* of per-replica tokens/s) plus every per-replica summary under
+a ``replica{i}_`` key prefix (docs/observability.md).
+
+Replicas run **sequentially** on the host: the container is
+single-process and the engines' serve loops are host-driven, so true
+concurrency would interleave nothing but Python. Each ``engine.run``
+starts its own clock, which keeps per-replica tokens/s a per-engine
+rate; the aggregate models the fleet where replicas genuinely run side
+by side. Token-exactness across placements holds for greedy requests
+(temperature 0): a greedy request's output depends only on its own
+prompt, never on co-batched neighbours — the engine's exactness
+invariant — so routing cannot change what any request generates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.models.config import ModelConfig
+from repro.serving.block_pool import prefix_route_key
+from repro.serving.config import EngineConfig
+from repro.serving.continuous import ContinuousEngine, ContinuousResult
+from repro.serving.metrics import merge_replica_summaries
+from repro.serving.request import Request, RequestState
+from repro.serving.tracing import SpanTracer, merge_traces
+
+# placement plan: request index -> replica, plus the shed list
+Plan = Tuple[Dict[int, int], List[Request]]
+PlacementFn = Callable[..., Plan]
+
+
+def _depth(done_at: List[float], t: float) -> int:
+    """Requests estimated still in flight on a replica at time ``t``."""
+    return sum(d > t for d in done_at)
+
+
+def plan_least_loaded(
+    requests: Sequence[Request],
+    n_replicas: int,
+    block_size: int,
+    queue_capacity: int,
+    est_tpot: float,
+) -> Plan:
+    """Greedy least-loaded placement (see module docstring)."""
+    return _plan(
+        requests, n_replicas, block_size, queue_capacity, est_tpot,
+        affinity=False,
+    )
+
+
+def plan_prefix_affinity(
+    requests: Sequence[Request],
+    n_replicas: int,
+    block_size: int,
+    queue_capacity: int,
+    est_tpot: float,
+) -> Plan:
+    """Sticky prefix-affinity placement (see module docstring)."""
+    return _plan(
+        requests, n_replicas, block_size, queue_capacity, est_tpot,
+        affinity=True,
+    )
+
+
+def _plan(
+    requests: Sequence[Request],
+    n_replicas: int,
+    block_size: int,
+    queue_capacity: int,
+    est_tpot: float,
+    affinity: bool,
+) -> Plan:
+    order = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    load = [0.0] * n_replicas
+    done_at: List[List[float]] = [[] for _ in range(n_replicas)]
+    sticky: Dict[int, int] = {}  # prefix route key -> replica
+    assignment: Dict[int, int] = {}
+    shed: List[Request] = []
+    for r in order:
+        cost = float(r.prompt_len + r.max_new_tokens)
+        key = (
+            prefix_route_key(r.prompt, block_size)
+            if affinity and block_size > 0
+            else None
+        )
+        ranked = sorted(range(n_replicas), key=lambda i: (load[i], i))
+        if key is not None and key in sticky:
+            home = sticky[key]
+            ranked = [home] + [i for i in ranked if i != home]
+        chosen = None
+        for i in ranked:
+            if (
+                queue_capacity <= 0
+                or _depth(done_at[i], r.arrival) < queue_capacity
+            ):
+                chosen = i
+                break
+        if chosen is None:
+            shed.append(r)
+            continue
+        assignment[r.rid] = chosen
+        load[chosen] += cost
+        done_at[chosen].append(r.arrival + est_tpot * cost)
+        if key is not None and key not in sticky:
+            sticky[key] = chosen
+    return assignment, shed
+
+
+PLACEMENTS: Dict[str, PlacementFn] = {
+    "least_loaded": plan_least_loaded,
+    "prefix_affinity": plan_prefix_affinity,
+}
+
+
+@dataclasses.dataclass
+class RouterResult:
+    """One routed run: merged requests (input order), aggregate metrics,
+    the placement that produced them, and each replica's own result."""
+
+    requests: List[Request]
+    metrics: Dict[str, float]  # aggregate + ``replica{i}_``-prefixed keys
+    assignment: Dict[int, int]  # rid -> replica index (shed rids absent)
+    replica_results: List[Optional[ContinuousResult]]  # None = idle replica
+
+    @property
+    def outputs(self) -> Dict[int, Optional[List[int]]]:
+        return {r.rid: r.output for r in self.requests}
+
+
+class Router:
+    """N-replica data-parallel front door over ``ContinuousEngine``.
+
+    All replicas are built from one ``EngineConfig`` (validated against
+    the model *before* the first replica exists) and share the parameter
+    pytree — replicating engine state N times costs N KV pools, not N
+    copies of the weights.
+    """
+
+    def __init__(
+        self,
+        params: Any,
+        cfg: ModelConfig,
+        config: EngineConfig,
+        n_replicas: int = 2,
+        placement: Any = "least_loaded",  # name in PLACEMENTS or a callable
+        queue_capacity: int = 0,  # per-replica bound (0 = unbounded)
+        est_tpot: float = 0.0,  # seconds/token service estimate for the bound
+        trace: bool = False,  # one SpanTracer lane (pid) per replica
+        clock: Optional[Callable[[], float]] = None,
+        sleep: Optional[Callable[[float], None]] = None,
+        faults: Any = None,  # FaultPlan, applied to every replica
+        engine_cls: type = ContinuousEngine,
+    ):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if queue_capacity < 0:
+            raise ValueError("queue_capacity must be >= 0")
+        if est_tpot < 0:
+            raise ValueError("est_tpot must be >= 0")
+        if callable(placement):
+            self._plan_fn = placement
+            self.placement = getattr(placement, "__name__", "custom")
+        else:
+            if placement not in PLACEMENTS:
+                raise ValueError(
+                    f"unknown placement {placement!r} "
+                    f"(expected one of {sorted(PLACEMENTS)} or a callable)"
+                )
+            self._plan_fn = PLACEMENTS[placement]
+            self.placement = placement
+        config.validate(cfg)
+        self.config = config
+        self.cfg = cfg
+        self.n_replicas = n_replicas
+        self.queue_capacity = queue_capacity
+        self.est_tpot = est_tpot
+        self.tracers: List[Optional[SpanTracer]] = []
+        self.engines: List[ContinuousEngine] = []
+        for i in range(n_replicas):
+            tracer = (
+                SpanTracer(pid=i, process_name=f"replica{i}")
+                if trace
+                else None
+            )
+            self.tracers.append(tracer)
+            self.engines.append(
+                engine_cls(
+                    params, cfg, config,
+                    clock=clock, sleep=sleep, trace=tracer, faults=faults,
+                )
+            )
+
+    # -- placement ---------------------------------------------------------
+
+    def plan(self, requests: Sequence[Request]) -> Plan:
+        """The deterministic placement for ``requests`` (no side effects):
+        ``(rid -> replica, shed requests)``."""
+        return self._plan_fn(
+            requests,
+            self.n_replicas,
+            self.config.paging.block_size,
+            self.queue_capacity,
+            self.est_tpot,
+        )
+
+    # -- serving -----------------------------------------------------------
+
+    def run(
+        self,
+        requests: Sequence[Request],
+        sync_every: int = 8,
+        max_new_cap: Optional[int] = None,
+    ) -> RouterResult:
+        """Route ``requests`` over the replicas and drain every
+        completion into one result. Replicas execute sequentially (host-
+        driven loops — see module docstring); the aggregate summary sums
+        their independent throughputs."""
+        assignment, shed = self.plan(requests)
+        for r in shed:
+            r.state = RequestState.ABORTED
+            r.output = None
+            r.error = (
+                f"router: all {self.n_replicas} replica queues at "
+                f"capacity {self.queue_capacity}"
+            )
+        # one shared buffer width so every replica's decode shapes (and
+        # therefore outputs under preemption-free greedy decoding) match
+        # the single-engine run's
+        cap = max_new_cap or max(
+            (r.max_new_tokens for r in requests), default=1
+        )
+        results: List[Optional[ContinuousResult]] = []
+        for i, eng in enumerate(self.engines):
+            subset = [r for r in requests if assignment.get(r.rid) == i]
+            results.append(
+                eng.run(subset, sync_every, cap) if subset else None
+            )
+        summaries = [
+            res.metrics if res is not None else {} for res in results
+        ]
+        metrics = merge_replica_summaries(
+            [s for s in summaries if s]
+        )
+        metrics["router_n_replicas"] = float(self.n_replicas)
+        metrics["router_shed"] = float(len(shed))
+        for i, s in enumerate(summaries):
+            for k, v in s.items():
+                metrics[f"replica{i}_{k}"] = v
+        return RouterResult(
+            requests=list(requests),
+            metrics=metrics,
+            assignment=assignment,
+            replica_results=results,
+        )
+
+    # -- observability -----------------------------------------------------
+
+    def trace_dict(self) -> Dict[str, Any]:
+        """The fleet's merged Chrome trace (one pid per replica)."""
+        live = [t for t in self.tracers if t is not None]
+        if not live:
+            raise ValueError("Router was built with trace=False")
+        return merge_traces(live)
+
+    def export_trace(self, path: str) -> int:
+        """Write the merged fleet trace as Chrome trace-event JSON."""
+        import json
+
+        d = self.trace_dict()
+        with open(path, "w") as f:
+            json.dump(d, f)
+            f.write("\n")
+        return sum(len(t) for t in self.tracers if t is not None)

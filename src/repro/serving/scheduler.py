@@ -105,6 +105,26 @@ class Scheduler:
         self.slot_seq: Dict[int, int] = {}  # slot -> admission sequence
         self._admit_counter = 0
 
+    @classmethod
+    def from_config(cls, config, allocator: Optional[BlockAllocator] = None):
+        """Build a scheduler from an ``EngineConfig`` (serving/config.py)
+        — the derivation the engine uses, factored out so the Router and
+        the tests construct byte-identical scheduling policy from the
+        same config object. The decode-reserve watermark only applies
+        under preemption (on-demand admission); worst-case charging
+        ignores it by construction."""
+        preempt = config.paging.preemption
+        return cls(
+            config.n_slots,
+            config.max_len,
+            config.prefill_bucket,
+            allocator,
+            on_demand=preempt,
+            decode_reserve=config.paging.decode_reserve if preempt else 0,
+            spec_pad=config.speculative.k,
+            victim_policy=config.paging.victim_policy,
+        )
+
     # -- admission --------------------------------------------------------
 
     def submit(self, req: Request) -> None:

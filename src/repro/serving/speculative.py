@@ -74,7 +74,7 @@ UNROLL_PERIOD_LIMIT = 16
 
 def build_spec_round(
     cfg: ModelConfig, k: int, eos: int, unroll: Optional[bool] = None,
-    greedy: bool = False,
+    greedy: bool = False, out_shardings=None,
 ):
     """Build the jitted speculative round: K-1 backbone draft steps, one
     batched full-model verify, rejection-sampled bulk commit — a single
@@ -115,6 +115,12 @@ def build_spec_round(
     every request in a trace is temperature-0: argmax drafting and
     longest-prefix acceptance with no RNG at all — the categorical/gumbel
     draws are a measurable slice of an otherwise matmul-only round.
+
+    ``out_shardings`` (tensor-parallel serving only) pins the round's
+    output layouts to the exact shardings the engine device_puts its
+    carries with — without the pin GSPMD returns canonicalized sharding
+    objects that are spec-unequal to the inputs' and the second round
+    recompiles (tripping the retrace guard's max_sigs=1 budget).
     """
     assert k >= 2, "a speculative round needs at least one draft proposal"
     if unroll is None:
@@ -187,7 +193,8 @@ def build_spec_round(
         poisoned = poisoned | bad
         return cache, logits, pos, still, emitted, buf, key, counters, poisoned
 
-    return jax.jit(round_fn, donate_argnums=(1,))
+    kw = {} if out_shardings is None else {"out_shardings": out_shardings}
+    return jax.jit(round_fn, donate_argnums=(1,), **kw)
 
 
 class SpeculativeEngine(ContinuousEngine):

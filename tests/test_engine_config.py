@@ -1,0 +1,222 @@
+"""EngineConfig: the typed front door to ContinuousEngine.
+
+Covers the api_redesign acceptance surface: JSON round-trips are lossless
+(including nested GuardConfig ladder tuples), validate() rejects every
+incoherent combination at construction, and the one-release legacy-kwarg
+shim builds the identical engine while warning exactly once.
+"""
+import dataclasses
+import warnings
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import (
+    ContinuousEngine,
+    EngineConfig,
+    GuardConfig,
+    PagingConfig,
+    ParallelConfig,
+    PrefixCacheConfig,
+    SpecConfig,
+    synthetic_trace,
+)
+from repro.serving.config import LEGACY_KWARGS
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("slim-tiny")
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=384, vocab_size=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def full_config():
+    """One config exercising every sub-config and the nested guard."""
+    return EngineConfig(
+        n_slots=4,
+        max_len=MAX_LEN,
+        eos_id=7,
+        prefill_bucket=8,
+        seed=3,
+        check_invariants=True,
+        check_retrace=True,
+        paging=PagingConfig(
+            block_size=8, n_blocks=40, preemption=True,
+            decode_reserve=3, victim_policy="cost",
+        ),
+        prefix_cache=PrefixCacheConfig(enabled=True, max_entries=16, ttl=5.0),
+        speculative=SpecConfig(k=4),
+        parallel=ParallelConfig(tp=2),
+        guard=GuardConfig(max_queue=6, default_ttl=2.0, degradation=True),
+    )
+
+
+class TestRoundTrip:
+    def test_dict_round_trip_is_lossless(self):
+        c = full_config()
+        assert EngineConfig.from_dict(c.to_dict()) == c
+
+    def test_json_round_trip_is_lossless(self):
+        c = full_config()
+        s = c.to_json()
+        assert isinstance(s, str)
+        assert EngineConfig.from_json(s) == c
+
+    def test_default_round_trip(self):
+        assert EngineConfig.from_json(EngineConfig().to_json()) == EngineConfig()
+
+    def test_guard_ladder_tuples_survive(self):
+        """JSON lists come back as the tuples GuardConfig compares with."""
+        c = EngineConfig(guard=GuardConfig(degradation=True))
+        back = EngineConfig.from_json(c.to_json())
+        assert back.guard.ladder_enter == c.guard.ladder_enter
+        assert isinstance(back.guard.ladder_enter, tuple)
+
+    def test_to_dict_is_plain_json_types(self):
+        d = full_config().to_dict()
+        assert d["paging"]["block_size"] == 8
+        assert d["parallel"]["tp"] == 2
+        assert isinstance(d["guard"]["ladder_enter"], list)
+
+
+class TestValidate:
+    def test_valid_config_chains(self):
+        c = EngineConfig(paging=PagingConfig(block_size=8))
+        assert c.validate() is c
+
+    @pytest.mark.parametrize(
+        "cfg_kwargs, match",
+        [
+            (dict(n_slots=0), "n_slots"),
+            (dict(max_len=0), "max_len"),
+            (dict(prefill_bucket=-1), "prefill_bucket"),
+            (dict(prefix_cache=PrefixCacheConfig(enabled=True)), "block_size"),
+            (dict(paging=PagingConfig(preemption=True)), "preemption"),
+            (
+                dict(paging=PagingConfig(block_size=8, decode_reserve=-1)),
+                "decode_reserve",
+            ),
+            (dict(speculative=SpecConfig(k=1)), "K >= 2"),
+            (dict(speculative=SpecConfig(k=4)), "block_size"),
+            (
+                dict(prefix_cache=PrefixCacheConfig(max_entries=4)),
+                "prefix_cache",
+            ),
+            (
+                dict(paging=PagingConfig(block_size=8, victim_policy="oldest")),
+                "victim_policy",
+            ),
+            (
+                dict(paging=PagingConfig(block_size=8, victim_policy="cost")),
+                "preemption",
+            ),
+            (dict(max_len=50, paging=PagingConfig(block_size=8)), "multiple"),
+            (dict(parallel=ParallelConfig(tp=0)), "tp"),
+        ],
+    )
+    def test_incoherent_combinations_rejected(self, cfg_kwargs, match):
+        with pytest.raises(ValueError, match=match):
+            EngineConfig(**cfg_kwargs).validate()
+
+    def test_architecture_checks_need_model_cfg(self, model):
+        """Sliding-window archs reject paging only once the model is known."""
+        cfg, _ = model
+        swa = dataclasses.replace(
+            cfg, sliding_window=8, name="swa-tiny"
+        )
+        c = EngineConfig(max_len=MAX_LEN, paging=PagingConfig(block_size=8))
+        c.validate()  # structural-only: fine
+        if not T.supports_paged_cache(swa):
+            with pytest.raises(ValueError, match="paged"):
+                c.validate(swa)
+
+    def test_engine_constructor_validates(self, model):
+        cfg, params = model
+        bad = EngineConfig(max_len=50, paging=PagingConfig(block_size=8))
+        with pytest.raises(ValueError, match="multiple"):
+            ContinuousEngine(params, cfg, bad)
+
+
+class TestLegacyShim:
+    def test_legacy_kwargs_map_onto_config(self):
+        c = EngineConfig.from_legacy_kwargs(
+            dict(
+                n_slots=4, max_len=MAX_LEN, block_size=8, n_blocks=40,
+                preemption=True, victim_policy="cost", prefix_cache=True,
+                prefix_cache_max_entries=16, speculative=4, seed=3,
+            )
+        )
+        assert c.n_slots == 4
+        assert c.paging == PagingConfig(
+            block_size=8, n_blocks=40, preemption=True, victim_policy="cost"
+        )
+        assert c.prefix_cache.enabled and c.prefix_cache.max_entries == 16
+        assert c.speculative.k == 4 and c.seed == 3
+
+    def test_every_legacy_kwarg_is_mapped(self):
+        """The shim table covers a real destination for every old kwarg."""
+        c = EngineConfig()
+        for name, dest in LEGACY_KWARGS.items():
+            if dest is None:
+                assert hasattr(c, name)
+            else:
+                sub, field = dest
+                assert hasattr(getattr(c, sub), field)
+
+    def test_unknown_kwarg_raises_type_error(self):
+        with pytest.raises(TypeError, match="bogus"):
+            EngineConfig.from_legacy_kwargs(dict(bogus=1))
+
+    def test_shim_warns_once_and_matches_config_engine(self, model):
+        cfg, params = model
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            legacy = ContinuousEngine(
+                params, cfg, n_slots=2, max_len=MAX_LEN,
+                prefill_bucket=8, block_size=8,
+            )
+        deps = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(deps) == 1
+        assert "EngineConfig" in str(deps[0].message)
+
+        typed = ContinuousEngine(
+            params, cfg,
+            EngineConfig(
+                n_slots=2, max_len=MAX_LEN, prefill_bucket=8,
+                paging=PagingConfig(block_size=8),
+            ),
+        )
+        assert legacy.config == typed.config
+        trace = synthetic_trace(
+            3, 1e6, cfg.vocab_size, prompt_len=(8, 12),
+            max_new_tokens=(4, 6), seed=11,
+        )
+        a = legacy.run(trace, sync_every=4, max_new_cap=6)
+        b = typed.run(
+            synthetic_trace(
+                3, 1e6, cfg.vocab_size, prompt_len=(8, 12),
+                max_new_tokens=(4, 6), seed=11,
+            ),
+            sync_every=4, max_new_cap=6,
+        )
+        assert a.outputs == b.outputs
+
+    def test_config_plus_legacy_kwargs_rejected(self, model):
+        cfg, params = model
+        with pytest.raises(TypeError, match="not both"):
+            ContinuousEngine(params, cfg, EngineConfig(), n_slots=2)
+
+    def test_config_engines_warn_nothing(self, model):
+        cfg, params = model
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            ContinuousEngine(params, cfg, EngineConfig(max_len=MAX_LEN))
+        assert not [
+            x for x in w if issubclass(x.category, DeprecationWarning)
+        ]

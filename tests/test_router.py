@@ -1,0 +1,296 @@
+"""Data-parallel router over engine replicas.
+
+Pins the routing layer's contracts: deterministic upfront placement,
+greedy token-exactness regardless of placement (a routed fleet generates
+exactly what one engine generates), sticky prefix-affinity, bounded-queue
+shedding one layer above the engine, and the fleet aggregation helpers
+(metrics merge + multi-pid trace merge).
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import (
+    ContinuousEngine,
+    EngineConfig,
+    PagingConfig,
+    PrefixCacheConfig,
+    Request,
+    RequestState,
+    Router,
+    merge_replica_summaries,
+    synthetic_trace,
+    validate_trace,
+)
+from repro.serving.router import plan_least_loaded, plan_prefix_affinity
+
+MAX_LEN = 48
+BLOCK = 8
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("slim-tiny")
+    cfg = dataclasses.replace(cfg, n_layers=2, d_model=128, d_ff=384, vocab_size=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def engine_config(**kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prefill_bucket", 8)
+    kw.setdefault("paging", PagingConfig(block_size=BLOCK))
+    return EngineConfig(**kw)
+
+
+def trace(cfg, n=6, seed=3, **kw):
+    kw.setdefault("prompt_len", (8, 12))
+    kw.setdefault("max_new_tokens", (4, 8))
+    return synthetic_trace(n, 1e6, cfg.vocab_size, seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Placement planning (host-only, no engines)
+# ---------------------------------------------------------------------------
+
+class TestPlanning:
+    def _reqs(self, costs, arrivals=None):
+        return [
+            Request(
+                rid=i, prompt=[1] * 4, max_new_tokens=c - 4,
+                arrival=0.0 if arrivals is None else arrivals[i],
+            )
+            for i, c in enumerate(costs)
+        ]
+
+    def test_least_loaded_balances_cost(self):
+        # costs 10, 10, 6, 6: r0 gets 10, r1 gets 10, then r0/r1 get a 6
+        a, shed = plan_least_loaded(self._reqs([10, 10, 6, 6]), 2, 0, 0, 0.0)
+        assert not shed
+        loads = [0, 0]
+        for rid, rep in a.items():
+            loads[rep] += [10, 10, 6, 6][rid]
+        assert loads[0] == loads[1] == 16
+
+    def test_ties_go_to_lowest_index(self):
+        a, _ = plan_least_loaded(self._reqs([8]), 4, 0, 0, 0.0)
+        assert a == {0: 0}
+
+    def test_plan_is_deterministic_in_arrival_order(self):
+        reqs = self._reqs([8, 12, 8, 12, 8], arrivals=[0.4, 0.1, 0.3, 0.0, 0.2])
+        a1, _ = plan_least_loaded(reqs, 2, 0, 0, 0.0)
+        a2, _ = plan_least_loaded(list(reversed(reqs)), 2, 0, 0, 0.0)
+        assert a1 == a2  # planning sorts by (arrival, rid), not input order
+
+    def test_affinity_is_sticky_per_prefix(self):
+        prefix_a, prefix_b = [1] * BLOCK, [2] * BLOCK
+        reqs = [
+            Request(rid=i, prompt=p + [i], max_new_tokens=4, arrival=float(i))
+            for i, p in enumerate([prefix_a, prefix_b, prefix_a, prefix_b])
+        ]
+        a, shed = plan_prefix_affinity(reqs, 2, BLOCK, 0, 0.0)
+        assert not shed
+        assert a[0] == a[2] and a[1] == a[3]  # same prefix -> same replica
+        assert a[0] != a[1]  # second tenant spilled to the idle replica
+
+    def test_affinity_without_full_block_falls_back(self):
+        # prompts shorter than one block carry no route key
+        reqs = [
+            Request(rid=i, prompt=[5] * (BLOCK - 1), max_new_tokens=4)
+            for i in range(2)
+        ]
+        a, _ = plan_prefix_affinity(reqs, 2, BLOCK, 0, 0.0)
+        assert set(a.values()) == {0, 1}  # spread like least-loaded
+
+    def test_bounded_queue_sheds_when_all_full(self):
+        # est_tpot huge -> every placed request occupies its replica forever;
+        # capacity 1 on 2 replicas admits exactly 2 of 5 burst arrivals
+        reqs = self._reqs([8] * 5)
+        a, shed = plan_least_loaded(reqs, 2, 0, 1, 1e9)
+        assert len(a) == 2 and len(shed) == 3
+
+    def test_queue_drains_over_time(self):
+        # service estimate 0.1 s/token * 8 tokens = 0.8s; arrivals 1s apart
+        # never see a full queue
+        reqs = self._reqs([8] * 4, arrivals=[0.0, 1.0, 2.0, 3.0])
+        a, shed = plan_least_loaded(reqs, 1, 0, 1, 0.1)
+        assert len(a) == 4 and not shed
+
+
+# ---------------------------------------------------------------------------
+# Routed serving (engines)
+# ---------------------------------------------------------------------------
+
+class TestRouterRun:
+    def test_token_exact_vs_single_engine(self, model):
+        cfg, params = model
+        config = engine_config()
+        single = ContinuousEngine(params, cfg, config)
+        want = single.run(trace(cfg), sync_every=4, max_new_cap=8).outputs
+        for placement in ("least_loaded", "prefix_affinity"):
+            router = Router(params, cfg, config, n_replicas=2, placement=placement)
+            got = router.run(trace(cfg), sync_every=4, max_new_cap=8)
+            assert got.outputs == want, placement
+
+    def test_run_is_deterministic(self, model):
+        cfg, params = model
+        router = Router(params, cfg, engine_config(), n_replicas=2)
+        a = router.run(trace(cfg), sync_every=4, max_new_cap=8)
+        b = router.run(trace(cfg), sync_every=4, max_new_cap=8)
+        assert a.outputs == b.outputs
+        assert a.assignment == b.assignment
+
+    def test_every_request_lands_on_its_assigned_replica(self, model):
+        cfg, params = model
+        router = Router(params, cfg, engine_config(), n_replicas=2)
+        res = router.run(trace(cfg), sync_every=4, max_new_cap=8)
+        assert set(res.assignment) == {r.rid for r in res.requests}
+        for i, rep_res in enumerate(res.replica_results):
+            assert rep_res is not None
+            rids = {r.rid for r in rep_res.requests}
+            assert rids == {r for r, rep in res.assignment.items() if rep == i}
+
+    def test_aggregate_metrics(self, model):
+        cfg, params = model
+        router = Router(params, cfg, engine_config(), n_replicas=2)
+        res = router.run(trace(cfg), sync_every=4, max_new_cap=8)
+        m = res.metrics
+        assert m["router_n_replicas"] == 2.0
+        assert m["router_shed"] == 0.0
+        assert m["completed"] == 6
+        assert m["total_tokens"] == (
+            m["replica0_total_tokens"] + m["replica1_total_tokens"]
+        )
+        assert m["tokens_per_s"] == pytest.approx(
+            m["replica0_tokens_per_s"] + m["replica1_tokens_per_s"]
+        )
+
+    def test_shed_requests_end_aborted(self, model):
+        cfg, params = model
+        router = Router(
+            params, cfg, engine_config(), n_replicas=2,
+            queue_capacity=1, est_tpot=1e9,
+        )
+        res = router.run(trace(cfg, n=5), sync_every=4, max_new_cap=8)
+        shed = [r for r in res.requests if r.state == RequestState.ABORTED]
+        assert len(shed) == 3 and res.metrics["router_shed"] == 3.0
+        for r in shed:
+            assert r.output is None and "capacity" in r.error
+            assert r.rid not in res.assignment
+        done = [r for r in res.requests if r.state == RequestState.FINISHED]
+        assert len(done) == 2
+
+    def test_idle_replica_allowed(self, model):
+        cfg, params = model
+        router = Router(params, cfg, engine_config(), n_replicas=3)
+        res = router.run(trace(cfg, n=2), sync_every=4, max_new_cap=8)
+        assert res.replica_results[2] is None
+        assert all(r.state == RequestState.FINISHED for r in res.requests)
+
+    def test_affinity_lifts_hit_rate_on_multi_tenant_trace(self, model):
+        cfg, params = model
+        config = engine_config(
+            n_slots=2,
+            prefix_cache=PrefixCacheConfig(enabled=True),
+            paging=PagingConfig(block_size=BLOCK, n_blocks=48),
+        )
+        def tenant_trace():
+            return trace(
+                cfg, n=9, seed=5,
+                prompt_len=(3 * BLOCK, 4 * BLOCK),
+                max_new_tokens=(2, 6),
+                shared_prefix_len=3 * BLOCK,
+                shared_prefix_groups=3,
+            )
+        rates = {}
+        for placement in ("prefix_affinity", "least_loaded"):
+            router = Router(
+                params, cfg, config, n_replicas=2, placement=placement
+            )
+            res = router.run(tenant_trace(), sync_every=4, max_new_cap=6)
+            rates[placement] = res.metrics["prefix_cache_hit_rate"]
+        assert rates["prefix_affinity"] > rates["least_loaded"]
+
+    def test_custom_placement_callable(self, model):
+        cfg, params = model
+
+        def all_on_one(requests, n_replicas, block_size, cap, est):
+            return {r.rid: 0 for r in requests}, []
+
+        router = Router(params, cfg, engine_config(), n_replicas=2,
+                        placement=all_on_one)
+        res = router.run(trace(cfg), sync_every=4, max_new_cap=8)
+        assert set(res.assignment.values()) == {0}
+        assert res.replica_results[1] is None
+
+    def test_invalid_args_rejected(self, model):
+        cfg, params = model
+        with pytest.raises(ValueError, match="n_replicas"):
+            Router(params, cfg, engine_config(), n_replicas=0)
+        with pytest.raises(ValueError, match="placement"):
+            Router(params, cfg, engine_config(), placement="round_robin")
+        with pytest.raises(ValueError, match="multiple"):
+            Router(params, cfg, EngineConfig(
+                max_len=50, paging=PagingConfig(block_size=8)))
+
+    def test_per_replica_trace_lanes_merge(self, model):
+        cfg, params = model
+        router = Router(params, cfg, engine_config(), n_replicas=2, trace=True)
+        router.run(trace(cfg), sync_every=4, max_new_cap=8)
+        d = router.trace_dict()
+        validate_trace(d)
+        pids = {e["pid"] for e in d["traceEvents"]}
+        assert pids == {0, 1}
+        names = {
+            e["args"]["name"]
+            for e in d["traceEvents"]
+            if e.get("ph") == "M" and e.get("name") == "process_name"
+        }
+        assert names == {"replica0", "replica1"}
+
+    def test_trace_dict_requires_trace(self, model):
+        cfg, params = model
+        router = Router(params, cfg, engine_config(), n_replicas=2)
+        with pytest.raises(ValueError, match="trace=False"):
+            router.trace_dict()
+
+
+# ---------------------------------------------------------------------------
+# Fleet metrics aggregation (pure)
+# ---------------------------------------------------------------------------
+
+class TestMergeSummaries:
+    def test_sums_counts_and_rates(self):
+        m = merge_replica_summaries([
+            {"total_tokens": 10, "tokens_per_s": 100.0, "completed": 2},
+            {"total_tokens": 6, "tokens_per_s": 50.0, "completed": 1},
+        ])
+        assert m["total_tokens"] == 16
+        assert m["tokens_per_s"] == 150.0
+        assert m["completed"] == 3
+
+    def test_weighted_means_and_maxima(self):
+        m = merge_replica_summaries([
+            {"completed": 1, "mean_ttft_s": 0.1, "duration_s": 2.0,
+             "peak_queue_depth": 3},
+            {"completed": 3, "mean_ttft_s": 0.5, "duration_s": 5.0,
+             "peak_queue_depth": 1},
+        ])
+        assert m["mean_ttft_s"] == pytest.approx(0.4)  # (0.1 + 3*0.5) / 4
+        assert m["duration_s"] == 5.0  # replicas run side by side
+        assert m["peak_queue_depth"] == 3
+
+    def test_hit_rate_recomputed_from_counters(self):
+        # not a mean of the per-replica rates (that would be 0.375 only by
+        # luck of equal weights) — recomputed token-weighted from the sums
+        m = merge_replica_summaries([
+            {"cached_prompt_tokens": 30.0, "total_prompt_tokens": 40.0,
+             "prefix_cache_hit_rate": 0.75},
+            {"cached_prompt_tokens": 0.0, "total_prompt_tokens": 120.0,
+             "prefix_cache_hit_rate": 0.0},
+        ])
+        assert m["prefix_cache_hit_rate"] == pytest.approx(30 / 160)
