@@ -1,0 +1,125 @@
+"""Diff two ``BENCH_serving.json`` dumps and fail on perf regressions.
+
+    PYTHONPATH=src python benchmarks/check_bench_regression.py \
+        baseline.json new.json [--toks-margin 0.05] [--ttft-margin 0.10]
+
+For every cell present in *both* dumps, the new run must hold
+
+* ``tokens_per_s``  >= (1 - toks_margin) x baseline, and
+* ``mean_ttft_s``   <= (1 + ttft_margin) x baseline,
+
+i.e. throughput may dip and TTFT may grow only within the stated
+noise margins. Cells that exist on one side only are reported as
+added/removed but never fail the check — growing the bench matrix is
+not a regression. Verdict flips (a ``true`` in the baseline that went
+``false``) always fail: those are correctness gates, not timings.
+
+Exit status: 0 clean, 1 on any regression, 2 on usage/IO errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        raise SystemExit(2)
+
+
+def compare(
+    baseline: dict,
+    new: dict,
+    toks_margin: float = 0.05,
+    ttft_margin: float = 0.10,
+) -> list:
+    """Return a list of human-readable regression strings (empty = ok)."""
+    regressions = []
+    b_cells = baseline.get("cells", {})
+    n_cells = new.get("cells", {})
+    for label in sorted(set(b_cells) & set(n_cells)):
+        b, n = b_cells[label], n_cells[label]
+        b_toks, n_toks = b.get("tokens_per_s"), n.get("tokens_per_s")
+        if b_toks and n_toks is not None:
+            floor = (1.0 - toks_margin) * b_toks
+            if n_toks < floor:
+                regressions.append(
+                    f"{label}: tokens_per_s {n_toks:.2f} < {floor:.2f} "
+                    f"(baseline {b_toks:.2f}, margin {toks_margin:.0%})"
+                )
+        b_ttft, n_ttft = b.get("mean_ttft_s"), n.get("mean_ttft_s")
+        if b_ttft and n_ttft is not None:
+            ceil = (1.0 + ttft_margin) * b_ttft
+            if n_ttft > ceil:
+                regressions.append(
+                    f"{label}: mean_ttft_s {n_ttft:.4f} > {ceil:.4f} "
+                    f"(baseline {b_ttft:.4f}, margin {ttft_margin:.0%})"
+                )
+    b_verdicts = baseline.get("verdicts", {})
+    n_verdicts = new.get("verdicts", {})
+    for key in sorted(set(b_verdicts) & set(n_verdicts)):
+        if b_verdicts[key] and not n_verdicts[key]:
+            regressions.append(f"{key}: verdict flipped true -> false")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when a BENCH_serving.json run regresses "
+        "against a committed baseline"
+    )
+    ap.add_argument("baseline", help="committed baseline BENCH_serving.json")
+    ap.add_argument("new", help="freshly generated BENCH_serving.json")
+    ap.add_argument(
+        "--toks-margin", type=float, default=0.05,
+        help="allowed fractional tokens_per_s drop (default 0.05)",
+    )
+    ap.add_argument(
+        "--ttft-margin", type=float, default=0.10,
+        help="allowed fractional mean_ttft_s growth (default 0.10)",
+    )
+    args = ap.parse_args(argv)
+    baseline, new = _load(args.baseline), _load(args.new)
+
+    b_cells, n_cells = baseline.get("cells", {}), new.get("cells", {})
+    shared = sorted(set(b_cells) & set(n_cells))
+    added = sorted(set(n_cells) - set(b_cells))
+    removed = sorted(set(b_cells) - set(n_cells))
+    print(
+        f"comparing {len(shared)} shared cells "
+        f"({len(added)} added, {len(removed)} removed)"
+    )
+    for label in added:
+        print(f"  + {label} (new cell, not gated)")
+    for label in removed:
+        print(f"  - {label} (dropped from bench)")
+
+    regressions = compare(
+        baseline, new,
+        toks_margin=args.toks_margin, ttft_margin=args.ttft_margin,
+    )
+    for label in shared:
+        b, n = b_cells[label], n_cells[label]
+        if b.get("tokens_per_s") and n.get("tokens_per_s") is not None:
+            delta = n["tokens_per_s"] / b["tokens_per_s"] - 1.0
+            print(
+                f"  {label}: tok/s {n['tokens_per_s']:.2f} "
+                f"vs {b['tokens_per_s']:.2f} ({delta:+.1%})"
+            )
+    if regressions:
+        print(f"\n{len(regressions)} regression(s):", file=sys.stderr)
+        for r in regressions:
+            print(f"  REGRESSION {r}", file=sys.stderr)
+        return 1
+    print("no regressions beyond margin")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

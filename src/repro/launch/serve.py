@@ -20,7 +20,6 @@ roofline story is in benchmarks/bench_speedup.py and EXPERIMENTS §Roofline.
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 
@@ -34,6 +33,7 @@ from repro.serving import (
     EngineConfig,
     FaultPlan,
     GuardConfig,
+    ObservabilityConfig,
     PagingConfig,
     ParallelConfig,
     PrefixCacheConfig,
@@ -44,6 +44,14 @@ from repro.serving import (
     synthetic_trace,
 )
 from repro.serving.block_pool import RESERVED_BLOCKS
+from repro.serving.export import (
+    EngineLiveSource,
+    MetricsServer,
+    RouterLiveSource,
+    SnapshotWriter,
+    atomic_write_json,
+    parse_listen,
+)
 
 
 def main(argv=None):
@@ -159,6 +167,49 @@ def main(argv=None):
         "(continuous workload only)",
     )
     p.add_argument(
+        "--listen", default=None, metavar="ADDR",
+        help="serve live metrics over HTTP while the run executes: "
+        "/metrics (Prometheus text exposition), /metrics.json (rolling-"
+        "window snapshot), /healthz (degradation level + last-burst age). "
+        "ADDR is ':9100', '127.0.0.1:9100', or a bare port; an empty host "
+        "binds localhost (continuous workload only)",
+    )
+    p.add_argument(
+        "--metrics-flush-interval", type=float, default=1.0,
+        metavar="SECONDS",
+        help="with --metrics-json: rewrite the live snapshot atomically "
+        "(write-to-temp + rename) every SECONDS during the run, so a "
+        "killed run still leaves its last consistent snapshot on disk",
+    )
+    p.add_argument(
+        "--postmortem-dir", default=None, metavar="DIR",
+        help="enable the per-request flight recorder and dump a "
+        "postmortem bundle (postmortem_rid<N>.json) into DIR for every "
+        "request ending FAILED/EXPIRED/ABORTED (continuous workload only)",
+    )
+    p.add_argument(
+        "--slo-ttft", type=float, default=0.0, metavar="SECONDS",
+        help="p95 time-to-first-token SLO target: the rolling-window "
+        "error-budget burn feeds the degradation ladder as pressure "
+        "(0 = unmonitored; needs --degrade)",
+    )
+    p.add_argument(
+        "--slo-tpot", type=float, default=0.0, metavar="SECONDS",
+        help="p95 time-per-output-token SLO target (0 = unmonitored; "
+        "needs --degrade)",
+    )
+    p.add_argument(
+        "--slo-shed-rate", type=float, default=0.0, metavar="FRACTION",
+        help="target shed fraction (shed / arrivals over the rolling "
+        "window); shedding at the target is burn 1.0 (0 = unmonitored; "
+        "needs --degrade)",
+    )
+    p.add_argument(
+        "--obs-window", type=float, default=60.0, metavar="SECONDS",
+        help="rolling window for the live metrics (window_* keys and SLO "
+        "burn computation)",
+    )
+    p.add_argument(
         "--profile-dir", default=None, metavar="DIR",
         help="bracket the run in jax.profiler.start_trace/stop_trace; "
         "the xprof capture lands in DIR (view with TensorBoard)",
@@ -246,6 +297,19 @@ def main(argv=None):
     if args.check_retrace and args.workload != "poisson":
         p.error("--check-retrace guards the continuous engine's jitted hot "
                 "paths; it needs --workload poisson")
+    if args.listen and args.workload != "poisson":
+        p.error("--listen serves the continuous engine's live metrics; it "
+                "needs --workload poisson")
+    if args.postmortem_dir and args.workload != "poisson":
+        p.error("--postmortem-dir records the continuous engine's request "
+                "lifecycles; it needs --workload poisson")
+    if (
+        args.slo_ttft or args.slo_tpot or args.slo_shed_rate
+    ) and not args.degrade:
+        p.error("--slo-ttft/--slo-tpot/--slo-shed-rate drive the "
+                "degradation ladder; they need --degrade")
+    if args.metrics_flush_interval <= 0:
+        p.error("--metrics-flush-interval must be > 0 seconds")
     if (
         args.deadline or args.max_queue or args.watchdog or args.degrade
         or args.chaos
@@ -326,6 +390,14 @@ def main(argv=None):
             speculative=SpecConfig(k=args.speculative),
             parallel=ParallelConfig(tp=args.tp),
             guard=guard,
+            observability=ObservabilityConfig(
+                window_s=args.obs_window,
+                slo_ttft_p95_s=args.slo_ttft,
+                slo_tpot_p95_s=args.slo_tpot,
+                slo_shed_rate=args.slo_shed_rate,
+                flight_recorder=bool(args.postmortem_dir),
+                postmortem_dir=args.postmortem_dir,
+            ),
         ).validate(cfg)
         router = None
         if args.replicas > 1:
@@ -339,6 +411,28 @@ def main(argv=None):
             engine = ContinuousEngine(
                 params, cfg, config, trace=tracer, faults=faults
             )
+        # the live observability plane: HTTP endpoint and/or periodic
+        # crash-safe snapshots, both reading the same live source
+        live_source = (
+            RouterLiveSource(router)
+            if router is not None
+            else EngineLiveSource(engine)
+        )
+        server = None
+        if args.listen:
+            host, port = parse_listen(args.listen)
+            server = MetricsServer(live_source, host, port).start()
+            print(
+                f"[serve/continuous] live metrics on {server.url} "
+                "(/metrics /metrics.json /healthz)"
+            )
+        writer = None
+        if args.metrics_json:
+            writer = SnapshotWriter(
+                args.metrics_json,
+                live_source.snapshot_json,
+                interval=args.metrics_flush_interval,
+            ).start()
         if args.profile_dir:
             jax.profiler.start_trace(args.profile_dir)
         try:
@@ -350,6 +444,8 @@ def main(argv=None):
             if args.profile_dir:
                 jax.profiler.stop_trace()
                 print(f"[serve/continuous] xprof capture -> {args.profile_dir}")
+            if server is not None:
+                server.stop()
         m = res.metrics
         cache_kind = (
             f"paged(bs={args.block_size}, blocks={engine.n_blocks}"
@@ -453,12 +549,15 @@ def main(argv=None):
             )
         if args.metrics_json:
             # the config rides along under its own key, so every recorded
-            # run carries its provenance; metric keys stay top-level
+            # run carries its provenance; metric keys stay top-level. The
+            # final dump replaces the writer's periodic live snapshots —
+            # atomically, like every flush before it.
             dump = dict(m)
             dump["config"] = config.to_dict()
-            with open(args.metrics_json, "w") as fh:
-                json.dump(dump, fh, indent=2, sort_keys=True)
-                fh.write("\n")
+            if writer is not None:
+                writer.stop(final_payload=dump)
+            else:
+                atomic_write_json(args.metrics_json, dump)
             print(f"[serve/continuous] metrics -> {args.metrics_json}")
         first = res.requests[0]
         if first.output is not None:

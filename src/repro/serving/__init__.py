@@ -17,6 +17,7 @@ from repro.serving.block_pool import (
 )
 from repro.serving.config import (
     EngineConfig,
+    ObservabilityConfig,
     PagingConfig,
     ParallelConfig,
     PrefixCacheConfig,
@@ -24,6 +25,14 @@ from repro.serving.config import (
 )
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
 from repro.serving.engine import GenerationResult, ServeEngine
+from repro.serving.export import (
+    EngineLiveSource,
+    MetricsServer,
+    RouterLiveSource,
+    SnapshotWriter,
+    atomic_write_json,
+    render_prometheus,
+)
 from repro.serving.faults import FAULT_SITES, FaultPlan, FaultSpec
 from repro.serving.guard import DegradationLadder, GuardConfig
 from repro.serving.metrics import (
@@ -33,8 +42,13 @@ from repro.serving.metrics import (
     MetricsRegistry,
     RequestTrace,
     ServingMetrics,
+    WindowedHistogram,
+    WindowedRate,
+    merge_histogram_states,
     merge_replica_summaries,
+    quantile_of_state,
 )
+from repro.serving.slo import SloMonitor
 from repro.serving.request import (
     Request,
     RequestQueue,
@@ -44,7 +58,12 @@ from repro.serving.request import (
 from repro.serving.router import Router, RouterResult
 from repro.serving.scheduler import NeverAdmittable, Scheduler
 from repro.serving.speculative import SpeculativeEngine
-from repro.serving.tracing import SpanTracer, merge_traces, validate_trace
+from repro.serving.tracing import (
+    FlightRecorder,
+    SpanTracer,
+    merge_traces,
+    validate_trace,
+)
 
 __all__ = [
     # the one front door: typed config + engine + data-parallel router
@@ -63,9 +82,22 @@ __all__ = [
     "RequestState",
     "synthetic_trace",
     # observability
+    "ObservabilityConfig",
     "ServingMetrics",
+    "SloMonitor",
     "SpanTracer",
+    "FlightRecorder",
+    "WindowedHistogram",
+    "WindowedRate",
+    "MetricsServer",
+    "EngineLiveSource",
+    "RouterLiveSource",
+    "SnapshotWriter",
+    "render_prometheus",
+    "atomic_write_json",
+    "merge_histogram_states",
     "merge_replica_summaries",
+    "quantile_of_state",
     "merge_traces",
     "validate_trace",
     # secondary (kept importable; not the recommended entry points)

@@ -106,6 +106,52 @@ class ParallelConfig:
 
 
 @dataclasses.dataclass
+class ObservabilityConfig:
+    """The live observability plane (docs/observability.md §Live plane):
+    rolling-window instruments, SLO monitoring feeding the degradation
+    ladder, and the per-request flight recorder. All defaults keep the
+    plane passive: windowed instruments always record (they are cheap
+    ring updates on existing hook paths), but no SLO targets means no
+    monitor and no ladder pressure, and the flight recorder is off."""
+
+    window_s: float = 60.0  # rolling-window span (engine clock seconds)
+    window_subs: int = 12  # ring granularity: sub-windows per window
+    slo_ttft_p95_s: float = 0.0  # p95 TTFT target; 0 = unmonitored
+    slo_tpot_p95_s: float = 0.0  # p95 TPOT target; 0 = unmonitored
+    slo_shed_rate: float = 0.0  # shed/arrival rate target; 0 = unmonitored
+    slo_pressure_cap: float = 4.0  # max ladder pressure the monitor adds
+    flight_recorder: bool = False  # record per-request lifecycle rings
+    flight_recorder_events: int = 64  # ring capacity per request
+    postmortem_dir: Optional[str] = None  # dump bundles for FAILED/
+    # EXPIRED/ABORTED terminals here (flight recorder implied on)
+
+    def __post_init__(self):
+        if self.window_s <= 0:
+            raise ValueError("window_s must be > 0 seconds")
+        if self.window_subs < 1:
+            raise ValueError("window_subs must be >= 1")
+        for name in ("slo_ttft_p95_s", "slo_tpot_p95_s", "slo_shed_rate"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0 (0 = unmonitored)")
+        if self.slo_pressure_cap <= 0:
+            raise ValueError("slo_pressure_cap must be > 0")
+        if self.flight_recorder_events < 1:
+            raise ValueError("flight_recorder_events must be >= 1")
+
+    @property
+    def slo_active(self) -> bool:
+        """Whether any SLO target is set (the engine builds an
+        ``SloMonitor`` and wires it into the ladder only then)."""
+        return bool(
+            self.slo_ttft_p95_s or self.slo_tpot_p95_s or self.slo_shed_rate
+        )
+
+    @property
+    def recorder_active(self) -> bool:
+        return bool(self.flight_recorder or self.postmortem_dir)
+
+
+@dataclasses.dataclass
 class EngineConfig:
     """Everything that shapes one ``ContinuousEngine`` replica.
 
@@ -130,6 +176,9 @@ class EngineConfig:
     speculative: SpecConfig = dataclasses.field(default_factory=SpecConfig)
     parallel: ParallelConfig = dataclasses.field(default_factory=ParallelConfig)
     guard: Optional[GuardConfig] = None
+    observability: ObservabilityConfig = dataclasses.field(
+        default_factory=ObservabilityConfig
+    )
 
     # -- validation --------------------------------------------------------
 
@@ -236,6 +285,14 @@ class EngineConfig:
             )
         if self.parallel.tp < 1:
             raise ValueError("parallel.tp must be >= 1")
+        obs = self.observability
+        if obs.slo_active and not (self.guard is not None and self.guard.degradation):
+            # SLO targets without the ladder would measure burn and act on
+            # nothing; catch the misconfiguration at construction
+            raise ValueError(
+                "observability SLO targets drive the degradation ladder; "
+                "they need guard=GuardConfig(degradation=True)"
+            )
         return self
 
     # -- legacy kwarg shim -------------------------------------------------
@@ -286,6 +343,7 @@ class EngineConfig:
             speculative=SpecConfig(**d.pop("speculative", {})),
             parallel=ParallelConfig(**d.pop("parallel", {})),
             guard=guard,
+            observability=ObservabilityConfig(**d.pop("observability", {})),
             **d,
         )
 

@@ -67,6 +67,7 @@ live rows), so on-demand growth needs no extra device sync.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
@@ -85,13 +86,20 @@ from repro.serving.block_pool import (
     blocks_needed,
 )
 from repro.serving.config import EngineConfig
+from repro.serving.export import atomic_write_json
 from repro.serving.faults import FaultPlan
 from repro.serving.guard import DegradationLadder
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Request, RequestState
 from repro.serving.sampling import degenerate_rows, sample_and_emit
 from repro.serving.scheduler import NeverAdmittable, Scheduler
-from repro.serving.tracing import ENGINE_TID, QUEUE_TID, SpanTracer, slot_tid
+from repro.serving.tracing import (
+    ENGINE_TID,
+    QUEUE_TID,
+    FlightRecorder,
+    SpanTracer,
+    slot_tid,
+)
 
 Params = Dict[str, Any]
 
@@ -169,6 +177,15 @@ class ContinuousEngine:
         self.prefix_cache_ttl = config.prefix_cache.ttl
         self.guard = config.guard
         self.faults = faults
+        # -- live observability surface (serving/export.py reads these
+        # from its own thread; all plain host attributes, pure reads) --
+        self.metrics: Optional[ServingMetrics] = None  # this/last run's
+        self.recorder: Optional[FlightRecorder] = None  # flight recorder
+        self.live_level = 0  # last degradation-ladder level
+        self._live_now: Optional[Callable[[], float]] = None  # engine clock
+        self._last_burst_t: Optional[float] = None  # engine-clock stamp
+        self._serving = False
+        self._running_view: Dict[int, Request] = {}
         n_slots, max_len = config.n_slots, config.max_len
         eos_id, block_size = config.eos_id, config.paging.block_size
         speculative = config.speculative.k
@@ -452,6 +469,21 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------------
 
+    def live_status(self) -> Dict[str, Any]:
+        """Health view for the live exporter's ``/healthz``: a pure read
+        of host attributes the serve loop maintains (no device syncs, no
+        locks — callable from the exporter thread mid-run)."""
+        now = self._live_now() if self._live_now is not None else None
+        age = None
+        if now is not None and self._last_burst_t is not None:
+            age = round(max(now - self._last_burst_t, 0.0), 6)
+        return {
+            "status": "serving" if self._serving else "idle",
+            "degradation_level": int(self.live_level),
+            "last_burst_age_s": age,
+            "requests_in_flight": len(self._running_view),
+        }
+
     def run(
         self,
         requests: Sequence[Request],
@@ -486,7 +518,22 @@ class ContinuousEngine:
             else None
         )
         sched = Scheduler.from_config(self.config, allocator)
-        metrics = ServingMetrics(b)
+        obs = self.config.observability
+        metrics = ServingMetrics(
+            b, window=obs.window_s, window_subs=obs.window_subs
+        )
+        # retained on the engine so the live exporter (and the router's
+        # fleet merge) can read rolling-window state mid-run
+        self.metrics = metrics
+        rec = (
+            FlightRecorder(obs.flight_recorder_events)
+            if obs.recorder_active
+            else None
+        )
+        self.recorder = rec
+        pm_dir = obs.postmortem_dir
+        if pm_dir:
+            os.makedirs(pm_dir, exist_ok=True)
         compiles0 = (
             self.retrace_guard.compiles()
             if self.retrace_guard is not None
@@ -495,6 +542,27 @@ class ContinuousEngine:
         guard = self.guard
         faults = self.faults
         tr0 = self.tracer
+
+        def postmortem(req: Request, t: float) -> None:
+            """Dump a terminal request's flight-recorder bundle (FAILED /
+            EXPIRED / ABORTED terminals only) and forget its ring. The
+            write is atomic (temp + rename), so a chaos crash mid-dump
+            never leaves a truncated bundle."""
+            if rec is None:
+                return
+            if pm_dir:
+                ctx: Dict[str, Any] = {
+                    "t": round(t, 6),
+                    "degradation_level": int(self.live_level),
+                    "queue_depth": sched.queue_depth(),
+                }
+                if faults is not None:
+                    ctx["faults"] = faults.summary()
+                atomic_write_json(
+                    os.path.join(pm_dir, f"postmortem_rid{req.rid}.json"),
+                    rec.bundle(req, ctx),
+                )
+            rec.discard(req.rid)
 
         def submit(r: Request) -> bool:
             """Submit one request; a never-admittable one (block need
@@ -508,6 +576,13 @@ class ContinuousEngine:
             ):
                 r.deadline = r.arrival + guard.default_ttl
             metrics.on_submit(r.rid, r.arrival)
+            if rec is not None:
+                rec.record(
+                    r.rid, r.arrival, "submit",
+                    prompt_len=len(r.prompt),
+                    max_new_tokens=r.max_new_tokens,
+                    deadline=r.deadline,
+                )
             try:
                 sched.submit(r)
             except NeverAdmittable as e:
@@ -518,6 +593,11 @@ class ContinuousEngine:
                     tr0.instant(
                         "failed_submit", QUEUE_TID, r.arrival, {"rid": r.rid}
                     )
+                if rec is not None:
+                    rec.record(
+                        r.rid, r.arrival, "failed_submit", error=str(e)
+                    )
+                    postmortem(r, r.arrival)
                 return False
             return True
 
@@ -539,6 +619,15 @@ class ContinuousEngine:
             if guard is not None and guard.degradation
             else None
         )
+        slo = None
+        if obs.slo_active and ladder is not None:
+            # lazy import: slo.py imports the metrics facade this module
+            # already constructed
+            from repro.serving.slo import SloMonitor
+
+            slo = SloMonitor(obs, metrics)
+            ladder.add_pressure_source(slo.pressure)
+        self.live_level = 0
         base_reserve = sched.decode_reserve
         wd_pressure = 0.0  # decaying pressure bump from watchdog trips
 
@@ -617,6 +706,16 @@ class ContinuousEngine:
 
         def now() -> float:
             return self._clock() - t0
+
+        # live-exporter hooks: the engine clock, the running view, and
+        # fault visibility. All host-side state the exporter thread reads
+        # without touching the device or the serve loop.
+        self._live_now = now
+        self._last_burst_t = None
+        self._running_view = running
+        self._serving = True
+        if faults is not None:
+            faults.on_fire = lambda site: metrics.on_fault(site, now())
 
         tr = self.tracer
         span_start: Dict[int, float] = {}  # slot -> running-span start
@@ -706,6 +805,8 @@ class ContinuousEngine:
             active = active.at[victim].set(False)
             t_ev = now()
             metrics.on_preempt(req.rid, t_ev)
+            if rec is not None:
+                rec.record(req.rid, t_ev, "preempt", emitted=em)
             if tr is not None:
                 tr.instant(
                     "preempt", slot_tid(victim), t_ev,
@@ -798,6 +899,9 @@ class ContinuousEngine:
                         tr.instant(
                             "expire", QUEUE_TID, t_round, {"rid": req.rid}
                         )
+                    if rec is not None:
+                        rec.record(req.rid, t_round, "expire", where="queued")
+                        postmortem(req, t_round)
                 # host-side cancellation of running slots past deadline
                 expired_slots = sched.expired_running(t_round)
                 for slot in expired_slots:
@@ -808,6 +912,11 @@ class ContinuousEngine:
                         keep_tokens=True,
                     )
                     metrics.on_expired(req.rid, t_round)
+                    if rec is not None:
+                        rec.record(
+                            req.rid, t_round, "expire", where="running"
+                        )
+                        postmortem(req, t_round)
                 if paged and expired_slots:
                     push_rows(expired_slots)
             # -- chaos fail points (serving/faults.py) ------------------
@@ -846,13 +955,29 @@ class ContinuousEngine:
                     + wd_pressure
                 )
                 wd_pressure *= 0.5
+                if slo is not None:
+                    # refresh the rolling-window burn before the ladder
+                    # reads it (the monitor is a registered source, so
+                    # update() below sums it into the total)
+                    slo.update(t_round)
+                prev_level = ladder.level
                 level = ladder.update(pressure)
+                self.live_level = level
                 metrics.on_degraded(level, t_round)
                 if tr is not None:
+                    # last_pressure includes registered sources (SLO burn)
                     tr.counter(
                         "degradation", t_round,
-                        level=level, pressure=round(pressure, 3),
+                        level=level, pressure=round(ladder.last_pressure, 3),
                     )
+                if rec is not None and level != prev_level:
+                    # a level change is part of every in-flight request's
+                    # story — stamp it into each ring
+                    for r2 in running.values():
+                        rec.record(
+                            r2.rid, t_round, "degrade",
+                            level=level, prev=prev_level,
+                        )
                 if allocator is not None and allocator.prefix_cache:
                     # level >= 1: stop growing the prefix index under
                     # pressure (existing chains keep serving hits)
@@ -884,6 +1009,9 @@ class ContinuousEngine:
                         tr.instant(
                             "shed", QUEUE_TID, t_round, {"rid": req.rid}
                         )
+                    if rec is not None:
+                        rec.record(req.rid, t_round, "shed")
+                        postmortem(req, t_round)
             if not admits and not running:
                 nxt_arrival = sched.next_arrival()
                 if nxt_arrival is None:
@@ -923,6 +1051,11 @@ class ContinuousEngine:
             for slot, req in admits:
                 t_admit = now()
                 metrics.on_admit(req.rid, t_admit)
+                if rec is not None:
+                    rec.record(
+                        req.rid, t_admit, "admit",
+                        slot=slot, resume=req.n_preemptions > 0,
+                    )
                 if tr is not None:
                     # queued span: submission (arrival) -> this admission
                     tr.complete(
@@ -973,6 +1106,8 @@ class ContinuousEngine:
                     jax.block_until_ready(logits)  # slimcheck: sync-site
                 t_first = now()
                 metrics.on_first_token(req.rid, t_first)
+                if rec is not None:
+                    rec.record(req.rid, t_first, "first_token")
                 if tr is not None:
                     cached = info.cached_len if info is not None else 0
                     tr.complete(
@@ -1043,6 +1178,10 @@ class ContinuousEngine:
                                     "grow", slot_tid(slot), now(),
                                     {"rid": req.rid, "blocks": need},
                                 )
+                            if rec is not None:
+                                rec.record(
+                                    req.rid, now(), "grow", blocks=need
+                                )
                             break
                         victim = sched.pick_victim(
                             {
@@ -1094,6 +1233,11 @@ class ContinuousEngine:
                             "fault_nan_logits", slot_tid(victim), now(),
                             {"rid": running[victim].rid},
                         )
+                    if rec is not None:
+                        rec.record(
+                            running[victim].rid, now(), "fault",
+                            site="nan_logits",
+                        )
                 if paged and faults.should_fire("kv_corrupt"):
                     # corrupt an exclusively-owned (refcount-1) block so
                     # the blast radius is provably one slot: CoW already
@@ -1116,6 +1260,11 @@ class ContinuousEngine:
                             tr.instant(
                                 "fault_kv_corrupt", slot_tid(hit[0]), now(),
                                 {"rid": running[hit[0]].rid, "block": hit[1]},
+                            )
+                        if rec is not None:
+                            rec.record(
+                                running[hit[0]].rid, now(), "fault",
+                                site="kv_corrupt", block=hit[1],
                             )
 
             # degradation level >= 2 swaps the speculative round for the
@@ -1178,6 +1327,7 @@ class ContinuousEngine:
                     (active, emitted, poisoned)
                 )
             phase("verify" if use_spec else "decode")
+            self._last_burst_t = now()  # /healthz liveness stamp
             if tr is not None:
                 tr.complete(
                     "speculative_burst" if use_spec else "decode_burst",
@@ -1198,10 +1348,18 @@ class ContinuousEngine:
                             "watchdog_trip", ENGINE_TID, t_trip,
                             {"burst_s": round(dt_burst, 4)},
                         )
+            fresh_tokens = 0
             for s in running:
                 # host mirror of each slot's position (plen + emitted) —
                 # what the on-demand growth pass plans the next burst from
-                emitted_host[s] = int(host_emitted[s])
+                em = int(host_emitted[s])
+                # per-burst token delta (emitted resets to 0 at admission,
+                # so em only grows within a slot's tenancy): feeds the
+                # rolling tokens/s window from the sync we already paid for
+                fresh_tokens += em - emitted_host[s]
+                emitted_host[s] = em
+            if fresh_tokens > 0:
+                metrics.on_tokens(fresh_tokens, now())
 
             # quarantine pass MUST precede the completion scan: a
             # poisoned row went inactive in-step without emitting, so the
@@ -1217,6 +1375,9 @@ class ContinuousEngine:
                 t_q = now()
                 metrics.on_quarantine(req.rid, t_q)
                 metrics.on_failed(req.rid, t_q)
+                if rec is not None:
+                    rec.record(req.rid, t_q, "quarantine")
+                    postmortem(req, t_q)
             if paged and bad_slots:
                 push_rows(bad_slots)
 
@@ -1235,6 +1396,9 @@ class ContinuousEngine:
                         int(t) for t in host_buf[slot, :n]
                     ]
                     metrics.on_finish(req.rid, t_done, len(req.output))
+                    if rec is not None:
+                        # clean finish: the ring has served its purpose
+                        rec.discard(req.rid)
                     if tr is not None:
                         tr.complete(
                             "request", slot_tid(slot),
@@ -1286,6 +1450,7 @@ class ContinuousEngine:
             allocator.register_new_chains = True
         if guard is not None:
             sched.decode_reserve = base_reserve
+        self._serving = False
         return ContinuousResult(
             requests=list(requests) + flood_extra,
             metrics=summary,

@@ -1,0 +1,453 @@
+"""Live metrics export: Prometheus text exposition, JSON snapshots, a
+pure-stdlib HTTP endpoint, and crash-safe on-disk snapshots.
+
+The exporter is a *read-side* plane over the metrics registry
+(serving/metrics.py): every render walks the registry's instruments and
+formats their current state — counters and gauges as single series,
+histograms (lifetime and rolling-window) as cumulative ``_bucket`` /
+``_sum`` / ``_count`` series, windowed rates as ``_per_s`` gauges — in
+the Prometheus text exposition format 0.0.4. Reads never mutate any
+instrument, so scraping a live engine mid-run is safe by construction;
+the engine's serve loop is never blocked by a scrape (the HTTP server
+runs on its own daemon threads and only ever *reads* host-side Python
+state — no device syncs, no jit interaction).
+
+Three surfaces, all served by ``MetricsServer`` (``launch/serve.py
+--listen :9100``):
+
+* ``/metrics``       — Prometheus text exposition (all instruments,
+  ``repro_``-prefixed; fleet runs label series per replica and add
+  bucket-merged ``replica="fleet"`` histogram series),
+* ``/metrics.json``  — the rolling-window ``live_snapshot`` plus health,
+* ``/healthz``       — degradation level, last-burst age, and a coarse
+  ``status`` (serving / idle).
+
+``SnapshotWriter`` flushes the same JSON snapshot to disk on an interval
+via write-to-temp + atomic rename (``atomic_write_json``), so a killed
+or chaos-stricken run still leaves the last consistent snapshot behind.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import tempfile
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    WindowedHistogram,
+    WindowedRate,
+)
+
+METRIC_PREFIX = "repro_"
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+# one exporter row: (family name, kind, labels, payload)
+Row = Tuple[str, str, Dict[str, str], Dict[str, Any]]
+
+
+def atomic_write_json(path: str, obj: Any) -> None:
+    """Write ``obj`` as JSON via temp file + atomic rename: a reader (or
+    a crash) never sees a partial file, only the previous or the new
+    snapshot."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".snapshot-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition (format 0.0.4)
+# ---------------------------------------------------------------------------
+
+
+def _sanitize(name: str) -> str:
+    """Metric-name charset: [a-zA-Z_:][a-zA-Z0-9_:]*."""
+    out = "".join(c if c.isalnum() or c in "_:" else "_" for c in name)
+    if out and out[0].isdigit():
+        out = "_" + out
+    return out
+
+
+def _escape_label(v: str) -> str:
+    """Label-value escaping per the exposition format: backslash, double
+    quote, and newline."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _labels_text(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(
+        f'{_sanitize(k)}="{_escape_label(str(v))}"'
+        for k, v in sorted(labels.items())
+    )
+    return "{" + inner + "}"
+
+
+def _fmt(v: float) -> str:
+    if isinstance(v, float) and math.isnan(v):
+        return "NaN"
+    if isinstance(v, float) and math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if float(v) == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def registry_rows(
+    registry: MetricsRegistry,
+    now: Optional[float] = None,
+    labels: Optional[Dict[str, str]] = None,
+) -> List[Row]:
+    """Flatten a registry into exporter rows. ``labels`` (e.g.
+    ``{"replica": "0"}``) are added to every row — how the fleet
+    exposition distinguishes replicas under one family name."""
+    extra = labels or {}
+    rows: List[Row] = []
+    for _key, base, lbl, inst in registry.instruments():
+        all_lbl = {**lbl, **extra}
+        if isinstance(inst, Counter):
+            rows.append((base, "counter", all_lbl, {"value": inst.value}))
+        elif isinstance(inst, Gauge):
+            rows.append((base, "gauge", all_lbl, {"value": inst.last}))
+        elif isinstance(inst, Histogram):
+            rows.append((base, "histogram", all_lbl, inst.state()))
+        elif isinstance(inst, WindowedHistogram):
+            rows.append((base, "histogram", all_lbl, inst.state(now)))
+        elif isinstance(inst, WindowedRate):
+            rows.append(
+                (f"{base}_per_s", "gauge", all_lbl, {"value": inst.rate(now)})
+            )
+    return rows
+
+
+def histogram_state_rows(
+    states: Dict[str, Optional[Dict[str, Any]]],
+    labels: Optional[Dict[str, str]] = None,
+) -> List[Row]:
+    """Rows for pre-merged histogram states (the router's bucket-merged
+    fleet distributions)."""
+    rows: List[Row] = []
+    for name, state in sorted(states.items()):
+        if state is not None:
+            rows.append((name, "histogram", dict(labels or {}), state))
+    return rows
+
+
+def render_prometheus(rows: Sequence[Row], prefix: str = METRIC_PREFIX) -> str:
+    """Render exporter rows as Prometheus text exposition. Families
+    (same name) share one ``# TYPE`` line; histogram payloads expand to
+    cumulative ``_bucket{le=...}`` series plus ``_sum``/``_count``. The
+    ``_count`` and ``+Inf`` bucket are both computed from the same
+    bucket sum, so the cumulative invariant holds even if the payload
+    was snapshotted mid-update."""
+    families: Dict[str, Tuple[str, List[Tuple[Dict[str, str], Dict]]]] = {}
+    order: List[str] = []
+    for name, kind, labels, payload in rows:
+        fam = prefix + _sanitize(name)
+        if fam not in families:
+            families[fam] = (kind, [])
+            order.append(fam)
+        elif families[fam][0] != kind:
+            raise ValueError(
+                f"metric family {fam} rendered as both "
+                f"{families[fam][0]} and {kind}"
+            )
+        families[fam][1].append((labels, payload))
+    lines: List[str] = []
+    for fam in order:
+        kind, series = families[fam]
+        lines.append(f"# TYPE {fam} {kind}")
+        for labels, payload in series:
+            if kind == "histogram":
+                counts = payload["counts"]
+                bounds = payload["boundaries"]
+                n = sum(counts)
+                cum = 0
+                for edge, c in zip(bounds, counts, strict=False):
+                    cum += c
+                    le = {**labels, "le": _fmt(float(edge))}
+                    lines.append(f"{fam}_bucket{_labels_text(le)} {cum}")
+                le = {**labels, "le": "+Inf"}
+                lines.append(f"{fam}_bucket{_labels_text(le)} {n}")
+                lines.append(
+                    f"{fam}_sum{_labels_text(labels)} "
+                    f"{_fmt(float(payload['total']))}"
+                )
+                lines.append(f"{fam}_count{_labels_text(labels)} {n}")
+            else:
+                lines.append(
+                    f"{fam}{_labels_text(labels)} "
+                    f"{_fmt(float(payload['value']))}"
+                )
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+# ---------------------------------------------------------------------------
+# Live sources (what the HTTP server and snapshot writer read)
+# ---------------------------------------------------------------------------
+
+
+class EngineLiveSource:
+    """Read-side adapter over one ``ContinuousEngine``. All three views
+    are pure reads of host-side state; before the first run (no metrics
+    yet) they degrade to empty/idle payloads."""
+
+    def __init__(self, engine: Any):
+        self.engine = engine
+
+    def _now(self) -> Optional[float]:
+        now_fn = getattr(self.engine, "_live_now", None)
+        return now_fn() if now_fn is not None else None
+
+    def prometheus(self) -> str:
+        m = self.engine.metrics
+        if m is None:
+            return render_prometheus([])
+        return render_prometheus(registry_rows(m.registry, self._now()))
+
+    def snapshot_json(self) -> Dict[str, Any]:
+        m = self.engine.metrics
+        out: Dict[str, Any] = {"health": self.engine.live_status()}
+        if m is not None:
+            out["live"] = m.live_snapshot(self._now())
+        return out
+
+    def health(self) -> Dict[str, Any]:
+        return self.engine.live_status()
+
+
+class RouterLiveSource:
+    """Read-side adapter over a ``Router`` fleet: per-replica series
+    labelled ``replica="i"`` plus bucket-merged ``replica="fleet"``
+    histogram series, so fleet quantiles come from one merged
+    distribution — never a per-replica max."""
+
+    def __init__(self, router: Any):
+        self.router = router
+
+    def _live(self) -> List[Tuple[int, Any]]:
+        return [
+            (i, eng.metrics)
+            for i, eng in enumerate(self.router.engines)
+            if eng.metrics is not None
+        ]
+
+    def prometheus(self) -> str:
+        rows: List[Row] = []
+        for i, m in self._live():
+            now_fn = getattr(self.router.engines[i], "_live_now", None)
+            now = now_fn() if now_fn is not None else None
+            rows.extend(
+                registry_rows(m.registry, now, labels={"replica": str(i)})
+            )
+        rows.extend(
+            histogram_state_rows(
+                self.router.merged_histogram_states(),
+                labels={"replica": "fleet"},
+            )
+        )
+        return render_prometheus(rows)
+
+    def snapshot_json(self) -> Dict[str, Any]:
+        return {
+            "health": self.health(),
+            "replicas": {
+                str(i): m.live_snapshot() for i, m in self._live()
+            },
+            "fleet": self.router.live_snapshot(),
+        }
+
+    def health(self) -> Dict[str, Any]:
+        statuses = [eng.live_status() for eng in self.router.engines]
+        level = max(
+            (s.get("degradation_level", 0) for s in statuses), default=0
+        )
+        ages = [
+            s["last_burst_age_s"]
+            for s in statuses
+            if s.get("last_burst_age_s") is not None
+        ]
+        return {
+            "status": (
+                "serving"
+                if any(s.get("status") == "serving" for s in statuses)
+                else "idle"
+            ),
+            "degradation_level": level,
+            "last_burst_age_s": min(ages) if ages else None,
+            "n_replicas": len(statuses),
+        }
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoint (pure stdlib, daemon threads)
+# ---------------------------------------------------------------------------
+
+
+def parse_listen(addr: str) -> Tuple[str, int]:
+    """``":9100"`` / ``"0.0.0.0:9100"`` / ``"9100"`` -> (host, port).
+    Empty host binds localhost (scraping a dev run should not open a
+    public port by accident)."""
+    host, sep, port = addr.rpartition(":")
+    if not sep:
+        host, port = "", addr
+    try:
+        port_n = int(port)
+    except ValueError:
+        raise ValueError(f"invalid --listen address {addr!r}") from None
+    return (host or "127.0.0.1", port_n)
+
+
+class MetricsServer:
+    """Threaded stdlib HTTP server over a live source (engine or
+    router). ``port=0`` binds an ephemeral port (tests); ``.port`` holds
+    the bound one. The server threads are daemons and every handler is a
+    pure read, so a wedged scrape can never wedge the serve loop."""
+
+    def __init__(self, source: Any, host: str = "127.0.0.1", port: int = 0):
+        self.source = source
+        src = source
+
+        class _Handler(BaseHTTPRequestHandler):
+            def _send(self, code: int, body: bytes, ctype: str) -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):  # noqa: N802 (stdlib handler contract)
+                path = self.path.split("?", 1)[0]
+                try:
+                    if path == "/metrics":
+                        self._send(
+                            200,
+                            src.prometheus().encode(),
+                            PROMETHEUS_CONTENT_TYPE,
+                        )
+                    elif path == "/metrics.json":
+                        body = json.dumps(
+                            src.snapshot_json(), sort_keys=True
+                        ).encode()
+                        self._send(200, body, "application/json")
+                    elif path == "/healthz":
+                        body = json.dumps(src.health(), sort_keys=True).encode()
+                        self._send(200, body, "application/json")
+                    else:
+                        self._send(404, b"not found\n", "text/plain")
+                except BrokenPipeError:
+                    pass  # scraper went away mid-response
+
+            def log_message(self, *args):  # silence per-request stderr spam
+                pass
+
+        self._server = ThreadingHTTPServer((host, port), _Handler)
+        self._server.daemon_threads = True
+        self.host, self.port = self._server.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._server.serve_forever,
+            name="metrics-server",
+            daemon=True,
+        )
+
+    def start(self) -> "MetricsServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=5.0)
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe periodic snapshots
+# ---------------------------------------------------------------------------
+
+
+class SnapshotWriter:
+    """Flush ``payload_fn()`` to ``path`` atomically every ``interval``
+    seconds on a daemon thread, plus a final flush at ``stop()``. A run
+    killed between flushes leaves the last consistent snapshot on disk
+    (the crash-safety contract of ``--metrics-json``)."""
+
+    def __init__(
+        self,
+        path: str,
+        payload_fn: Callable[[], Any],
+        interval: float = 1.0,
+    ):
+        if interval <= 0:
+            raise ValueError("interval must be > 0 seconds")
+        self.path = path
+        self.payload_fn = payload_fn
+        self.interval = interval
+        self.flushes = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._loop, name="snapshot-writer", daemon=True
+        )
+
+    def _flush(self) -> None:
+        try:
+            atomic_write_json(self.path, self.payload_fn())
+            self.flushes += 1
+        except Exception:
+            # a transient render race or full disk must not kill the
+            # writer loop — the next interval retries
+            pass
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval):
+            self._flush()
+
+    def start(self) -> "SnapshotWriter":
+        self._thread.start()
+        return self
+
+    def stop(self, final_payload: Optional[Any] = None) -> None:
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        if final_payload is not None:
+            atomic_write_json(self.path, final_payload)
+        else:
+            self._flush()
+
+
+__all__ = [
+    "METRIC_PREFIX",
+    "PROMETHEUS_CONTENT_TYPE",
+    "atomic_write_json",
+    "registry_rows",
+    "histogram_state_rows",
+    "render_prometheus",
+    "parse_listen",
+    "EngineLiveSource",
+    "RouterLiveSource",
+    "MetricsServer",
+    "SnapshotWriter",
+    "merge_histogram_states",
+    "quantile_of_state",
+]

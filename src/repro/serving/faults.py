@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 # the engine's fail-point sites, in hook order around the serve loop
 FAULT_SITES = (
@@ -95,6 +95,11 @@ class FaultPlan:
         self._rng: Dict[str, random.Random] = {
             site: random.Random(f"{seed}:{site}") for site in self.specs
         }
+        # fired-site hook: the engine points this at the metrics facade so
+        # every firing lands as a live `fault_fired{site=...}` counter the
+        # exporter can serve mid-run (the end-of-run summary() keys only
+        # exist once the run returns)
+        self.on_fire: Optional[Callable[[str], None]] = None
 
     def should_fire(self, site: str, arg_default: int = 0) -> int:
         """Check the fail point ``site``. Returns 0 when no spec fires;
@@ -117,6 +122,8 @@ class FaultPlan:
                 continue
             self._fired_of[id(spec)] = fired + 1
             self.fired[site] += 1
+            if self.on_fire is not None:
+                self.on_fire(site)
             return max(spec.arg or arg_default, 1)
         return 0
 

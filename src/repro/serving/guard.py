@@ -99,6 +99,15 @@ class DegradationLadder:
     down when ``pressure < exit[level - 1]``. One step per round keeps
     the engine's reaction smooth under a pressure spike and makes the
     recovery trajectory testable round by round.
+
+    **Pressure sources.** Beyond the scalar the caller passes (queue
+    backlog + deadline urgency + watchdog bumps), additional sources
+    register via ``add_pressure_source(fn)`` — each is a zero-argument
+    callable returning a non-negative pressure contribution, summed into
+    every ``update``. The SLO monitor (serving/slo.py) is the first
+    consumer: a measured error-budget burn walks the ladder even when
+    backlog alone wouldn't. ``last_pressure`` exposes the total the last
+    ``update`` acted on (telemetry reads it instead of re-deriving).
     """
 
     def __init__(
@@ -113,8 +122,17 @@ class DegradationLadder:
         self.level = 0
         self.max_level = len(self.enter)
         self.transitions = 0  # level changes (both directions)
+        self.last_pressure = 0.0  # total pressure at the last update
+        self._sources: list = []  # extra pressure callables, summed in
+
+    def add_pressure_source(self, fn) -> None:
+        """Register ``fn() -> float`` as an additional pressure term."""
+        self._sources.append(fn)
 
     def update(self, pressure: float) -> int:
+        for fn in self._sources:
+            pressure += fn()
+        self.last_pressure = pressure
         if self.level < self.max_level and pressure >= self.enter[self.level]:
             self.level += 1
             self.transitions += 1

@@ -104,6 +104,36 @@ def _quantile(xs: Sequence[float], q: float) -> float:
     return ys[idx]
 
 
+def _bucket_quantile(
+    counts: Sequence[int],
+    boundaries: Sequence[float],
+    n: int,
+    mn: float,
+    mx: float,
+    q: float,
+) -> float:
+    """Quantile of a bucketed distribution: linear interpolation inside
+    the bucket holding the target rank, clipped to the observed [mn, mx]
+    range — error bounded by that bucket's width. Shared by ``Histogram``
+    (streaming mode), ``WindowedHistogram``, and the fleet merge."""
+    if n == 0:
+        return float("nan")
+    rank = min(n - 1, max(0, math.ceil(q * n) - 1))
+    seen = 0
+    for i, c in enumerate(counts):
+        if rank < seen + c:
+            lo = boundaries[i - 1] if i > 0 else mn
+            hi = boundaries[i] if i < len(boundaries) else mx
+            lo = max(lo, mn)
+            hi = min(hi, mx)
+            if c == 1 or hi <= lo:
+                return min(max(lo, mn), mx)
+            frac = (rank - seen + 0.5) / c
+            return lo + frac * (hi - lo)
+        seen += c
+    return mx  # unreachable: ranks are < n
+
+
 # ---------------------------------------------------------------------------
 # Instruments
 # ---------------------------------------------------------------------------
@@ -232,22 +262,9 @@ class Histogram:
 
     def quantile_est(self, q: float) -> float:
         """Bucket-interpolated quantile (the streaming estimate)."""
-        if self.n == 0:
-            return float("nan")
-        rank = min(self.n - 1, max(0, math.ceil(q * self.n) - 1))
-        seen = 0
-        for i, c in enumerate(self.counts):
-            if rank < seen + c:
-                lo = self.boundaries[i - 1] if i > 0 else self._min
-                hi = self.boundaries[i] if i < len(self.boundaries) else self._max
-                lo = max(lo, self._min)
-                hi = min(hi, self._max)
-                if c == 1 or hi <= lo:
-                    return min(max(lo, self._min), self._max)
-                frac = (rank - seen + 0.5) / c
-                return lo + frac * (hi - lo)
-            seen += c
-        return self._max  # unreachable: ranks are < n
+        return _bucket_quantile(
+            self.counts, self.boundaries, self.n, self._min, self._max, q
+        )
 
     def snapshot(self) -> Dict[str, float]:
         return {
@@ -258,13 +275,272 @@ class Histogram:
             "p99": self.quantile(0.99),
         }
 
+    def state(self) -> Dict[str, object]:
+        """The histogram's full distribution as plain JSON types — what
+        the fleet merge (``merge_histogram_states``) and the live
+        exporter consume. ``min``/``max`` are ``None`` when empty (the
+        infinities don't survive JSON)."""
+        return {
+            "boundaries": list(self.boundaries),
+            "counts": list(self.counts),
+            "n": self.n,
+            "total": self.total,
+            "min": self._min if self.n else None,
+            "max": self._max if self.n else None,
+            "samples": (
+                list(self._samples) if self._samples is not None else None
+            ),
+        }
+
+
+class WindowedHistogram:
+    """Rolling-window histogram: a ring of ``n_sub`` sub-window buckets
+    on the engine clock, so quantiles cover the *last* ``window`` seconds
+    instead of the run's lifetime.
+
+    ``observe(x, t)`` lands the sample in the sub-window holding ``t``
+    (each ``window / n_sub`` seconds wide); a ring slot is reset lazily
+    when its epoch comes back around, so there is no timer thread and
+    reads never mutate state. A snapshot at time ``now`` merges the
+    sub-windows whose epochs fall inside ``[now - window, now]`` —
+    samples expire with sub-window granularity (a sample drops out
+    between ``window`` and ``window + window/n_sub`` seconds after it
+    was observed). No raw samples are kept: quantiles interpolate inside
+    the merged buckets, with error bounded by one bucket width (the
+    property tests pin this against exact order statistics)."""
+
+    __slots__ = (
+        "name",
+        "boundaries",
+        "window",
+        "n_sub",
+        "sub",
+        "_epoch",
+        "_counts",
+        "_n",
+        "_total",
+        "_min",
+        "_max",
+        "_t_last",
+    )
+
+    def __init__(
+        self,
+        name: str,
+        window: float = 60.0,
+        n_sub: int = 12,
+        boundaries: Sequence[float] = DEFAULT_TIME_BUCKETS,
+    ):
+        bounds = tuple(float(b) for b in boundaries)
+        if not bounds or any(
+            b2 <= b1 for b1, b2 in zip(bounds, bounds[1:], strict=False)
+        ):
+            raise ValueError("boundaries must be non-empty and ascending")
+        if window <= 0:
+            raise ValueError("window must be > 0 seconds")
+        if n_sub < 1:
+            raise ValueError("n_sub must be >= 1")
+        self.name = name
+        self.boundaries = bounds
+        self.window = float(window)
+        self.n_sub = int(n_sub)
+        self.sub = self.window / self.n_sub
+        self._epoch = [-1] * self.n_sub
+        self._counts = [[0] * (len(bounds) + 1) for _ in range(self.n_sub)]
+        self._n = [0] * self.n_sub
+        self._total = [0.0] * self.n_sub
+        self._min = [math.inf] * self.n_sub
+        self._max = [-math.inf] * self.n_sub
+        self._t_last = 0.0
+
+    def observe(self, x: float, t: float) -> None:
+        if math.isnan(x):
+            return
+        t = max(t, 0.0)
+        self._t_last = max(self._t_last, t)
+        epoch = int(t / self.sub)
+        i = epoch % self.n_sub
+        if self._epoch[i] > epoch:
+            return  # older than the whole ring: nothing to record it in
+        if self._epoch[i] != epoch:
+            self._epoch[i] = epoch
+            self._counts[i] = [0] * (len(self.boundaries) + 1)
+            self._n[i] = 0
+            self._total[i] = 0.0
+            self._min[i] = math.inf
+            self._max[i] = -math.inf
+        lo, hi = 0, len(self.boundaries)
+        while lo < hi:  # first bucket whose upper edge holds x
+            mid = (lo + hi) // 2
+            if x <= self.boundaries[mid]:
+                hi = mid
+            else:
+                lo = mid + 1
+        self._counts[i][lo] += 1
+        self._n[i] += 1
+        self._total[i] += x
+        self._min[i] = min(self._min[i], x)
+        self._max[i] = max(self._max[i], x)
+
+    def merged(
+        self, now: Optional[float] = None
+    ) -> Tuple[List[int], int, float, float, float]:
+        """The live window's merged distribution at ``now`` (default:
+        the last observed timestamp): ``(counts, n, total, min, max)``.
+        Pure read — snapshots never perturb the ring."""
+        eff = self._t_last if now is None else max(now, 0.0)
+        cur = int(eff / self.sub)
+        lo = cur - self.n_sub + 1
+        counts = [0] * (len(self.boundaries) + 1)
+        n, total = 0, 0.0
+        mn, mx = math.inf, -math.inf
+        for i in range(self.n_sub):
+            e = self._epoch[i]
+            if e < 0 or e < lo or e > cur:
+                continue
+            for j, c in enumerate(self._counts[i]):
+                counts[j] += c
+            n += self._n[i]
+            total += self._total[i]
+            mn = min(mn, self._min[i])
+            mx = max(mx, self._max[i])
+        return counts, n, total, mn, mx
+
+    def count(self, now: Optional[float] = None) -> int:
+        return self.merged(now)[1]
+
+    def mean(self, now: Optional[float] = None) -> float:
+        _, n, total, _, _ = self.merged(now)
+        return total / n if n else float("nan")
+
+    def quantile(self, q: float, now: Optional[float] = None) -> float:
+        counts, n, _, mn, mx = self.merged(now)
+        return _bucket_quantile(counts, self.boundaries, n, mn, mx, q)
+
+    def fraction_above(self, x: float, now: Optional[float] = None) -> float:
+        """Fraction of windowed samples above ``x``, interpolating inside
+        the bucket straddling it — the SLO monitor's error-budget signal
+        (e.g. fraction of TTFTs above the p95 target)."""
+        counts, n, _, mn, mx = self.merged(now)
+        if n == 0:
+            return 0.0
+        above = 0.0
+        for i, c in enumerate(counts):
+            if not c:
+                continue
+            lo = self.boundaries[i - 1] if i > 0 else mn
+            hi = self.boundaries[i] if i < len(self.boundaries) else mx
+            lo = max(lo, mn)
+            hi = min(hi, mx)
+            if hi <= lo:  # degenerate bucket: a point mass at lo
+                above += c if x < lo else 0
+            elif x < lo:
+                above += c
+            elif x >= hi:
+                pass
+            else:
+                above += c * (hi - x) / (hi - lo)
+        return above / n
+
+    def snapshot(self, now: Optional[float] = None) -> Dict[str, float]:
+        counts, n, total, mn, mx = self.merged(now)
+        return {
+            "n": float(n),
+            "mean": total / n if n else float("nan"),
+            "p50": _bucket_quantile(counts, self.boundaries, n, mn, mx, 0.50),
+            "p95": _bucket_quantile(counts, self.boundaries, n, mn, mx, 0.95),
+            "p99": _bucket_quantile(counts, self.boundaries, n, mn, mx, 0.99),
+        }
+
+    def state(self, now: Optional[float] = None) -> Dict[str, object]:
+        """Merged-window distribution as plain JSON types (exporter /
+        fleet-merge format; same shape as ``Histogram.state``)."""
+        counts, n, total, mn, mx = self.merged(now)
+        return {
+            "boundaries": list(self.boundaries),
+            "counts": counts,
+            "n": n,
+            "total": total,
+            "min": mn if n else None,
+            "max": mx if n else None,
+            "samples": None,
+        }
+
+
+class WindowedRate:
+    """Rolling-window event rate: per-sub-window sums on the same lazy
+    ring as ``WindowedHistogram``. ``add(n, t)`` accumulates; ``rate``
+    divides the windowed total by the elapsed window span (clamped to
+    ``[window/n_sub, window]`` so an early-run rate is not diluted by
+    time that has not passed yet)."""
+
+    __slots__ = ("name", "window", "n_sub", "sub", "_epoch", "_sums", "_t_last")
+
+    def __init__(self, name: str, window: float = 60.0, n_sub: int = 12):
+        if window <= 0:
+            raise ValueError("window must be > 0 seconds")
+        if n_sub < 1:
+            raise ValueError("n_sub must be >= 1")
+        self.name = name
+        self.window = float(window)
+        self.n_sub = int(n_sub)
+        self.sub = self.window / self.n_sub
+        self._epoch = [-1] * self.n_sub
+        self._sums = [0.0] * self.n_sub
+        self._t_last = 0.0
+
+    def add(self, n: float, t: float) -> None:
+        t = max(t, 0.0)
+        self._t_last = max(self._t_last, t)
+        epoch = int(t / self.sub)
+        i = epoch % self.n_sub
+        if self._epoch[i] > epoch:
+            return  # older than the whole ring
+        if self._epoch[i] != epoch:
+            self._epoch[i] = epoch
+            self._sums[i] = 0.0
+        self._sums[i] += n
+
+    def total(self, now: Optional[float] = None) -> float:
+        eff = self._t_last if now is None else max(now, 0.0)
+        cur = int(eff / self.sub)
+        lo = cur - self.n_sub + 1
+        return sum(
+            s
+            for e, s in zip(self._epoch, self._sums, strict=True)
+            if 0 <= e and lo <= e <= cur
+        )
+
+    def rate(self, now: Optional[float] = None) -> float:
+        eff = self._t_last if now is None else max(now, 0.0)
+        span = min(max(eff, self.sub), self.window)
+        return self.total(now) / span
+
+    def snapshot(self, now: Optional[float] = None) -> Dict[str, float]:
+        return {"total": self.total(now), "per_s": self.rate(now)}
+
+
+def _labeled_key(name: str, labels: Optional[Dict[str, str]]) -> str:
+    """Full registry key for a (name, labels) pair — Prometheus-style
+    ``name{k="v",...}`` with sorted label names, so the same label set
+    always maps to the same instrument."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return f"{name}{{{inner}}}"
+
 
 class MetricsRegistry:
     """Name-keyed instrument store; getters are get-or-create so call
-    sites never pre-declare, and a name is pinned to its first kind."""
+    sites never pre-declare, and a name is pinned to its first kind.
+    ``labels`` (counters) key distinct instruments under one base name —
+    the exporter renders them as one labelled Prometheus family."""
 
     def __init__(self):
         self._instruments: Dict[str, object] = {}
+        # full key -> (base name, labels) for labelled instruments; the
+        # exporter reads this to reassemble label sets per family
+        self._labels: Dict[str, Tuple[str, Dict[str, str]]] = {}
 
     def _get(self, name: str, kind, *args, **kw):
         inst = self._instruments.get(name)
@@ -278,8 +554,13 @@ class MetricsRegistry:
             )
         return inst
 
-    def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+    def counter(
+        self, name: str, labels: Optional[Dict[str, str]] = None
+    ) -> Counter:
+        key = _labeled_key(name, labels)
+        if labels:
+            self._labels[key] = (name, dict(labels))
+        return self._get(key, Counter)
 
     def gauge(self, name: str) -> Gauge:
         return self._get(name, Gauge)
@@ -292,15 +573,43 @@ class MetricsRegistry:
     ) -> Histogram:
         return self._get(name, Histogram, boundaries, track_exact)
 
+    def windowed_histogram(
+        self,
+        name: str,
+        window: float = 60.0,
+        n_sub: int = 12,
+        boundaries: Sequence[float] = DEFAULT_TIME_BUCKETS,
+    ) -> WindowedHistogram:
+        return self._get(name, WindowedHistogram, window, n_sub, boundaries)
+
+    def windowed_rate(
+        self, name: str, window: float = 60.0, n_sub: int = 12
+    ) -> WindowedRate:
+        return self._get(name, WindowedRate, window, n_sub)
+
     def names(self) -> List[str]:
         return sorted(self._instruments)
 
-    def snapshot(self) -> Dict[str, Dict[str, float]]:
-        """Per-instrument summaries, keyed ``kind/name``."""
+    def instruments(self):
+        """Iterate ``(key, base_name, labels, instrument)`` rows sorted
+        by key — the exporter's view of the registry."""
+        for key in sorted(self._instruments):
+            base, labels = self._labels.get(key, (key, {}))
+            yield key, base, labels, self._instruments[key]
+
+    def snapshot(
+        self, now: Optional[float] = None
+    ) -> Dict[str, Dict[str, float]]:
+        """Per-instrument summaries, keyed ``kind/name``. ``now`` (engine
+        clock) selects the windowed instruments' evaluation time; reads
+        never mutate any instrument, so this is safe mid-run."""
         out = {}
         for name, inst in sorted(self._instruments.items()):
             kind = type(inst).__name__.lower()
-            out[f"{kind}/{name}"] = inst.snapshot()
+            if isinstance(inst, (WindowedHistogram, WindowedRate)):
+                out[f"{kind}/{name}"] = inst.snapshot(now)
+            else:
+                out[f"{kind}/{name}"] = inst.snapshot()
         return out
 
 
@@ -310,7 +619,12 @@ class MetricsRegistry:
 
 
 class ServingMetrics:
-    def __init__(self, n_slots: int):
+    def __init__(
+        self,
+        n_slots: int,
+        window: float = 60.0,
+        window_subs: int = 12,
+    ):
         self.n_slots = n_slots
         self.requests: Dict[int, RequestTrace] = {}
         self.end_time: float = 0.0
@@ -348,6 +662,20 @@ class ServingMetrics:
         self._ttft = r.histogram("ttft_s")
         self._latency = r.histogram("latency_s")
         self._tpot = r.histogram("tpot_s")
+        # rolling-window instruments (the live plane): last-N-seconds
+        # views of the same events, readable mid-run without perturbing
+        # anything — docs/observability.md §Live plane
+        self.window = float(window)
+        self._w_ttft = r.windowed_histogram("window_ttft_s", window, window_subs)
+        self._w_tpot = r.windowed_histogram("window_tpot_s", window, window_subs)
+        self._w_tokens = r.windowed_rate("window_tokens", window, window_subs)
+        self._w_arrivals = r.windowed_rate("window_arrivals", window, window_subs)
+        self._w_shed = r.windowed_rate("window_shed", window, window_subs)
+        self._w_expired = r.windowed_rate("window_expired", window, window_subs)
+        # token emission total (monotone companion of the windowed rate)
+        self._tokens_emitted = r.counter("tokens_emitted")
+        # chaos: per-site fired counters, labelled for /metrics
+        self._fault_fired: Dict[str, Counter] = {}
 
     # -- back-compat views -------------------------------------------------
 
@@ -381,6 +709,7 @@ class ServingMetrics:
 
     def on_submit(self, rid: int, arrival: float) -> None:
         self.requests[rid] = RequestTrace(arrival=arrival)
+        self._w_arrivals.add(1, arrival)
         self._touch(arrival)
 
     def on_admit(self, rid: int, t: float) -> None:
@@ -392,6 +721,7 @@ class ServingMetrics:
         if tr.first_token is None:  # a resume prefill keeps the first TTFT
             tr.first_token = t
             self._ttft.observe(tr.ttft)
+            self._w_ttft.observe(tr.ttft, t)
         self._touch(t)
 
     def on_finish(self, rid: int, t: float, n_tokens: int) -> None:
@@ -401,7 +731,17 @@ class ServingMetrics:
         self._latency.observe(tr.latency)
         if tr.tpot is not None:
             self._tpot.observe(tr.tpot)
+            self._w_tpot.observe(tr.tpot, t)
         self._touch(t)
+
+    def on_tokens(self, n: int, t: float) -> None:
+        """Record ``n`` freshly emitted tokens at engine time ``t`` —
+        the rolling tokens/s signal. Fed from the per-burst host mirror,
+        so it costs no extra device sync."""
+        if n > 0:
+            self._tokens_emitted.inc(n)
+            self._w_tokens.add(n, t)
+            self._touch(t)
 
     def on_occupancy(self, active_slots: float) -> None:
         self._occupancy.set(active_slots)
@@ -452,13 +792,27 @@ class ServingMetrics:
         """A queued request was dropped by bounded-queue load shedding
         (terminal state ABORTED; it never ran)."""
         self._shed.inc()
+        self._w_shed.add(1, t)
         self._touch(t)
 
     def on_expired(self, rid: int, t: float) -> None:
         """A request outlived its deadline — reaped from the queue or
         host-cancelled mid-decode (terminal state EXPIRED)."""
         self._expired.inc()
+        self._w_expired.add(1, t)
         self._touch(t)
+
+    def on_fault(self, site: str, t: Optional[float] = None) -> None:
+        """A chaos fail point fired: count it per-site under the
+        labelled ``fault_fired{site=...}`` counter family, so live chaos
+        runs are inspectable from ``/metrics``."""
+        c = self._fault_fired.get(site)
+        if c is None:
+            c = self.registry.counter("fault_fired", labels={"site": site})
+            self._fault_fired[site] = c
+        c.inc()
+        if t is not None:
+            self._touch(t)
 
     def on_failed(self, rid: int, t: float) -> None:
         """The engine gave up on a request (terminal state FAILED):
@@ -523,7 +877,54 @@ class ServingMetrics:
     # -- summary -----------------------------------------------------------
 
     def total_tokens(self) -> int:
-        return sum(tr.n_tokens for tr in self.requests.values())
+        # list() first: the exporter thread reads this mid-run while the
+        # serve loop inserts new requests, and dict iteration during an
+        # insert raises
+        return sum(tr.n_tokens for tr in list(self.requests.values()))
+
+    def live_snapshot(self, now: Optional[float] = None) -> Dict[str, float]:
+        """The rolling-window view at engine time ``now`` (default: the
+        last event's timestamp) plus enough lifetime context to read a
+        ``/metrics.json`` scrape standalone. Pure read — callable from
+        the exporter thread mid-run without perturbing the registry."""
+        t = self.end_time if now is None else now
+        arrivals = self._w_arrivals.total(t)
+        shed = self._w_shed.total(t)
+        reqs = list(self.requests.values())
+        return {
+            "now_s": t,
+            "window_s": self.window,
+            "window_ttft_n": float(self._w_ttft.count(t)),
+            "window_mean_ttft_s": self._w_ttft.mean(t),
+            "window_p50_ttft_s": self._w_ttft.quantile(0.50, t),
+            "window_p95_ttft_s": self._w_ttft.quantile(0.95, t),
+            "window_tpot_n": float(self._w_tpot.count(t)),
+            "window_p50_tpot_s": self._w_tpot.quantile(0.50, t),
+            "window_p95_tpot_s": self._w_tpot.quantile(0.95, t),
+            "window_tokens_per_s": self._w_tokens.rate(t),
+            "window_arrivals_per_s": self._w_arrivals.rate(t),
+            "window_shed_per_s": self._w_shed.rate(t),
+            "window_expired_per_s": self._w_expired.rate(t),
+            "window_shed_rate": shed / arrivals if arrivals else 0.0,
+            # lifetime context
+            "n_requests": float(len(reqs)),
+            "completed": float(self._latency.n),
+            "tokens_emitted": self._tokens_emitted.value,
+            "queue_depth": self._queue_depth.last,
+            "degradation_level": self._degradation_level.last,
+            "shed_requests": self._shed.value,
+            "expired_requests": self._expired.value,
+            "failed_requests": self._failed.value,
+        }
+
+    def histogram_states(self) -> Dict[str, Dict[str, object]]:
+        """The latency-family histograms' full distributions, keyed by
+        name — what the router merges bucket-wise for fleet quantiles."""
+        return {
+            "ttft_s": self._ttft.state(),
+            "latency_s": self._latency.state(),
+            "tpot_s": self._tpot.state(),
+        }
 
     def summary(self) -> Dict[str, float]:
         dur = max(self.end_time, 1e-9)
@@ -600,20 +1001,33 @@ class ServingMetrics:
 # Fleet aggregation (serving/router.py)
 # ---------------------------------------------------------------------------
 
-# summary keys that take the max across replicas: wall-clock span, peaks,
-# and quantiles (the fleet's p95 is conservatively bounded by the worst
-# replica's — exact fleet quantiles would need the raw samples)
+# summary keys that take the max across replicas: the wall-clock span
+# (replicas run side by side) and every ``peak_*`` key
 _MERGE_MAX = {
     "duration_s",
-    "p50_ttft_s",
-    "p95_ttft_s",
-    "p99_ttft_s",
-    "p50_latency_s",
-    "p95_latency_s",
-    "p99_latency_s",
-    "tpot_p50_s",
-    "tpot_p95_s",
-    "tpot_p99_s",
+}
+
+# latency-quantile keys -> (histogram name, quantile). With per-replica
+# histogram states the fleet value is recomputed from the *merged*
+# distribution (max-of-p95s is not the fleet p95); the old max lands
+# under ``<key>_peak`` (worst replica) either way.
+_QUANTILE_KEYS = {
+    "p50_ttft_s": ("ttft_s", 0.50),
+    "p95_ttft_s": ("ttft_s", 0.95),
+    "p99_ttft_s": ("ttft_s", 0.99),
+    "p50_latency_s": ("latency_s", 0.50),
+    "p95_latency_s": ("latency_s", 0.95),
+    "p99_latency_s": ("latency_s", 0.99),
+    "tpot_p50_s": ("tpot_s", 0.50),
+    "tpot_p95_s": ("tpot_s", 0.95),
+    "tpot_p99_s": ("tpot_s", 0.99),
+}
+
+# latency means -> histogram whose merged total/n recomputes them exactly
+_MEAN_HIST_KEYS = {
+    "mean_ttft_s": "ttft_s",
+    "mean_latency_s": "latency_s",
+    "mean_tpot_s": "tpot_s",
 }
 
 # weighted means: key -> the summary key whose value weights it
@@ -627,33 +1041,118 @@ _MERGE_WEIGHTED = {
 }
 
 
+def merge_histogram_states(
+    states: Sequence[Optional[Dict[str, object]]],
+) -> Optional[Dict[str, object]]:
+    """Merge per-replica ``Histogram.state()`` dicts bucket-wise into one
+    fleet distribution. All replicas share the same fixed edges (they are
+    built from one config), so counts sum element-wise; raw samples
+    concatenate when every contributing state kept them (then fleet
+    quantiles are exact order statistics). Empty/missing states drop
+    out; returns ``None`` when nothing contributed."""
+    live = [s for s in states if s and s.get("n")]
+    if not live:
+        return None
+    bounds = live[0]["boundaries"]
+    for s in live[1:]:
+        if s["boundaries"] != bounds:
+            raise ValueError(
+                "cannot merge histograms with different bucket boundaries"
+            )
+    counts = [
+        sum(s["counts"][i] for s in live) for i in range(len(bounds) + 1)
+    ]
+    samples = None
+    if all(s.get("samples") is not None for s in live):
+        samples = [x for s in live for x in s["samples"]]
+    return {
+        "boundaries": list(bounds),
+        "counts": counts,
+        "n": sum(s["n"] for s in live),
+        "total": sum(s["total"] for s in live),
+        "min": min(s["min"] for s in live),
+        "max": max(s["max"] for s in live),
+        "samples": samples,
+    }
+
+
+def quantile_of_state(state: Optional[Dict[str, object]], q: float) -> float:
+    """Quantile of a ``Histogram.state()`` dict: exact when raw samples
+    survived the merge, bucket-interpolated otherwise."""
+    if state is None or not state["n"]:
+        return float("nan")
+    if state.get("samples"):
+        return _quantile(state["samples"], q)
+    return _bucket_quantile(
+        state["counts"],
+        tuple(state["boundaries"]),
+        state["n"],
+        state["min"],
+        state["max"],
+        q,
+    )
+
+
 def merge_replica_summaries(
     summaries: Sequence[Dict[str, float]],
+    histograms: Optional[
+        Sequence[Optional[Dict[str, Dict[str, object]]]]
+    ] = None,
 ) -> Dict[str, float]:
     """Fold per-replica ``ServingMetrics.summary()`` dicts into one
     fleet-level summary (the aggregate half of ``RouterResult.metrics``).
 
     Each replica runs on its own clock, so ``tokens_per_s`` *sums* — the
     fleet's aggregate throughput is what N side-by-side replicas deliver
-    — while ``duration_s`` and the peaks/quantiles take the max. Count
-    keys (requests, tokens, preemptions, phase seconds, fault counters,
+    — while ``duration_s`` and the peaks take the max. Count keys
+    (requests, tokens, preemptions, phase seconds, fault counters,
     anything not otherwise classified) sum; per-replica means recombine
     weighted by their natural denominator (completed requests for
     latency-family means, tokens for occupancy, duration for the backlog
     gauges). The two hit-rate keys are recomputed from the summed
     numerators/denominators so the fleet rate is token-weighted, not an
-    average of averages."""
+    average of averages.
+
+    **Fleet quantiles.** ``histograms`` (one ``histogram_states()`` dict
+    per summary, aligned; ``Router.run`` passes it) merges the underlying
+    distributions bucket-wise and recomputes the latency quantiles from
+    the *merged* distribution — the max of per-replica p95s is not the
+    fleet p95 (a replica serving 5% of traffic badly dominates it).
+    Every quantile key additionally lands under ``<key>_peak`` carrying
+    the old worst-replica max; without ``histograms`` the primary key
+    falls back to that max (conservative, as before)."""
     keys: List[str] = []
     for s in summaries:
         for k in s:
             if k not in keys:
                 keys.append(k)
+    merged_hists: Dict[str, Optional[Dict[str, object]]] = {}
+    if histograms is not None:
+        per_rep = [h or {} for h in histograms]
+        for name in {nm for h in per_rep for nm in h}:
+            merged_hists[name] = merge_histogram_states(
+                [h.get(name) for h in per_rep]
+            )
     out: Dict[str, float] = {}
     for k in keys:
         vals = [(s[k], s) for s in summaries if k in s]
-        if k in _MERGE_MAX or k.startswith("peak_"):
+        if k in _QUANTILE_KEYS:
+            finite = [v for v, _ in vals if not math.isnan(v)]
+            peak = max(finite) if finite else float("nan")
+            out[f"{k}_peak"] = peak
+            hname, q = _QUANTILE_KEYS[k]
+            if merged_hists.get(hname) is not None:
+                out[k] = quantile_of_state(merged_hists[hname], q)
+            else:
+                out[k] = peak
+        elif k in _MERGE_MAX or k.startswith("peak_"):
             out[k] = max(v for v, _ in vals)
         elif k in _MERGE_WEIGHTED:
+            hstate = merged_hists.get(_MEAN_HIST_KEYS.get(k, ""))
+            if hstate is not None:
+                # exact fleet mean from the merged distribution
+                out[k] = hstate["total"] / hstate["n"]
+                continue
             wkey = _MERGE_WEIGHTED[k]
             pairs = [(v, s.get(wkey, 0.0)) for v, s in vals if not math.isnan(v)]
             wsum = sum(w for _, w in pairs)

@@ -69,7 +69,11 @@ from repro.models.config import ModelConfig
 from repro.serving.block_pool import prefix_route_key
 from repro.serving.config import EngineConfig
 from repro.serving.continuous import ContinuousEngine, ContinuousResult
-from repro.serving.metrics import merge_replica_summaries
+from repro.serving.metrics import (
+    merge_histogram_states,
+    merge_replica_summaries,
+    quantile_of_state,
+)
 from repro.serving.request import Request, RequestState
 from repro.serving.tracing import SpanTracer, merge_traces
 
@@ -287,8 +291,21 @@ class Router:
         summaries = [
             res.metrics if res is not None else {} for res in results
         ]
+        # pair each non-empty summary with its engine's retained histogram
+        # states: fleet quantiles then come from the *merged* distribution
+        # (bucket sums), not the per-replica max — see
+        # metrics.merge_replica_summaries
+        hists = [
+            (
+                eng.metrics.histogram_states()
+                if res is not None and eng.metrics is not None
+                else None
+            )
+            for eng, res in zip(self.engines, results, strict=True)
+        ]
         metrics = merge_replica_summaries(
-            [s for s in summaries if s]
+            [s for s in summaries if s],
+            histograms=[h for s, h in zip(summaries, hists) if s],
         )
         metrics["router_n_replicas"] = float(self.n_replicas)
         metrics["router_shed"] = float(len(shed))
@@ -303,6 +320,49 @@ class Router:
         )
 
     # -- observability -----------------------------------------------------
+
+    def merged_histogram_states(self) -> Dict[str, Optional[Dict[str, Any]]]:
+        """Fleet latency distributions: each replica's lifetime histogram
+        states merged bucket-wise (the ``replica="fleet"`` series on the
+        live ``/metrics`` exposition). Replicas that have not run yet
+        contribute nothing."""
+        per_replica = [
+            eng.metrics.histogram_states()
+            for eng in self.engines
+            if eng.metrics is not None
+        ]
+        names = sorted({n for h in per_replica for n in h})
+        return {
+            n: merge_histogram_states([h.get(n) for h in per_replica])
+            for n in names
+        }
+
+    def live_snapshot(self) -> Dict[str, Any]:
+        """Fleet-level live view: merged-distribution quantiles plus
+        summed lifetime counters — what the router's ``/metrics.json``
+        serves under ``"fleet"``. Pure read, callable mid-run."""
+        merged = self.merged_histogram_states()
+        out: Dict[str, Any] = {
+            "n_replicas": float(self.n_replicas),
+            "p50_ttft_s": quantile_of_state(merged.get("ttft_s"), 0.50),
+            "p95_ttft_s": quantile_of_state(merged.get("ttft_s"), 0.95),
+            "p99_ttft_s": quantile_of_state(merged.get("ttft_s"), 0.99),
+            "p95_tpot_s": quantile_of_state(merged.get("tpot_s"), 0.95),
+            "p95_latency_s": quantile_of_state(
+                merged.get("latency_s"), 0.95
+            ),
+        }
+        snaps = [
+            eng.metrics.live_snapshot()
+            for eng in self.engines
+            if eng.metrics is not None
+        ]
+        for key in (
+            "n_requests", "completed", "tokens_emitted",
+            "shed_requests", "expired_requests", "failed_requests",
+        ):
+            out[key] = float(sum(s.get(key) or 0 for s in snaps))
+        return out
 
     def trace_dict(self) -> Dict[str, Any]:
         """The fleet's merged Chrome trace (one pid per replica)."""

@@ -1,0 +1,104 @@
+"""SLO monitoring: rolling-window error-budget burn feeding the ladder.
+
+An SLO here is "at most 5% of requests may miss the target" — e.g. a p95
+TTFT target of 200 ms means the slowest 5% are the error budget. Over the
+engine's rolling window (``ObservabilityConfig.window_s``) the monitor
+measures the fraction of samples actually missing each target and divides
+by the 5% budget: that ratio is the **burn rate**, the standard SRE
+signal. Burn 1.0 means the service is exactly on target (spending budget
+as fast as it accrues); burn 2.0 means a sustained breach that will
+exhaust the budget in half the window; burn 0 means no misses.
+
+Three targets are monitored, each optional (0 = unmonitored):
+
+* ``slo_ttft_p95_s``  — p95 time-to-first-token,
+* ``slo_tpot_p95_s``  — p95 time-per-output-token,
+* ``slo_shed_rate``   — shed requests per arrival (budget = the target
+  itself: shedding *at* the configured rate is burn 1.0).
+
+``pressure()`` sums the burns (capped at ``slo_pressure_cap``) and is
+registered as an additional pressure source on the engine's
+``DegradationLadder`` — so a *measured* SLO breach walks the ladder even
+when queue backlog alone wouldn't, and the ladder's enter/exit hysteresis
+applies unchanged because burn is continuous in the underlying miss
+fraction. The monitor only reads the rolling-window instruments the
+metrics facade already maintains: no new clocks, no device syncs, and a
+disabled monitor (no targets) is never constructed.
+
+Burn gauges land in the registry (``slo_burn_ttft`` / ``slo_burn_tpot`` /
+``slo_burn_shed`` / ``slo_pressure``) so the live exporter serves them,
+and rounds with any breach count into ``slo_breach_rounds``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.serving.config import ObservabilityConfig
+from repro.serving.metrics import ServingMetrics
+
+# an SLO target of the p95 flavour leaves 5% of requests as error budget
+P95_BUDGET = 0.05
+
+
+class SloMonitor:
+    """Rolling-window burn-rate tracker over a ``ServingMetrics``."""
+
+    def __init__(self, obs: ObservabilityConfig, metrics: ServingMetrics):
+        if not obs.slo_active:
+            raise ValueError(
+                "SloMonitor needs at least one SLO target "
+                "(slo_ttft_p95_s / slo_tpot_p95_s / slo_shed_rate)"
+            )
+        self.obs = obs
+        self.metrics = metrics
+        r = metrics.registry
+        self._g_ttft = r.gauge("slo_burn_ttft")
+        self._g_tpot = r.gauge("slo_burn_tpot")
+        self._g_shed = r.gauge("slo_burn_shed")
+        self._g_pressure = r.gauge("slo_pressure")
+        self._breach_rounds = r.counter("slo_breach_rounds")
+        self._pressure = 0.0
+
+    # -- burn computation --------------------------------------------------
+
+    def burns(self, now: Optional[float] = None) -> Dict[str, float]:
+        """Per-target burn rates over the rolling window ending at
+        ``now`` (engine clock). Pure read."""
+        m, obs = self.metrics, self.obs
+        out = {}
+        if obs.slo_ttft_p95_s:
+            miss = m._w_ttft.fraction_above(obs.slo_ttft_p95_s, now)
+            out["ttft"] = miss / P95_BUDGET
+        if obs.slo_tpot_p95_s:
+            miss = m._w_tpot.fraction_above(obs.slo_tpot_p95_s, now)
+            out["tpot"] = miss / P95_BUDGET
+        if obs.slo_shed_rate:
+            arrivals = m._w_arrivals.total(now)
+            shed = m._w_shed.total(now)
+            rate = shed / arrivals if arrivals else 0.0
+            out["shed"] = rate / obs.slo_shed_rate
+        return out
+
+    def update(self, now: float) -> float:
+        """Recompute burns at engine time ``now``, record the gauges,
+        and cache the ladder pressure for ``pressure()``. The engine
+        calls this once per serve-loop round, before the ladder update."""
+        burns = self.burns(now)
+        total = min(sum(burns.values()), self.obs.slo_pressure_cap)
+        self._pressure = total
+        if "ttft" in burns:
+            self._g_ttft.set(burns["ttft"], now)
+        if "tpot" in burns:
+            self._g_tpot.set(burns["tpot"], now)
+        if "shed" in burns:
+            self._g_shed.set(burns["shed"], now)
+        self._g_pressure.set(total, now)
+        if any(b >= 1.0 for b in burns.values()):
+            self._breach_rounds.inc()
+        return total
+
+    def pressure(self) -> float:
+        """The last ``update``'s capped burn total — registered on the
+        ``DegradationLadder`` as an additional pressure source."""
+        return self._pressure

@@ -176,6 +176,105 @@ class SpanTracer:
         return len(self._buf)
 
 
+class FlightRecorder:
+    """Per-request lifecycle event ring for postmortem bundles.
+
+    Where ``SpanTracer`` keeps one engine-wide ring (good for timelines,
+    bad for answering "what happened to request 17?" after eviction),
+    the flight recorder keeps a *per-request* bounded ring of lifecycle
+    events — submit, admit, first token, preemption, growth, fault,
+    degradation transitions, terminal state — so a request that dies can
+    be dumped as a self-contained postmortem no matter how much traffic
+    followed it. Memory stays bounded two ways: each request holds at
+    most ``events_per_request`` events (oldest evicted, counted as
+    dropped), and at most ``max_requests`` requests are tracked at once
+    (least-recently-touched evicted first). The engine discards a
+    request's ring once it finishes cleanly, so steady state tracks only
+    in-flight requests.
+
+    Recording is one deque append; nothing is formatted until
+    ``bundle`` builds the postmortem dict (only on FAILED / EXPIRED /
+    ABORTED terminals).
+    """
+
+    def __init__(self, events_per_request: int = 64, max_requests: int = 256):
+        if events_per_request < 1:
+            raise ValueError("events_per_request must be >= 1")
+        if max_requests < 1:
+            raise ValueError("max_requests must be >= 1")
+        self.events_per_request = events_per_request
+        self.max_requests = max_requests
+        # rid -> deque[(t, event, detail)]; insertion order == recency
+        # (moved to end on every record), so eviction pops the front
+        self._rings: Dict[int, Deque[Tuple[float, str, Dict[str, Any]]]] = {}
+        self._recorded: Dict[int, int] = {}  # rid -> total events recorded
+        self.evicted_requests = 0  # rids dropped to honour max_requests
+
+    def record(self, rid: int, t: float, event: str, **detail: Any) -> None:
+        ring = self._rings.get(rid)
+        if ring is None:
+            while len(self._rings) >= self.max_requests:
+                old = next(iter(self._rings))
+                del self._rings[old]
+                self._recorded.pop(old, None)
+                self.evicted_requests += 1
+            ring = deque(maxlen=self.events_per_request)
+            self._rings[rid] = ring
+            self._recorded[rid] = 0
+        else:
+            # move-to-end keeps eviction least-recently-touched-first
+            self._rings[rid] = self._rings.pop(rid)
+        ring.append((t, event, detail))
+        self._recorded[rid] += 1
+
+    def events(self, rid: int) -> List[Dict[str, Any]]:
+        """The retained events for ``rid``, oldest first."""
+        out = []
+        for t, event, detail in self._rings.get(rid, ()):
+            ev = {"t": round(t, 6), "event": event}
+            if detail:
+                ev.update(detail)
+            out.append(ev)
+        return out
+
+    def dropped(self, rid: int) -> int:
+        """Events evicted from ``rid``'s ring (oldest-first)."""
+        return self._recorded.get(rid, 0) - len(self._rings.get(rid, ()))
+
+    def discard(self, rid: int) -> None:
+        """Forget a request (called on clean finish)."""
+        self._rings.pop(rid, None)
+        self._recorded.pop(rid, None)
+
+    def tracked(self) -> int:
+        return len(self._rings)
+
+    def bundle(
+        self, req: Any, context: Optional[Dict[str, Any]] = None
+    ) -> Dict[str, Any]:
+        """Self-contained postmortem dict for a terminal request: its
+        identity and final state, the retained event timeline, and the
+        engine context (degradation level, fault summary, ...) at the
+        time of death."""
+        rid = req.rid
+        state = getattr(req, "state", None)
+        return {
+            "rid": rid,
+            "state": getattr(state, "name", str(state)),
+            "error": getattr(req, "error", None),
+            "arrival": getattr(req, "arrival", None),
+            "deadline": getattr(req, "deadline", None),
+            "prompt_len": len(getattr(req, "prompt", ()) or ()),
+            "max_new_tokens": getattr(req, "max_new_tokens", None),
+            "n_preemptions": getattr(req, "n_preemptions", 0),
+            "tokens_emitted": len(getattr(req, "output_tokens", ()) or ()),
+            "events": self.events(rid),
+            "events_recorded": self._recorded.get(rid, 0),
+            "events_dropped": self.dropped(rid),
+            "context": dict(context or {}),
+        }
+
+
 def merge_traces(tracers: Sequence["SpanTracer"]) -> Dict[str, Any]:
     """Fold several tracers' buffers into one Chrome trace dict. Each
     tracer carries its own ``pid`` (the Router gives replica ``i``

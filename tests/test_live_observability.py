@@ -1,0 +1,752 @@
+"""Live observability plane: rolling-window instruments, Prometheus
+export, SLO monitors driving the degradation ladder, and the per-request
+flight recorder.
+
+Four layers, mirroring docs/observability.md §Live plane:
+
+* host-only units — ``WindowedHistogram``/``WindowedRate`` ring
+  semantics (quantiles within one bucket width of the exact order
+  statistic, sub-window expiry), the Prometheus text exposition checked
+  by a small strict parser, ``SloMonitor`` burn math, the ladder's
+  pressure-source hook with hysteresis, the flight recorder's bounded
+  rings, and ``SnapshotWriter`` crash-safe flushes;
+* engine integration — a TTFT-SLO breach with zero queue backlog walks
+  the ladder and recovers under a deterministic ``StepClock``; a chaos
+  run dumps postmortem bundles for its terminal requests;
+* HTTP endpoints — ``/metrics`` / ``/metrics.json`` / ``/healthz``
+  served from a live registry over a real (ephemeral-port) socket;
+* fleet — a two-replica router's quantiles equal the single merged-
+  histogram computation, never the per-replica max.
+"""
+
+import dataclasses
+import json
+import math
+import os
+import re
+import time
+import urllib.request
+
+import jax
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import (
+    ContinuousEngine,
+    DegradationLadder,
+    EngineConfig,
+    EngineLiveSource,
+    FaultPlan,
+    FaultSpec,
+    FlightRecorder,
+    GuardConfig,
+    MetricsServer,
+    ObservabilityConfig,
+    PagingConfig,
+    Request,
+    RequestState,
+    Router,
+    RouterLiveSource,
+    ServingMetrics,
+    SloMonitor,
+    SnapshotWriter,
+    WindowedHistogram,
+    WindowedRate,
+    atomic_write_json,
+    merge_histogram_states,
+    merge_replica_summaries,
+    quantile_of_state,
+    render_prometheus,
+)
+from repro.serving.export import parse_listen, registry_rows
+from repro.serving.metrics import Histogram
+from repro.serving.slo import P95_BUDGET
+
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("slim-tiny")
+    cfg = dataclasses.replace(
+        cfg, n_layers=2, d_model=128, d_ff=384, vocab_size=256
+    )
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, n, plen=8, max_new=8, seed=7):
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed), (n, plen), 0, cfg.vocab_size
+    )
+    return [
+        Request(
+            rid=i,
+            prompt=[int(t) for t in prompts[i]],
+            arrival=0.0,
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+class StepClock:
+    """Deterministic virtual clock (see tests/test_robustness.py)."""
+
+    def __init__(self, tick=1e-4):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+    def sleep(self, s):
+        self.t += s
+
+
+# ---------------------------------------------------------------------------
+# WindowedHistogram / WindowedRate: ring semantics
+# ---------------------------------------------------------------------------
+
+BOUNDS = (0.1, 0.5, 1.0, 2.0, 5.0)
+
+
+class TestWindowedHistogram:
+    @settings(max_examples=30)
+    @given(
+        st.integers(1, 60),
+        st.integers(0, 10_000),
+        st.sampled_from([0.5, 0.9, 0.95, 0.99]),
+    )
+    def test_quantile_within_one_bucket_of_exact(self, n, seed, q):
+        """The bucket-interpolated quantile lands inside the bucket that
+        contains the exact order statistic — never further than one
+        bucket width away."""
+        import random
+
+        rng = random.Random(seed)
+        xs = [rng.uniform(0.0, 8.0) for _ in range(n)]
+        wh = WindowedHistogram("w", window=10.0, n_sub=5, boundaries=BOUNDS)
+        for x in xs:
+            wh.observe(x, 0.5)
+        xs.sort()
+        rank = min(n - 1, max(0, math.ceil(q * n) - 1))
+        exact = xs[rank]
+        est = wh.quantile(q, now=0.5)
+        # the bucket interval containing the exact order statistic,
+        # clamped to the observed min/max like the estimator itself
+        import bisect
+
+        i = bisect.bisect_left(BOUNDS, exact)
+        lo = BOUNDS[i - 1] if i > 0 else xs[0]
+        hi = BOUNDS[i] if i < len(BOUNDS) else xs[-1]
+        lo, hi = max(lo, xs[0]), min(max(hi, lo), xs[-1])
+        assert lo - 1e-9 <= est <= hi + 1e-9, (est, exact, lo, hi)
+
+    def test_expiry_drops_old_subwindows(self):
+        wh = WindowedHistogram("w", window=10.0, n_sub=5, boundaries=BOUNDS)
+        wh.observe(3.0, 1.0)  # epoch 0
+        wh.observe(0.3, 9.0)  # epoch 4
+        assert wh.count(now=9.0) == 2
+        # at now=12 the live epochs are [2, 6]: the t=1 sample is gone
+        assert wh.count(now=12.0) == 1
+        assert wh.quantile(0.5, now=12.0) == pytest.approx(0.3)
+        # the whole window expires eventually
+        assert wh.count(now=40.0) == 0
+        assert math.isnan(wh.quantile(0.5, now=40.0))
+
+    def test_stale_sample_cannot_corrupt_newer_subwindow(self):
+        wh = WindowedHistogram("w", window=10.0, n_sub=5, boundaries=BOUNDS)
+        wh.observe(1.0, 25.0)  # epoch 12 -> slot 2
+        # an ancient timestamp mapping to the same ring slot must be
+        # dropped, not folded into the newer sub-window
+        wh.observe(1.0, 5.0)  # epoch 2 -> slot 2, older: ignored
+        assert wh.count(now=25.0) == 1
+
+    def test_fraction_above(self):
+        wh = WindowedHistogram("w", window=10.0, n_sub=5, boundaries=BOUNDS)
+        for _ in range(3):
+            wh.observe(1.5, 1.0)  # bucket (1.0, 2.0]
+        for _ in range(7):
+            wh.observe(0.05, 1.0)  # bucket (-inf, 0.1]
+        # threshold on a bucket boundary: no interpolation ambiguity
+        assert wh.fraction_above(1.0, now=1.0) == pytest.approx(0.3)
+        assert wh.fraction_above(10.0, now=1.0) == pytest.approx(0.0)
+
+    def test_reads_do_not_mutate(self):
+        wh = WindowedHistogram("w", window=10.0, n_sub=5, boundaries=BOUNDS)
+        wh.observe(1.0, 1.0)
+        # evaluating far in the future must not clear the ring: a later
+        # read at the true engine time still sees the sample
+        assert wh.count(now=1000.0) == 0
+        assert wh.count(now=1.0) == 1
+
+
+class TestWindowedRate:
+    def test_rate_over_window(self):
+        wr = WindowedRate("r", window=10.0, n_sub=5)
+        for t in (0.5, 1.5, 2.5, 3.5):
+            wr.add(5, t)
+        assert wr.total(now=4.0) == pytest.approx(20.0)
+        # early in the run the denominator is elapsed time, not the full
+        # window — a 4s-old run is not diluted to a 10s average
+        assert wr.rate(now=4.0) == pytest.approx(20.0 / 4.0)
+
+    def test_expiry(self):
+        wr = WindowedRate("r", window=10.0, n_sub=5)
+        wr.add(100, 1.0)
+        wr.add(10, 11.0)
+        assert wr.total(now=11.0) == pytest.approx(10.0)
+        assert wr.total(now=30.0) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition: strict conformance parser
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>\S+)$"
+)
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus(text):
+    """Strict parse of the 0.0.4 text exposition: returns
+    ``(families, samples)`` and raises AssertionError on any violation —
+    unknown line shape, sample without a TYPE, duplicate TYPE, histogram
+    whose cumulative buckets decrease or whose +Inf != _count."""
+    families = {}
+    samples = []
+    for line in text.splitlines():
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            assert len(parts) == 4, f"bad TYPE line: {line!r}"
+            name, kind = parts[2], parts[3]
+            assert kind in ("counter", "gauge", "histogram", "summary")
+            assert name not in families, f"duplicate TYPE for {name}"
+            families[name] = kind
+            continue
+        assert not line.startswith("#"), f"unexpected comment: {line!r}"
+        m = _SAMPLE_RE.match(line)
+        assert m, f"unparseable sample line: {line!r}"
+        labels = dict(_LABEL_RE.findall(m.group("labels") or ""))
+        value = float(m.group("value").replace("+Inf", "inf"))
+        samples.append((m.group("name"), labels, value))
+    # every sample must belong to a declared family
+    for name, labels, _ in samples:
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[: -len(suffix)] in families:
+                base = name[: -len(suffix)]
+                break
+        assert base in families, f"sample {name} has no TYPE"
+    # histogram invariants, per label-set series
+    for fam, kind in families.items():
+        if kind != "histogram":
+            continue
+        series = {}
+        for name, labels, value in samples:
+            if name == f"{fam}_bucket":
+                key = tuple(
+                    sorted((k, v) for k, v in labels.items() if k != "le")
+                )
+                series.setdefault(key, []).append(
+                    (float(labels["le"].replace("+Inf", "inf")), value)
+                )
+        counts = {
+            tuple(sorted(labels.items())): value
+            for name, labels, value in samples
+            if name == f"{fam}_count"
+        }
+        for key, buckets in series.items():
+            buckets.sort()
+            les = [le for le, _ in buckets]
+            assert les == sorted(set(les)), f"{fam}: dup/unsorted le"
+            assert les[-1] == math.inf, f"{fam}: no +Inf bucket"
+            cums = [c for _, c in buckets]
+            assert cums == sorted(cums), f"{fam}: non-cumulative buckets"
+            assert cums[-1] == counts[key], f"{fam}: +Inf != _count"
+    return families, samples
+
+
+class TestPrometheusExposition:
+    def test_registry_renders_conformant(self):
+        m = ServingMetrics(4, window=10.0, window_subs=5)
+        m.on_submit(1, 0.0)
+        m.on_admit(1, 0.05)
+        m.on_first_token(1, 0.3)
+        m.on_finish(1, 1.2, 8)
+        m.on_tokens(8, 1.2)
+        m.on_fault("nan_logits", 0.5)
+        text = render_prometheus(registry_rows(m.registry, now=1.2))
+        families, samples = parse_prometheus(text)
+        assert families["repro_ttft_s"] == "histogram"
+        assert families["repro_window_ttft_s"] == "histogram"
+        assert families["repro_fault_fired"] == "counter"
+        assert families["repro_window_tokens_per_s"] == "gauge"
+        by_name = {(n, tuple(sorted(l.items()))): v for n, l, v in samples}
+        assert by_name[("repro_fault_fired", (("site", "nan_logits"),))] == 1
+        assert by_name[("repro_tokens_emitted", ())] == 8
+
+    def test_label_escaping(self):
+        m = ServingMetrics(2)
+        m.on_fault('we"ird\\site\n', 0.0)
+        text = render_prometheus(registry_rows(m.registry))
+        _, samples = parse_prometheus(text)
+        assert any(n == "repro_fault_fired" for n, _, _ in samples)
+        assert '\\"' in text and "\\n" in text
+
+    def test_type_conflict_raises(self):
+        rows = [
+            ("x", "counter", {}, {"value": 1.0}),
+            ("x", "gauge", {}, {"value": 2.0}),
+        ]
+        with pytest.raises(ValueError, match="both"):
+            render_prometheus(rows)
+
+
+# ---------------------------------------------------------------------------
+# SloMonitor: burn math + ladder pressure with hysteresis
+# ---------------------------------------------------------------------------
+
+
+def _obs(**kw):
+    kw.setdefault("window_s", 10.0)
+    kw.setdefault("window_subs", 5)
+    return ObservabilityConfig(**kw)
+
+
+class TestSloMonitor:
+    def test_needs_a_target(self):
+        with pytest.raises(ValueError, match="target"):
+            SloMonitor(_obs(), ServingMetrics(2))
+
+    def test_ttft_burn_is_miss_fraction_over_budget(self):
+        m = ServingMetrics(2, window=10.0, window_subs=5)
+        slo = SloMonitor(_obs(slo_ttft_p95_s=0.5), m)
+        # 1 of 10 requests misses the 0.5s target (sample at 1.0s falls
+        # entirely above the 0.5 bucket boundary: exact fraction)
+        for i in range(9):
+            m.on_submit(i, 0.0)
+            m.on_first_token(i, 0.05)
+        m.on_submit(9, 0.0)
+        m.on_first_token(9, 1.0)
+        burns = slo.burns(now=1.0)
+        assert burns["ttft"] == pytest.approx(0.1 / P95_BUDGET)
+
+    def test_shed_burn_and_cap(self):
+        m = ServingMetrics(2, window=10.0, window_subs=5)
+        slo = SloMonitor(
+            _obs(slo_shed_rate=0.01, slo_pressure_cap=4.0), m
+        )
+        for i in range(10):
+            m.on_submit(i, 1.0)
+        for i in range(5):
+            m.on_shed(i, 1.0)
+        # shed rate 0.5 against target 0.01 -> burn 50, capped at 4
+        assert slo.burns(now=1.0)["shed"] == pytest.approx(50.0)
+        assert slo.update(1.0) == pytest.approx(4.0)
+        assert slo.pressure() == pytest.approx(4.0)
+
+    def test_breach_walks_ladder_and_recovers_with_hysteresis(self):
+        """The acceptance trajectory, scripted: full breach -> L1;
+        partial breach inside the hysteresis band -> holds L1 (no flap
+        up or down); window expiry -> burn 0 -> back to L0."""
+        m = ServingMetrics(2, window=10.0, window_subs=5)
+        slo = SloMonitor(_obs(slo_ttft_p95_s=0.5), m)
+        ladder = DegradationLadder()
+        ladder.add_pressure_source(slo.pressure)
+        # phase A: 3 hard misses at t~1 -> miss fraction 1.0, burn
+        # capped at 4 -> the ladder walks up on backlog pressure 0
+        for i in range(3):
+            m.on_submit(i, 0.0)
+            m.on_first_token(i, 1.0)
+        slo.update(1.0)
+        assert ladder.update(0.0) == 1
+        # phase B: 96 fast requests at t~2 dilute the miss fraction to
+        # 3/99 -> burn ~0.61, inside the (exit=0.5, enter=1.0) band:
+        # the level holds, round after round
+        for i in range(3, 99):
+            m.on_submit(i, 1.95)
+            m.on_first_token(i, 2.0)
+        for _ in range(4):
+            slo.update(2.0)
+            assert ladder.update(0.0) == 1
+        assert slo.pressure() == pytest.approx((3 / 99) / P95_BUDGET)
+        # phase C: the window rolls past every sample -> burn 0 ->
+        # hysteresis exit -> full service restored
+        slo.update(30.0)
+        assert slo.pressure() == 0.0
+        assert ladder.update(0.0) == 0
+
+
+# ---------------------------------------------------------------------------
+# FlightRecorder: bounded rings + bundles
+# ---------------------------------------------------------------------------
+
+
+class TestFlightRecorder:
+    def test_per_request_ring_bounds_and_drop_count(self):
+        rec = FlightRecorder(events_per_request=4, max_requests=8)
+        for i in range(10):
+            rec.record(1, float(i), "tick", i=i)
+        evs = rec.events(1)
+        assert len(evs) == 4
+        assert [e["i"] for e in evs] == [6, 7, 8, 9]  # oldest evicted
+        assert rec.dropped(1) == 6
+
+    def test_lru_eviction_of_tracked_requests(self):
+        rec = FlightRecorder(events_per_request=4, max_requests=3)
+        for rid in (1, 2, 3):
+            rec.record(rid, 0.0, "submit")
+        rec.record(1, 1.0, "touch")  # 1 becomes most recent
+        rec.record(4, 2.0, "submit")  # evicts 2 (least recently touched)
+        assert rec.events(2) == []
+        assert rec.events(1) and rec.events(3) and rec.events(4)
+        assert rec.evicted_requests == 1
+
+    def test_bundle_shape(self):
+        rec = FlightRecorder(events_per_request=8)
+        req = Request(rid=7, prompt=[1, 2, 3], arrival=0.5, max_new_tokens=4)
+        req.state = RequestState.EXPIRED
+        req.error = "deadline"
+        rec.record(7, 0.5, "submit")
+        rec.record(7, 1.0, "expire", where="queued")
+        b = rec.bundle(req, {"degradation_level": 2})
+        assert b["rid"] == 7
+        assert b["state"] == "EXPIRED"
+        assert b["prompt_len"] == 3
+        assert [e["event"] for e in b["events"]] == ["submit", "expire"]
+        assert b["context"]["degradation_level"] == 2
+        json.dumps(b)  # must be JSON-serializable as-is
+        rec.discard(7)
+        assert rec.tracked() == 0
+
+
+# ---------------------------------------------------------------------------
+# Fleet merge: bucket-merged quantiles, not per-replica max
+# ---------------------------------------------------------------------------
+
+
+class TestFleetMerge:
+    def test_skewed_two_replica_p95_regression(self):
+        """Replica A: 19 fast requests. Replica B: 1 slow one. The fleet
+        p95 is fast (the slow request is the top 5%), but the old
+        max-of-p95 semantics said 1.0s. The merged key must say 0.01s
+        and the ``_peak`` key must keep the old answer."""
+        ha, hb = Histogram("ttft_s"), Histogram("ttft_s")
+        for _ in range(19):
+            ha.observe(0.01)
+        hb.observe(1.0)
+        sa = {"p95_ttft_s": 0.01, "n_requests": 19.0}
+        sb = {"p95_ttft_s": 1.0, "n_requests": 1.0}
+        merged = merge_replica_summaries(
+            [sa, sb],
+            histograms=[{"ttft_s": ha.state()}, {"ttft_s": hb.state()}],
+        )
+        assert merged["p95_ttft_s"] == pytest.approx(0.01)
+        assert merged["p95_ttft_s_peak"] == pytest.approx(1.0)
+        assert merged["n_requests"] == pytest.approx(20.0)
+
+    def test_without_histograms_falls_back_to_peak(self):
+        merged = merge_replica_summaries(
+            [{"p95_ttft_s": 0.01}, {"p95_ttft_s": 1.0}]
+        )
+        assert merged["p95_ttft_s"] == pytest.approx(1.0)
+        assert merged["p95_ttft_s_peak"] == pytest.approx(1.0)
+
+    def test_merge_histogram_states_sums_buckets(self):
+        ha, hb = Histogram("h"), Histogram("h")
+        for _ in range(3):
+            ha.observe(0.01)
+        hb.observe(1.0)
+        st_m = merge_histogram_states([ha.state(), hb.state()])
+        assert st_m["n"] == 4
+        assert st_m["min"] == pytest.approx(0.01)
+        assert st_m["max"] == pytest.approx(1.0)
+        assert sum(st_m["counts"]) == 4
+        assert quantile_of_state(st_m, 0.5) == pytest.approx(0.01)
+
+    def test_boundary_mismatch_raises(self):
+        ha = Histogram("h", boundaries=(0.1, 1.0))
+        hb = Histogram("h", boundaries=(0.2, 2.0))
+        ha.observe(0.05)
+        hb.observe(0.05)
+        with pytest.raises(ValueError, match="boundaries"):
+            merge_histogram_states([ha.state(), hb.state()])
+
+
+# ---------------------------------------------------------------------------
+# SnapshotWriter + atomic_write_json: crash-safe snapshots
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshots:
+    def test_atomic_write_leaves_no_temp_files(self, tmp_path):
+        path = tmp_path / "snap.json"
+        atomic_write_json(str(path), {"a": 1})
+        assert json.loads(path.read_text()) == {"a": 1}
+        assert os.listdir(tmp_path) == ["snap.json"]
+
+    def test_periodic_flush_and_final_payload(self, tmp_path):
+        path = tmp_path / "live.json"
+        ticks = []
+
+        def payload():
+            ticks.append(1)
+            return {"ticks": len(ticks)}
+
+        w = SnapshotWriter(str(path), payload, interval=0.02).start()
+        deadline = time.time() + 2.0
+        while not path.exists() and time.time() < deadline:
+            time.sleep(0.01)
+        assert path.exists(), "no flush within 2s"
+        assert json.loads(path.read_text())["ticks"] >= 1
+        w.stop(final_payload={"final": True})
+        assert json.loads(path.read_text()) == {"final": True}
+        assert w.flushes >= 1
+
+    def test_payload_exception_does_not_kill_writer(self, tmp_path):
+        path = tmp_path / "live.json"
+        calls = []
+
+        def payload():
+            calls.append(1)
+            if len(calls) == 1:
+                raise RuntimeError("transient")
+            return {"ok": True}
+
+        w = SnapshotWriter(str(path), payload, interval=0.02).start()
+        deadline = time.time() + 2.0
+        while not path.exists() and time.time() < deadline:
+            time.sleep(0.01)
+        w.stop()
+        assert json.loads(path.read_text())["ok"] is True
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoints over a live registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetricsServer:
+    def test_parse_listen(self):
+        assert parse_listen(":9100") == ("127.0.0.1", 9100)
+        assert parse_listen("0.0.0.0:9100") == ("0.0.0.0", 9100)
+        assert parse_listen("9100") == ("127.0.0.1", 9100)
+        with pytest.raises(ValueError):
+            parse_listen("nope")
+
+    def test_endpoints(self):
+        m = ServingMetrics(2, window=10.0, window_subs=5)
+        m.on_submit(1, 0.0)
+        m.on_first_token(1, 0.2)
+
+        class Src:
+            def prometheus(self):
+                return render_prometheus(registry_rows(m.registry, now=0.2))
+
+            def snapshot_json(self):
+                return {"live": m.live_snapshot(0.2)}
+
+            def health(self):
+                return {"status": "serving", "degradation_level": 0}
+
+        srv = MetricsServer(Src(), port=0).start()
+        try:
+            body = urllib.request.urlopen(srv.url + "/metrics").read()
+            parse_prometheus(body.decode())
+            js = json.loads(
+                urllib.request.urlopen(srv.url + "/metrics.json").read()
+            )
+            assert js["live"]["window_ttft_n"] == 1
+            hz = json.loads(
+                urllib.request.urlopen(srv.url + "/healthz").read()
+            )
+            assert hz["status"] == "serving"
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(srv.url + "/nope")
+        finally:
+            srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: SLO-driven ladder walk + chaos postmortems
+# ---------------------------------------------------------------------------
+
+
+def _config(**kw):
+    obs = kw.pop("observability", None)
+    guard = kw.pop("guard", None)
+    return EngineConfig(
+        n_slots=kw.pop("n_slots", 3),
+        max_len=MAX_LEN,
+        prefill_bucket=kw.pop("prefill_bucket", 8),
+        check_retrace=True,
+        paging=PagingConfig(block_size=8),
+        guard=guard if guard is not None else GuardConfig(degradation=True),
+        observability=obs if obs is not None else ObservabilityConfig(),
+        **kw,
+    )
+
+
+class TestEngineIntegration:
+    def test_slo_breach_walks_ladder_and_recovers(self, model):
+        """An induced TTFT-SLO breach with no queue backlog (2 requests
+        against 3 slots: backlog pressure stays under the enter
+        threshold, see the control test below) walks the ladder off
+        level 0 on SLO pressure alone, and the short rolling window
+        lets it recover to level 0 before the run ends — deterministic
+        under StepClock."""
+        cfg, params = model
+        clk = StepClock(tick=1e-3)
+        config = _config(
+            observability=ObservabilityConfig(
+                window_s=0.05,
+                window_subs=5,
+                slo_ttft_p95_s=1e-6,  # every TTFT breaches
+            ),
+        )
+        eng = ContinuousEngine(params, cfg, config, clock=clk)
+        res = eng.run(_requests(cfg, 2, max_new=24), sync_every=1)
+        m = res.metrics
+        assert m["jit_retraces"] == 0
+        # no backlog ever existed, yet the ladder walked
+        assert m["peak_queue_depth"] == 0
+        assert m["peak_degradation_level"] >= 1
+        # burns expired with the window -> hysteresis walk back down
+        assert eng.live_level == 0
+        assert m["degraded_rounds"] >= 1
+
+    def test_no_slo_no_walk(self, model):
+        """Same workload without SLO targets: the ladder never moves
+        (the walk above really was SLO pressure)."""
+        cfg, params = model
+        clk = StepClock(tick=1e-3)
+        eng = ContinuousEngine(params, cfg, _config(), clock=clk)
+        res = eng.run(_requests(cfg, 2, max_new=24), sync_every=1)
+        assert res.metrics["peak_degradation_level"] == 0
+
+    def test_chaos_postmortem_bundles(self, model, tmp_path):
+        """A quarantined (nan_logits) and an expired request each leave
+        a self-contained postmortem bundle on disk."""
+        cfg, params = model
+        clk = StepClock()
+        pm = tmp_path / "postmortems"
+        config = _config(
+            guard=GuardConfig(degradation=True, default_ttl=0.25),
+            observability=ObservabilityConfig(
+                postmortem_dir=str(pm), flight_recorder_events=16
+            ),
+        )
+        faults = FaultPlan([FaultSpec("nan_logits", nth=1)])
+        eng = ContinuousEngine(params, cfg, config, clock=clk, faults=faults)
+        reqs = _requests(cfg, 5, max_new=16)
+        res = eng.run(reqs, sync_every=2)
+        terminal = [
+            r
+            for r in res.requests
+            if r.state in (RequestState.FAILED, RequestState.EXPIRED)
+        ]
+        assert terminal, "chaos produced no terminal requests"
+        for r in terminal:
+            path = pm / f"postmortem_rid{r.rid}.json"
+            assert path.exists(), f"no bundle for rid {r.rid} ({r.state})"
+            b = json.loads(path.read_text())
+            assert b["rid"] == r.rid
+            assert b["state"] == r.state.name
+            events = [e["event"] for e in b["events"]]
+            assert events[0] == "submit"
+            if r.state is RequestState.FAILED:
+                assert "quarantine" in events
+            assert b["context"]["faults"]["fault_nan_logits"] == 1.0
+        # clean finishes leave no bundle and no tracked ring
+        finished = [
+            r for r in res.requests if r.state is RequestState.FINISHED
+        ]
+        for r in finished:
+            assert not (pm / f"postmortem_rid{r.rid}.json").exists()
+        assert eng.recorder.tracked() == 0
+
+    def test_live_endpoint_during_engine_lifetime(self, model):
+        """The exporter serves a conformant exposition against a real
+        engine registry, including windowed families, fleet health, and
+        the engine's live snapshot."""
+        cfg, params = model
+        eng = ContinuousEngine(params, cfg, _config())
+        srv = MetricsServer(EngineLiveSource(eng), port=0).start()
+        try:
+            # before the first run: empty exposition, idle health
+            hz = json.loads(
+                urllib.request.urlopen(srv.url + "/healthz").read()
+            )
+            assert hz["status"] == "idle"
+            eng.run(_requests(cfg, 4), sync_every=2)
+            body = urllib.request.urlopen(srv.url + "/metrics").read()
+            families, _ = parse_prometheus(body.decode())
+            assert "repro_window_ttft_s" in families
+            js = json.loads(
+                urllib.request.urlopen(srv.url + "/metrics.json").read()
+            )
+            assert js["live"]["completed"] == 4
+        finally:
+            srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# Fleet: router /metrics quantiles == single merged-histogram computation
+# ---------------------------------------------------------------------------
+
+
+class TestFleetEndpoint:
+    def test_two_replica_quantiles_match_merged_histogram(self, model):
+        cfg, params = model
+        router = Router(
+            params, cfg,
+            _config(guard=GuardConfig(degradation=True)),
+            n_replicas=2,
+        )
+        res = router.run(_requests(cfg, 6), sync_every=2)
+        states = [
+            eng.metrics.histogram_states()["ttft_s"]
+            for eng in router.engines
+        ]
+        merged = merge_histogram_states(states)
+        expect = quantile_of_state(merged, 0.95)
+        assert res.metrics["p95_ttft_s"] == pytest.approx(expect)
+        assert router.live_snapshot()["p95_ttft_s"] == pytest.approx(expect)
+        # and over HTTP: per-replica + fleet series, all conformant
+        srv = MetricsServer(RouterLiveSource(router), port=0).start()
+        try:
+            body = urllib.request.urlopen(srv.url + "/metrics").read()
+            families, samples = parse_prometheus(body.decode())
+            fleet_buckets = {
+                l["le"]: v
+                for n, l, v in samples
+                if n == "repro_ttft_s_bucket" and l.get("replica") == "fleet"
+            }
+            per_replica = [
+                {
+                    l["le"]: v
+                    for n, l, v in samples
+                    if n == "repro_ttft_s_bucket"
+                    and l.get("replica") == str(i)
+                }
+                for i in range(2)
+            ]
+            for le, v in fleet_buckets.items():
+                assert v == per_replica[0][le] + per_replica[1][le]
+            js = json.loads(
+                urllib.request.urlopen(srv.url + "/metrics.json").read()
+            )
+            assert js["fleet"]["p95_ttft_s"] == pytest.approx(expect)
+            assert set(js["replicas"]) == {"0", "1"}
+        finally:
+            srv.stop()
